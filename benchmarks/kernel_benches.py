@@ -1,0 +1,121 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle, plus the
+jit'd-oracle throughput that the capacity planner actually uses on CPU.
+
+On-TPU the pallas_call path compiles to MXU/VPU kernels; interpret mode
+timings here only validate plumbing overhead, so the `derived` column
+reports the problem size and the oracle GFLOP/s (the CPU-meaningful
+number)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = tuple[str, float, str]
+
+
+def _time(fn, *args, iters=3, warmup=1) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_commitment_sweep() -> list[Row]:
+    from repro.kernels.commitment_sweep.ops import (
+        commitment_sweep,
+        commitment_sweep_oracle,
+    )
+
+    rng = np.random.default_rng(0)
+    p, t, g = 32, 24 * 365, 128  # 32 pools x 1y hourly x 128 candidates
+    f = jnp.asarray(rng.gamma(2, 50, (p, t)).astype(np.float32))
+    cs = jnp.linspace(float(f.min()), float(f.max()), g)
+
+    oracle = jax.jit(lambda f_, c_: commitment_sweep_oracle(f_, c_))
+    us_oracle = _time(oracle, f, cs)
+    flops = 4.0 * p * t * g  # sub, 2x hinge, fma-accumulate
+    rows = [
+        (
+            "kernel_commitment_sweep_oracle",
+            us_oracle,
+            f"{p}x{t}x{g} {flops / us_oracle / 1e3:.1f} GFLOP/s",
+        )
+    ]
+    us_kernel = _time(
+        lambda f_, c_: commitment_sweep(f_, c_, interpret=True),
+        f[:4], cs, iters=1, warmup=1,
+    )
+    rows.append(
+        ("kernel_commitment_sweep_interpret", us_kernel,
+         "pallas interpret-mode validation path")
+    )
+    return rows
+
+
+def bench_flash_attention() -> list[Row]:
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    rng = np.random.default_rng(1)
+    b, hq, hkv, s, d = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+
+    ref = jax.jit(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=True))
+    us_ref = _time(ref, q, k, v)
+    flops = 4.0 * b * hq * s * s * d
+    rows = [
+        ("kernel_flash_attention_oracle", us_ref,
+         f"b{b} h{hq}/{hkv} s{s} d{d} {flops / us_ref / 1e3:.1f} GFLOP/s"),
+    ]
+    us_k = _time(
+        lambda q_, k_, v_: flash_attention(q_, k_, v_, causal=True,
+                                           interpret=True),
+        q[:, :, :256], k[:, :, :256], v[:, :, :256], iters=1, warmup=1,
+    )
+    rows.append(("kernel_flash_attention_interpret", us_k,
+                 "pallas interpret-mode validation path"))
+    return rows
+
+
+def bench_linrec() -> list[Row]:
+    from repro.kernels.linrec.ops import rwkv6_linear_attention, rwkv6_oracle
+
+    rng = np.random.default_rng(2)
+    b, h, t, d = 2, 8, 512, 64
+    r = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1.0, (b, h, t, d)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+
+    oracle = jax.jit(lambda *a: rwkv6_oracle(*a)[0])
+    us_o = _time(oracle, r, k, v, w, u)
+    rows = [
+        ("kernel_linrec_oracle_scan", us_o,
+         f"b{b} h{h} t{t} d{d} sequential lax.scan"),
+    ]
+    us_k = _time(
+        lambda *a: rwkv6_linear_attention(*a, chunk=32, interpret=True)[0],
+        r[:1, :2, :64], k[:1, :2, :64], v[:1, :2, :64], w[:1, :2, :64], u[:2],
+        iters=1, warmup=1,
+    )
+    rows.append(("kernel_linrec_interpret", us_k,
+                 "pallas interpret-mode validation path"))
+    return rows
+
+
+ALL_KERNEL_BENCHES = [
+    bench_commitment_sweep,
+    bench_flash_attention,
+    bench_linrec,
+]

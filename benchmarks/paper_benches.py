@@ -1,0 +1,220 @@
+"""One benchmark per paper table/figure.  Each function returns CSV rows
+(name, us_per_call, derived) where `derived` is the headline number the
+paper's table/figure reports."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import commitment as cm
+from repro.core import demand as dm
+from repro.core import forecast as fc
+from repro.core import freepool as fp
+from repro.core import ladder as ld
+from repro.core import planner as pl
+from repro.core import timeshift as ts
+from repro.core.demand import HOURS_PER_WEEK
+
+Row = tuple[str, float, str]
+
+
+def _time(fn, *args, iters=5, warmup=2) -> float:
+    """Wall time per call in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_demand_characterization() -> list[Row]:
+    """Paper §2.2 / Figs 2,5,7: dataset statistics of the calibrated trace."""
+    trace = dm.synth_demand(24 * 365 * 3, key=jax.random.PRNGKey(7))
+    us = _time(lambda t: dm.hourly_to_daily(t), trace)
+    stats = dm.characterize(np.asarray(trace))
+    return [
+        ("fig2_lag7_autocorr", us, f"{stats['lag7_daily_autocorr']:.3f}"),
+        ("fig2_weekly_peak_trough", us, f"{stats['weekly_ratio']:.2f}x"),
+        ("fig2_diurnal_peak_trough", us, f"{stats['diurnal_ratio']:.2f}x"),
+        ("fig5_neg_week_fraction", us, f"{stats['neg_week_fraction']:.2f}"),
+        ("fig2_3yr_growth", us, f"{stats['total_growth']:.1f}x"),
+    ]
+
+
+def bench_commitment_fig4() -> list[Row]:
+    """Paper Fig 4: 9 commitment scenarios over two weeks, A=2.1, B=1."""
+    f = dm.synth_demand(
+        24 * 14, dm.DemandConfig(annual_growth=0.0, noise_sigma=0.005),
+        key=jax.random.PRNGKey(1),
+    )
+    levels, costs, best = cm.scenario_costs(f, 9)
+    us = _time(lambda x: cm.scenario_costs(x, 9)[1], f)
+    exact = float(cm.optimal_commitment_quantile(f))
+    brent = cm.optimal_commitment_brent(np.asarray(f))
+    return [
+        ("fig4_best_scenario_of_9", us, f"scenario {int(best)+1}"),
+        ("fig4_exact_optimum_quantile", us,
+         f"c*={exact:.1f} (q=A/(A+B)={2.1/3.1:.3f})"),
+        ("fig4_brent_agreement", us,
+         f"|brent-exact| cost delta "
+         f"{abs(float(cm.commitment_cost(f, brent)) - float(cm.commitment_cost(f, exact))):.2f}"),
+    ]
+
+
+def bench_sensitivity_table3() -> list[Row]:
+    """Paper Table 3: cost delta per $1M when the commitment is computed
+    from a trend-blind forecast instead of actuals, by trend x update freq."""
+    rows: list[Row] = []
+    base = dm.synth_demand(
+        HOURS_PER_WEEK, dm.DemandConfig(annual_growth=0.0, noise_sigma=0.0)
+    )
+    t0 = time.perf_counter()
+    for update_weeks in (1, 2, 4, 8):
+        for trend in (0.10, 0.50, 1.00):
+            hours = update_weeks * HOURS_PER_WEEK
+            growth = (1.0 + trend) ** (
+                jnp.arange(hours, dtype=jnp.float32) / (24 * 365)
+            )
+            actual = jnp.tile(base, update_weeks) * growth
+            naive = jnp.tile(base, update_weeks)  # trend-blind forecast
+            c_actual = cm.optimal_commitment_quantile(actual)
+            c_naive = cm.optimal_commitment_quantile(naive)
+            cost_actual = float(cm.commitment_cost(actual, c_actual))
+            cost_naive = float(cm.commitment_cost(actual, c_naive))
+            delta_per_m = (cost_naive - cost_actual) / cost_actual * 1e6
+            rows.append((
+                f"table3_u{update_weeks}w_trend{int(trend*100)}",
+                0.0,
+                f"${delta_per_m:.2f} per $1M",
+            ))
+    us = (time.perf_counter() - t0) / len(rows) * 1e6
+    return [(n, us, d) for n, _, d in rows]
+
+
+def bench_planner_fig8() -> list[Row]:
+    """Paper Fig 8: 1-week vs 2-week forecast horizon commitment, evaluated
+    over the 2-week window containing a holiday dip."""
+    hist = dm.synth_demand(24 * 7 * 20, key=jax.random.PRNGKey(3))
+    res = pl.plan_commitment(hist, num_horizons=4)
+    base = dm.synth_demand(
+        HOURS_PER_WEEK * 2, dm.DemandConfig(annual_growth=0.0,
+                                            noise_sigma=0.0))
+    dip = jnp.concatenate([
+        jnp.ones(HOURS_PER_WEEK),
+        jnp.full((HOURS_PER_WEEK,), 0.88),  # holiday week: -12% demand
+    ])
+    yhat = base * dip
+    out = pl.compare_horizons(yhat, (1, 2))
+    us = _time(lambda h: pl.plan_commitment(h, num_horizons=4).forecast, hist,
+               iters=2, warmup=1)
+    return [
+        ("fig8_c_w1_level", us, f"{out[1]['level']:.1f}"),
+        ("fig8_c_w2_level", us, f"{out[2]['level']:.1f}"),
+        ("fig8_2wk_cheaper_by", us,
+         f"{(out[1]['total_spend'] - out[2]['total_spend']) / out[1]['total_spend'] * 100:.2f}%"),
+        ("alg1_cstar_min_over_horizons", us,
+         f"{res.commitment:.1f} (binding horizon w={res.argmin_horizon + 1})"),
+    ]
+
+
+def bench_ladder_fig9() -> list[Row]:
+    """Paper Fig 9: flat vs perfectly-laddered commitment over a 4-week
+    window with a year-end demand drop (paper: ~1.1% savings)."""
+    demand = np.asarray(dm.synth_demand(
+        HOURS_PER_WEEK * 4,
+        dm.DemandConfig(annual_growth=0.0, noise_sigma=0.0)))
+    demand = demand.copy()
+    demand[HOURS_PER_WEEK * 2: HOURS_PER_WEEK * 3] *= 0.92  # holiday week
+    t0 = time.perf_counter()
+    weekly = [
+        float(cm.optimal_commitment_quantile(jnp.asarray(
+            demand[w * HOURS_PER_WEEK:(w + 1) * HOURS_PER_WEEK])))
+        for w in range(4)
+    ]
+    out = ld.ladder_vs_flat(demand, np.array(weekly))
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("fig9_flat_vs_laddered_savings", us,
+         f"{out['savings_frac'] * 100:.2f}% (paper ~1.1%)"),
+    ]
+
+
+def bench_timeshift_sec4() -> list[Row]:
+    """Paper §4: unused-commitment trough supply and shiftable workloads."""
+    f = np.asarray(dm.synth_demand(24 * 7 * 52, key=jax.random.PRNGKey(4)))
+    c = float(cm.optimal_commitment_quantile(jnp.asarray(f)))
+    stats = ts.shiftable_supply_stats(f, c)
+    # schedule a 5%-of-total deferrable workload into the troughs
+    total_work = f.sum() * 0.05
+    jobs = [
+        ts.Job(arrival=int(h), work=float(total_work / 52),
+               deadline=int(h) + 24 * 7)
+        for h in np.linspace(0, len(f) - 24 * 7 - 1, 52)
+    ]
+    t0 = time.perf_counter()
+    out = ts.schedule_jobs(f, c, jobs)
+    us = (time.perf_counter() - t0) * 1e6
+    saved_frac = out["on_demand_savings"] / max(out["on_demand_cost_naive"],
+                                                1e-9)
+    return [
+        ("sec4_unused_commitment_frac", us,
+         f"{stats['unused_frac'] * 100:.1f}% (paper 4.3%)"),
+        ("sec4_weekend_trough_share", us,
+         f"{stats['weekend_share'] * 100:.0f}%"),
+        ("sec4_timeshift_od_cost_saved", us, f"{saved_frac * 100:.0f}%"),
+    ]
+
+
+def bench_freepool_fig12() -> list[Row]:
+    """Paper Fig 12: static vs predicted free pool on held-out demand."""
+    hist = dm.synth_demand(24 * 7 * 8, key=jax.random.PRNGKey(5))
+    fut = dm.synth_demand(24 * 7 * 9, key=jax.random.PRNGKey(5))[-24 * 7:]
+    cfg = fp.FreePoolConfig(p_over=1.0, p_under=10.0, lead_time=1)
+    us = _time(
+        lambda h: fp.predicted_pool(h, 24 * 7, cfg), hist, iters=3, warmup=1
+    )
+    out = fp.compare_static_vs_predicted(hist, fut, cfg)
+    return [
+        ("fig12_static_pool_cost", us, f"{out['static_cost']:.0f}"),
+        ("fig12_predicted_pool_cost", us, f"{out['predicted_cost']:.0f}"),
+        ("fig12_cost_reduction", us,
+         f"{(1 - out['predicted_cost'] / out['static_cost']) * 100:.0f}%"),
+        ("fig12_under_minutes_ratio", us,
+         f"{out['under_minutes_predicted'] / max(out['under_minutes_static'], 1e-9):.2f}"),
+    ]
+
+
+def bench_forecast_quality() -> list[Row]:
+    """§3.3.3: forecaster asymmetric-error metric on held-out data."""
+    full = dm.synth_demand(24 * 7 * 30, key=jax.random.PRNGKey(6))
+    hist, fut = full[: 24 * 7 * 26], full[24 * 7 * 26:]
+    model = fc.fit(hist)
+    us = _time(lambda h: fc._fit(h, fc.ForecastConfig(),
+                                 float(h.shape[0] - 1)), hist,
+               iters=3, warmup=1)
+    yhat = fc.forecast_horizon(model, hist.shape[0], fut.shape[0])
+    wmape = float(fc.weighted_mape(fut, yhat))
+    mape = float(jnp.abs((fut - yhat) / fut).mean())
+    return [
+        ("forecast_holdout_mape_4wk", us, f"{mape * 100:.1f}%"),
+        ("forecast_holdout_wmape_asym", us, f"{wmape * 100:.1f}%"),
+    ]
+
+
+ALL_PAPER_BENCHES = [
+    bench_demand_characterization,
+    bench_commitment_fig4,
+    bench_sensitivity_table3,
+    bench_planner_fig8,
+    bench_ladder_fig9,
+    bench_timeshift_sec4,
+    bench_freepool_fig12,
+    bench_forecast_quality,
+]

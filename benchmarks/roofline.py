@@ -1,0 +1,148 @@
+"""Roofline report generator: reads the dry-run JSON artifacts and emits the
+EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(dirpath: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _ms(x: float) -> str:
+    return f"{x * 1e3:.2f}"
+
+
+def _gb(x: float) -> str:
+    return f"{x / 1e9:.2f}"
+
+
+def whats_limiting(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    r = rec["roofline"]
+    dom = r["dominant"]
+    kind = rec["shape"].split("_")[0]
+    if dom == "compute":
+        if r["useful_ratio"] < 0.5:
+            return ("compute-bound with low useful ratio: cut remat/MoE-"
+                    "capacity waste (fewer recomputed FLOPs per step)")
+        return ("compute-bound near the useful limit: only faster kernels "
+                "(flash attention on MXU) or lower precision move it")
+    if dom == "memory":
+        if rec["shape"].startswith(("decode", "long")):
+            return ("memory-bound on KV-cache reads: shrink the cache "
+                    "(MLA/GQA compression, quantized KV) or raise batch to "
+                    "amortize weight reads")
+        return ("memory-bound on weight/activation traffic: increase "
+                "per-chip batch or fuse activations")
+    return ("collective-bound: overlap FSDP gathers with compute, shard "
+            "differently, or compress the payload (EF-int8)")
+
+
+def dry_run_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile | mem/dev (TPU-proj) | fits 16GB | collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("compile_ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{'multi' if r.get('multi_pod') else 'single'} | FAILED | — | — | — |"
+            )
+            continue
+        mesh = "x".join(str(d) for d in r["mesh"])
+        m = r["memory"]
+        counts = r["cost_full_module"]["collective_counts"]
+        coll = ", ".join(f"{k.split('-')[-1] if '-' in k else k}:{v}"
+                         for k, v in counts.items() if v)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | "
+            f"{r['compile_seconds']}s | "
+            f"{_gb(m['total_per_device_tpu_projected'])} GB | "
+            f"{'yes' if m['fits_16gb'] else 'NO'} | {coll or '-'} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant |"
+        " MODEL_FLOPs/HLO | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("compile_ok") or len(r.get("mesh", [])) != 2:
+            continue  # single-pod only for the roofline table
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(rf['compute_s'])} | "
+            f"{_ms(rf['memory_s'])} | {_ms(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {rf['useful_ratio']:.2f} | "
+            f"{whats_limiting(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def summary(recs: list[dict]) -> str:
+    ok = [r for r in recs if r.get("compile_ok")]
+    failed = [r for r in recs if not r.get("compile_ok")]
+    fits = [r for r in ok if r["memory"]["fits_16gb"]]
+    single = [r for r in ok if len(r.get("mesh", [])) == 2]
+    multi = [r for r in ok if len(r.get("mesh", [])) == 3]
+    by_dom: dict[str, int] = {}
+    for r in single:
+        by_dom[r["roofline"]["dominant"]] = (
+            by_dom.get(r["roofline"]["dominant"], 0) + 1
+        )
+    out = [
+        f"- cells compiled: {len(ok)} ({len(single)} single-pod, "
+        f"{len(multi)} multi-pod); failures: {len(failed)}",
+        f"- fits 16 GB/chip (TPU-projected): {len(fits)}/{len(ok)}",
+        f"- dominant terms (single-pod): {by_dom}",
+    ]
+    if failed:
+        out.append("- FAILED: " + ", ".join(
+            f"{r['arch']}x{r['shape']}" for r in failed))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--format", choices=("md", "csv"), default="md")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    if args.format == "csv":
+        print("name,us_per_call,derived")
+        for r in recs:
+            if not r.get("compile_ok"):
+                continue
+            rf = r["roofline"]
+            mesh = "x".join(str(d) for d in r["mesh"])
+            dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            print(f"roofline_{r['arch']}_{r['shape']}_{mesh},"
+                  f"{dom_s * 1e6:.1f},"
+                  f"{rf['dominant']}-bound useful={rf['useful_ratio']:.2f}")
+        return
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Dry-run matrix\n")
+    print(dry_run_table(recs))
+    print("\n## Roofline (single-pod 16x16, per step)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

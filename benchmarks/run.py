@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from the
+dry-run artifacts (see benchmarks/roofline.py and EXPERIMENTS.md §Roofline);
+this harness covers the paper-results reproduction and kernel throughputs.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
+    from benchmarks.paper_benches import ALL_PAPER_BENCHES
+
+    print("name,us_per_call,derived")
+    failures = []
+    for bench in ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((bench.__name__, repr(e)))
+            print(f"{bench.__name__},NaN,FAILED: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benches failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

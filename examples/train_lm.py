@@ -1,0 +1,85 @@
+"""End-to-end training driver: train an LM with the production loop —
+checkpointing, restart, straggler watchdog, deterministic data.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~20M params
+    PYTHONPATH=src python examples/train_lm.py --full          # ~110M params
+    PYTHONPATH=src python examples/train_lm.py --arch rwkv6-3b # any family
+
+The default config is sized for this CPU container; --full trains a ~110M
+stablelm-family model for 300 steps (the assignment's "100M for a few
+hundred steps" driver — expect ~1-2h on one CPU core; on real accelerators
+the same driver runs unchanged with a mesh + shardings).
+"""
+
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def small_cfg(arch: str):
+    return configs.reduced(arch)
+
+
+def full_cfg(arch: str):
+    """~110M-parameter member of the chosen family."""
+    base = configs.get(arch)
+    return dataclasses.replace(
+        base,
+        num_layers=8,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=min(base.num_kv_heads, 12),
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32_000,
+        max_seq=512,
+        **({"mrope_sections": (8, 12, 12)} if base.mrope_sections else {}),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    choices=sorted(configs.ARCHS))
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = full_cfg(args.arch) if args.full else small_cfg(args.arch)
+    model = build(cfg)
+    print(f"arch={args.arch} params={model.num_params() / 1e6:.1f}M")
+
+    steps = args.steps or (300 if args.full else 60)
+    seq = 256 if args.full else 64
+    batch = 8
+    data = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+    ))
+    trainer = Trainer(
+        model, data,
+        TrainerConfig(
+            total_steps=steps, ckpt_every=max(steps // 5, 10),
+            opt=AdamWConfig(lr=3e-3 if not args.full else 6e-4,
+                            warmup_steps=max(steps // 10, 5)),
+        ),
+        args.ckpt_dir,
+    )
+    start = trainer.init_or_restore()
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    losses = trainer.fit()
+    print(f"step {trainer.step}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if trainer.watchdog.flagged_steps:
+        print(f"straggler watchdog flagged steps: "
+              f"{trainer.watchdog.flagged_steps}")
+    print(f"checkpoints: {trainer.ckpt.all_steps()} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""CSP pricing and hardware-generation data (paper Tables 1-2), encoded as
+the data the capacity planner consumes."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SavingsPlan:
+    cloud: str
+    family: str
+    discount_1y: float
+    discount_3y: float
+
+
+# Paper Table 2: savings-plan discounts vs on-demand.
+SAVINGS_PLANS = [
+    SavingsPlan("aws", "C6i", 0.28, 0.52),
+    SavingsPlan("aws", "C7i", 0.28, 0.52),
+    SavingsPlan("aws", "C7GD", 0.28, 0.52),
+    SavingsPlan("aws", "M7GD", 0.27, 0.50),
+    SavingsPlan("azure", "Std_Dd_v4", 0.31, 0.54),
+    SavingsPlan("azure", "Std_Dpd_v5", 0.31, 0.54),
+    SavingsPlan("gcp", "N2-Standard", 0.37, 0.55),
+    SavingsPlan("gcp", "N4-Standard", 0.37, 0.55),
+]
+
+
+def mean_discount_3y() -> float:
+    return sum(p.discount_3y for p in SAVINGS_PLANS) / len(SAVINGS_PLANS)
+
+
+def on_demand_premium() -> float:
+    """On-demand price relative to committed price.  Paper §3.1: committed
+    = (1 - mean 3y discount) x on-demand => premium = 1/(1-d) ~= 2.1x."""
+    return 1.0 / (1.0 - mean_discount_3y())
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTransition:
+    date: str
+    cloud: str
+    old: str
+    new: str
+    latency_reduction: float  # median query-latency reduction
+
+
+# Paper Table 1: step-function performance gains.
+HARDWARE_TRANSITIONS = [
+    HardwareTransition("2022-05", "aws", "Graviton2", "Graviton3", 0.25),
+    HardwareTransition("2024-08", "aws", "Graviton3", "Graviton4", 0.30),
+    HardwareTransition("2022-09", "azure", "DPv5", "DPv6", 0.20),
+    HardwareTransition("2024-04", "gcp", "X86", "Axion", 0.50),
+]
+
+# Paper §2.4: software performance improvement (Snowflake Performance Index).
+SOFTWARE_EFFICIENCY_PER_YEAR = 0.12

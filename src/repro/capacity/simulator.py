@@ -1,0 +1,147 @@
+"""Fleet simulator: turns (training jobs + serving fleets) into chip-demand
+traces, then runs the paper's full §3 pipeline against them.
+
+This is where the Shaved Ice technique becomes a first-class framework
+feature: the training runtime reports chips-per-job, the serving runtime
+reports chips-per-replica x autoscaled replica counts, the simulator rolls
+them into an hourly chip-demand series, and the planner (core.planner)
+prices commitments for the fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import commitment as cm
+from repro.core import demand as dm
+from repro.core import planner as pl
+from repro.core import timeshift as ts
+from repro.capacity.pricing import on_demand_premium
+from repro.models.model import build
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingFleet:
+    """A served architecture: replicas autoscale with request demand."""
+
+    arch: str
+    chips_per_replica: int
+    tokens_per_sec_per_replica: float
+    base_requests_per_hour: float
+    demand_cfg: dm.DemandConfig = dataclasses.field(
+        default_factory=lambda: dm.DemandConfig(base_level=1.0)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainingJob:
+    """A scheduled training run: a block of chips for a window of hours."""
+
+    arch: str
+    chips: int
+    start_hour: int
+    duration_hours: int
+    deferrable: bool = False
+    deadline_slack_hours: int = 0
+
+
+def default_fleet() -> tuple[list[ServingFleet], list[TrainingJob]]:
+    """A fleet spanning the assigned architectures: chips-per-replica scales
+    with parameter count (bf16 weights + KV/state under ~12 GB/chip)."""
+    fleets = []
+    for arch in sorted(configs.ARCHS):
+        n = build(configs.get(arch)).num_params()
+        chips = max(1, int(np.ceil(n * 2 / (12 * 1024**3))))
+        fleets.append(ServingFleet(
+            arch=arch,
+            chips_per_replica=chips,
+            tokens_per_sec_per_replica=5e4 / chips,
+            base_requests_per_hour=50.0 * chips,
+        ))
+    jobs = [
+        TrainingJob("stablelm-1.6b", chips=64, start_hour=24 * 7,
+                    duration_hours=24 * 5),
+        TrainingJob("internlm2-20b", chips=256, start_hour=24 * 30,
+                    duration_hours=24 * 14),
+        TrainingJob("jamba-v0.1-52b", chips=512, start_hour=24 * 60,
+                    duration_hours=24 * 21),
+    ]
+    return fleets, jobs
+
+
+def fleet_chip_demand(
+    fleets: list[ServingFleet],
+    jobs: list[TrainingJob],
+    num_hours: int,
+    *,
+    seed: int = 0,
+) -> np.ndarray:
+    """Hourly total chip demand of the fleet."""
+    import jax
+
+    total = np.zeros(num_hours, np.float64)
+    for i, fl in enumerate(fleets):
+        req = np.asarray(dm.synth_demand(
+            num_hours, fl.demand_cfg, key=jax.random.PRNGKey(seed + i)
+        ))
+        req = req / req.mean() * fl.base_requests_per_hour
+        # replicas needed to serve the request rate (ceil'd, autoscaled)
+        replicas = np.ceil(req / 50.0)
+        total += replicas * fl.chips_per_replica
+    for job in jobs:
+        lo = min(job.start_hour, num_hours)
+        hi = min(job.start_hour + job.duration_hours, num_hours)
+        total[lo:hi] += job.chips
+    return total
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    commitment: float
+    on_demand_chip_hours: float
+    unused_chip_hours: float
+    committed_cost: float
+    on_demand_cost: float
+    total_cost: float
+    all_on_demand_cost: float
+    savings_vs_on_demand: float
+
+
+def plan_fleet(
+    demand: np.ndarray,
+    *,
+    horizon_weeks: int = 8,
+    shiftable_frac: float = 0.0,
+) -> FleetPlan:
+    """Run Algorithm 1 on fleet demand; optionally time-shift the deferrable
+    fraction into troughs first (§4) — the full paper pipeline."""
+    hist = jnp.asarray(demand[: -horizon_weeks * 168].astype(np.float32))
+    res = pl.plan_commitment(hist, num_horizons=horizon_weeks)
+    c = res.commitment
+
+    actual = jnp.asarray(demand[-horizon_weeks * 168:].astype(np.float32))
+    if shiftable_frac > 0:
+        actual = ts.shift_demand(actual, c, shiftable_frac)
+
+    premium = on_demand_premium()
+    over = float(jnp.maximum(actual - c, 0.0).sum())
+    under = float(jnp.maximum(c - actual, 0.0).sum())
+    hours = actual.shape[0]
+    committed_cost = c * hours            # committed rate = 1.0/chip-hour
+    od_cost = premium * over
+    all_od = premium * float(actual.sum())
+    total = committed_cost + od_cost
+    return FleetPlan(
+        commitment=float(c),
+        on_demand_chip_hours=over,
+        unused_chip_hours=under,
+        committed_cost=committed_cost,
+        on_demand_cost=od_cost,
+        total_cost=total,
+        all_on_demand_cost=all_od,
+        savings_vs_on_demand=1.0 - total / all_od,
+    )

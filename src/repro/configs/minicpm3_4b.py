@@ -1,0 +1,27 @@
+"""minicpm3-4b [dense] — hf:openbmb/MiniCPM3-4B (hf tier).
+
+62L d_model=2560 40H d_ff=6400 vocab=73448 — MLA attention
+(q_lora=768, kv_lora=256, qk_nope=64, qk_rope=32, v_head=64 per HF config).
+The assignment's "GQA kv=40" denotes 40 effective heads; MLA replaces the
+separate KV heads with the shared latent.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    attention="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_dim=64,
+    qk_rope_dim=32,
+    v_head_dim=64,
+    head_dim=96,  # qk_nope + qk_rope
+)

@@ -1,0 +1,20 @@
+"""Shaved Ice core: the paper's contribution as composable JAX modules.
+
+  demand      — §2 demand characterization + calibrated synthetic traces
+  commitment  — §3.1-3.2 two-sided commitment cost + solvers
+  forecast    — §3.3.3 structural forecaster (Prophet replacement)
+  planner     — Algorithm 1 (forecast -> per-horizon optima -> min)
+  ladder      — §3.3.4 staggered commitments / expirations
+  timeshift   — §4 deferrable-workload scheduling into troughs
+  freepool    — §5 predictive pre-provisioning (newsvendor pools)
+"""
+
+from repro.core import (  # noqa: F401
+    commitment,
+    demand,
+    forecast,
+    freepool,
+    ladder,
+    planner,
+    timeshift,
+)

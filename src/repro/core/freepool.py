@@ -1,0 +1,122 @@
+"""Free-pool sizing: predictive pre-provisioning (paper §5).
+
+CSP VM provisioning latency (minutes at p90/p99, paper Fig 10) is far above
+the sub-second SLO for warehouse creation, so a pool of pre-provisioned VMs
+absorbs demand spikes.  The paper minimizes
+
+    c(t) = p_o * max(0, y_hat_t - d_t) + p_u * max(0, d_t - y_hat_t)
+
+over the pool size y_hat_t per time window.  This is the same asymmetric
+newsvendor objective as §3's commitment problem, so the optimal *static*
+pool is the p_u/(p_o+p_u) quantile of demand, and the optimal *predicted*
+pool is that quantile of the forecast-residual distribution stacked on the
+point forecast.  We implement both plus the provisioning-latency-aware
+variant: the pool must cover demand over the replenishment lead time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forecast as fc
+
+
+@dataclasses.dataclass(frozen=True)
+class FreePoolConfig:
+    p_over: float = 1.0    # cost / over-provisioned server-minute
+    p_under: float = 10.0  # cost / under-provisioned server (SLO miss)
+    lead_time: int = 3     # provisioning latency in windows (paper Fig 10)
+
+
+def pool_cost(
+    pool: jnp.ndarray, demand: jnp.ndarray, cfg: FreePoolConfig = FreePoolConfig()
+) -> jnp.ndarray:
+    """The paper's c(t), summed over time. pool/demand: (..., T)."""
+    over = jnp.maximum(pool - demand, 0.0)
+    under = jnp.maximum(demand - pool, 0.0)
+    return (cfg.p_over * over + cfg.p_under * under).sum(-1)
+
+
+def critical_fractile(cfg: FreePoolConfig) -> float:
+    return cfg.p_under / (cfg.p_under + cfg.p_over)
+
+
+def optimal_static_pool(
+    demand: jnp.ndarray, cfg: FreePoolConfig = FreePoolConfig()
+) -> jnp.ndarray:
+    """Best single pool size: the critical-fractile quantile of demand."""
+    return jnp.quantile(demand, critical_fractile(cfg), axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "window", "demand_future_len")
+)
+def predicted_pool(
+    demand_history: jnp.ndarray,
+    demand_future_len: int,
+    cfg: FreePoolConfig = FreePoolConfig(),
+    window: int = 24,
+) -> jnp.ndarray:
+    """Forecast-driven pool sizing (paper §5.1).
+
+    Fits the structural forecaster on history, takes the point forecast for
+    the future, and adds a safety margin equal to the critical-fractile
+    quantile of in-sample residuals over a trailing ``window`` — i.e. the
+    newsvendor answer under the empirical residual distribution.  The lead
+    time shifts the target: the pool set now must cover demand ``lead_time``
+    windows ahead (provisioning latency), so we take the max of the forecast
+    over the lead window.
+    """
+    model_cfg = fc.ForecastConfig(yearly_order=0, num_changepoints=4)
+    t_hist = demand_history.shape[-1]
+    beta = fc._fit(demand_history, model_cfg, float(t_hist - 1))
+    model = fc.ForecastModel(beta=beta, t_max=float(t_hist - 1), cfg=model_cfg)
+
+    fitted = fc.predict(model, jnp.arange(t_hist))
+    resid = demand_history - fitted
+    q = jnp.quantile(resid, critical_fractile(cfg))
+
+    future_t = t_hist + jnp.arange(demand_future_len + cfg.lead_time)
+    yhat = fc.predict(model, future_t)
+    # Cover the worst point forecast over the lead window ending at each t.
+    if cfg.lead_time > 0:
+        stacked = jnp.stack(
+            [yhat[i : i + demand_future_len] for i in range(cfg.lead_time + 1)]
+        )
+        yhat_eff = stacked.max(0)
+    else:
+        yhat_eff = yhat[:demand_future_len]
+    return jnp.maximum(yhat_eff + q, 0.0)
+
+
+def compare_static_vs_predicted(
+    history: jnp.ndarray,
+    future: jnp.ndarray,
+    cfg: FreePoolConfig = FreePoolConfig(),
+) -> dict:
+    """Paper Fig 12: cost of the best static pool vs the predicted pool on a
+    held-out window."""
+    static = optimal_static_pool(history, cfg)
+    static_series = jnp.full_like(future, static)
+    pred = predicted_pool(history, future.shape[-1], cfg)
+    return {
+        "static_size": float(static),
+        "static_cost": float(pool_cost(static_series, future, cfg)),
+        "predicted_cost": float(pool_cost(pred, future, cfg)),
+        "predicted_mean_size": float(pred.mean()),
+        "under_minutes_static": float(
+            jnp.maximum(future - static_series, 0.0).sum()
+        ),
+        "under_minutes_predicted": float(jnp.maximum(future - pred, 0.0).sum()),
+    }
+
+
+def provisioning_latency_profile(hour_of_day: jnp.ndarray) -> jnp.ndarray:
+    """Synthetic p99 provisioning-latency curve (minutes) by hour-of-day,
+    shaped like paper Fig 10: elevated at top-of-hour/business peaks."""
+    base = 2.0 + 1.5 * jnp.sin(2 * jnp.pi * (hour_of_day - 14) / 24.0) ** 2
+    return base

@@ -1,0 +1,123 @@
+"""Commitment laddering (paper §3.3.4).
+
+Commitments are bought with staggered start dates and fixed terms (like bond
+ladders): the *cumulative* committed level at time t is the sum of all active
+tranches.  Increments can be purchased any period; reductions happen only by
+letting tranches expire.  This module provides:
+
+  * ``Ladder`` — an immutable schedule of tranches (start, term, amount);
+  * ``active_level`` — committed level over time;
+  * ``plan_purchases`` — translate a target level series into per-period
+    incremental purchases honoring the "can only add" constraint (the
+    modification of Algorithm 1 the paper describes for Fig 9);
+  * ``ladder_vs_flat`` — the Fig 9 Scenario A (flat) vs Scenario B (perfect
+    laddering) comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import commitment as cm
+from repro.core.demand import HOURS_PER_WEEK
+
+
+@dataclasses.dataclass(frozen=True)
+class Ladder:
+    """Tranches: arrays of (start_hour, term_hours, amount)."""
+
+    start: np.ndarray   # (K,) int
+    term: np.ndarray    # (K,) int
+    amount: np.ndarray  # (K,) float
+
+    def active_level(self, num_hours: int) -> np.ndarray:
+        """Cumulative committed level for hours [0, num_hours)."""
+        t = np.arange(num_hours)[:, None]
+        active = (t >= self.start[None, :]) & (
+            t < (self.start + self.term)[None, :]
+        )
+        return (active * self.amount[None, :]).sum(-1)
+
+    def extended(self, start: int, term: int, amount: float) -> "Ladder":
+        return Ladder(
+            start=np.append(self.start, start),
+            term=np.append(self.term, term),
+            amount=np.append(self.amount, amount),
+        )
+
+
+def empty_ladder() -> Ladder:
+    z = np.zeros((0,))
+    return Ladder(start=z.astype(int), term=z.astype(int), amount=z)
+
+
+def plan_purchases(
+    target_levels: np.ndarray,
+    *,
+    period_hours: int = HOURS_PER_WEEK,
+    term_hours: int = 52 * HOURS_PER_WEEK,
+    existing: Ladder | None = None,
+) -> Ladder:
+    """Buy, at the start of each period, the increment needed to lift the
+    active ladder level up to that period's target (never selling).  Where
+    the target is *below* the currently active level no purchase is made and
+    the surplus persists until tranches expire — exactly the §3.3.4
+    mechanism ("simply stop purchasing new commitments").
+    """
+    ladder = existing or empty_ladder()
+    num_periods = len(target_levels)
+    for p in range(num_periods):
+        t0 = p * period_hours
+        active_now = float(ladder.active_level(t0 + 1)[t0]) if t0 >= 0 else 0.0
+        gap = float(target_levels[p]) - active_now
+        if gap > 1e-9:
+            ladder = ladder.extended(t0, term_hours, gap)
+    return ladder
+
+
+def ladder_vs_flat(
+    demand: np.ndarray,
+    weekly_targets: np.ndarray,
+    *,
+    a: float = cm.DEFAULT_A,
+) -> dict:
+    """Paper Fig 9: Scenario A applies one flat optimal level over the whole
+    window; Scenario B assumes perfect laddering (weekly level can step down
+    to each week's target thanks to expiring tranches).  Costs are evaluated
+    with the paper's Eq (1) metric C(c) — the same objective the optimizer
+    minimizes (Fig 8's caption compares C(c_w1, X) vs C(c_w2, X)), under
+    which per-week optima dominate any flat level by pointwise optimality.
+    Paper reports ~1.1% savings for its year-end window."""
+    num_weeks = len(weekly_targets)
+    window = demand[: num_weeks * HOURS_PER_WEEK]
+    flat_level = float(cm.optimal_commitment_quantile(jnp.asarray(window), a))
+    flat_spend = float(cm.commitment_cost(jnp.asarray(window), flat_level, a))
+
+    laddered_spend = 0.0
+    for w in range(num_weeks):
+        seg = jnp.asarray(window[w * HOURS_PER_WEEK : (w + 1) * HOURS_PER_WEEK])
+        laddered_spend += float(
+            cm.commitment_cost(seg, float(weekly_targets[w]), a)
+        )
+
+    return {
+        "flat_level": flat_level,
+        "flat_spend": flat_spend,
+        "laddered_spend": laddered_spend,
+        "savings_frac": 1.0 - laddered_spend / flat_spend,
+    }
+
+
+def expiration_profile(ladder: Ladder, num_hours: int) -> np.ndarray:
+    """Capacity expiring per hour — the 'rolling downward expiration' the
+    paper describes; used by the planner to know how much level decays on its
+    own before new purchases are needed."""
+    out = np.zeros(num_hours)
+    ends = ladder.start + ladder.term
+    for e, amt in zip(ends, ladder.amount):
+        if 0 <= e < num_hours:
+            out[e] += amt
+    return out

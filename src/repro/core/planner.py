@@ -1,0 +1,143 @@
+"""Algorithm 1: Optimal Commitment For Demand Forecast (paper §3.3.3).
+
+Step 1  Fit the forecaster on the hourly training history; forecast 1 year.
+Step 2  For each weekly horizon w = 1..52, take the forecast prefix X̂_w.
+Step 3  Compute the minimal-cost commitment level c_w over each prefix.
+Step 4  c* = min_w c_w  — commitments can be *increased* later but never
+        reduced, so the safe level to buy now is the minimum over horizons
+        (buying more than some future optimum strands capacity).
+
+All 52 horizon optimizations run as one vectorized pass: with the exact
+quantile solver each c_w is a weighted quantile of a prefix, and with the
+golden-section solver the 52 prefixes are masked views of one array, batched
+under vmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import commitment as cm
+from repro.core import forecast as fc
+from repro.core.demand import HOURS_PER_WEEK
+
+
+@dataclasses.dataclass
+class PlanResult:
+    commitment: float                 # c* to purchase now
+    per_horizon_levels: jnp.ndarray   # (W,) c_w for each horizon
+    argmin_horizon: int               # which horizon set the binding level
+    forecast: jnp.ndarray             # (W*168,) hourly forecast used
+
+
+def _masked_prefix_optimum(
+    yhat: jnp.ndarray, w_hours: jnp.ndarray, a: float, b: float
+) -> jnp.ndarray:
+    """Optimal commitment over the prefix yhat[:w_hours] without dynamic
+    shapes: elements past the prefix are masked to +inf for the 'over' hinge
+    and... simpler: replace them with the prefix's own values via clamped
+    gather is costly — instead use the weighted-quantile closed form with a
+    validity mask (exact for the two-sided objective)."""
+    t = jnp.arange(yhat.shape[0])
+    valid = (t < w_hours).astype(yhat.dtype)
+    # Weighted quantile at q = a/(a+b) over valid entries:
+    q = a / (a + b)
+    # Sort demand ascending; accumulate validity mass; pick first index where
+    # cumulative fraction >= q.
+    order = jnp.argsort(yhat)
+    sorted_y = yhat[order]
+    sorted_valid = valid[order]
+    cum = jnp.cumsum(sorted_valid)
+    total = jnp.maximum(cum[-1], 1.0)
+    frac = cum / total
+    idx = jnp.argmax(frac >= q)  # first crossing
+    return sorted_y[idx]
+
+
+def plan_commitment(
+    history: jnp.ndarray,
+    *,
+    num_horizons: int = 52,
+    a: float = cm.DEFAULT_A,
+    b: float = cm.DEFAULT_B,
+    cfg: fc.ForecastConfig = fc.ForecastConfig(),
+    solver: Literal["quantile", "golden"] = "quantile",
+) -> PlanResult:
+    """Run Algorithm 1 on an hourly demand history."""
+    model = fc.fit(history, cfg)
+    t0 = history.shape[-1]
+    horizon_hours = num_horizons * HOURS_PER_WEEK
+    yhat = fc.forecast_horizon(model, t0, horizon_hours)  # Step 1
+
+    w_hours = (jnp.arange(1, num_horizons + 1)) * HOURS_PER_WEEK  # Step 2
+
+    if solver == "quantile":
+        levels = jax.vmap(
+            lambda w: _masked_prefix_optimum(yhat, w, a, b)
+        )(w_hours)  # Step 3
+    else:
+        def golden_prefix(w):
+            t = jnp.arange(yhat.shape[0])
+            # Mask out-of-horizon hours by pinning them to the prefix median:
+            # they then contribute a c-independent-gradient-free... not exact.
+            # For the golden path we instead clamp to the valid min so masked
+            # entries never bind the 'over' hinge and contribute a constant
+            # slope to 'under'; exactness is restored by subtracting that
+            # slope — in practice we simply evaluate cost only on valid hours
+            # via where().
+            fvals = jnp.where(t < w, yhat, jnp.nan)
+            # golden on nan-masked cost:
+            lo, hi = jnp.nanmin(fvals), jnp.nanmax(fvals)
+
+            def cost(c):
+                over = jnp.where(t < w, jnp.maximum(yhat - c, 0.0), 0.0)
+                under = jnp.where(t < w, jnp.maximum(c - yhat, 0.0), 0.0)
+                return a * over.sum() + b * under.sum()
+
+            def body(_, st):
+                lo, hi = st
+                x1 = lo + (hi - lo) * 0.381966
+                x2 = lo + (hi - lo) * 0.618034
+                sm = cost(x1) < cost(x2)
+                return jnp.where(sm, lo, x1), jnp.where(sm, x2, hi)
+
+            lo, hi = jax.lax.fori_loop(0, 60, body, (lo, hi))
+            return 0.5 * (lo + hi)
+
+        levels = jax.vmap(golden_prefix)(w_hours)
+
+    c_star = levels.min()  # Step 4
+    return PlanResult(
+        commitment=float(c_star),
+        per_horizon_levels=levels,
+        argmin_horizon=int(jnp.argmin(levels)),
+        forecast=yhat,
+    )
+
+
+def compare_horizons(
+    yhat: jnp.ndarray,
+    horizons_weeks: tuple[int, ...] = (1, 2),
+    a: float = cm.DEFAULT_A,
+    b: float = cm.DEFAULT_B,
+    eval_weeks: int | None = None,
+) -> dict:
+    """Paper Fig 8: commitment from a w1-week horizon vs w2-week horizon,
+    both *applied over* the longer evaluation window.  Costs use the paper's
+    Eq (1) metric: the figure's caption compares C(c_w1, X-hat_w2) vs
+    C(c_w2, X-hat_w2).  Demonstrates why upcoming demand drops must be
+    considered: the longer-horizon level is lower and cheaper.
+    """
+    eval_weeks = eval_weeks or max(horizons_weeks)
+    eval_slice = yhat[: eval_weeks * HOURS_PER_WEEK]
+    out = {}
+    for w in horizons_weeks:
+        prefix = yhat[: w * HOURS_PER_WEEK]
+        c_w = float(cm.optimal_commitment_quantile(prefix, a, b))
+        spend = float(cm.commitment_cost(eval_slice, c_w, a, b))
+        out[w] = {"level": c_w, "total_spend": spend}
+    return out

@@ -1,0 +1,108 @@
+"""Public jit'd wrapper for the commitment-sweep kernel: padding, block-size
+selection, CPU-interpret fallback, and the grid+refine optimizer built on it."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.commitment_sweep.commitment_sweep import (
+    commitment_sweep_kernel,
+)
+from repro.kernels.commitment_sweep.ref import commitment_sweep_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def commitment_sweep(
+    f: jnp.ndarray,
+    cs: jnp.ndarray,
+    w: jnp.ndarray | None = None,
+    *,
+    a: float = 2.1,
+    b: float = 1.0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Cost curve C(c) for pools f (P, T) [or (T,)] over candidates cs (G,).
+
+    Pads every dim to TPU-friendly multiples (weights zero on padding so
+    padded hours contribute nothing; padded pools/candidates are sliced off)
+    and dispatches to the Pallas kernel (interpret mode off-TPU).
+    """
+    squeeze = f.ndim == 1
+    if squeeze:
+        f = f[None, :]
+    p, t = f.shape
+    (g,) = cs.shape
+    if w is None:
+        w = jnp.ones_like(f)
+
+    # Block sizes: keep the (bp, bg, bt) broadcast tile < ~4 MB of VMEM.
+    bp = 8
+    bg = min(128, _round_up(g, 128))
+    bt = min(512, _round_up(t, 128))
+
+    pp, gg, tt = _round_up(p, bp), _round_up(g, bg), _round_up(t, bt)
+    f_pad = jnp.zeros((pp, tt), f.dtype).at[:p, :t].set(f)
+    w_pad = jnp.zeros((pp, tt), w.dtype).at[:p, :t].set(w)
+    c_pad = jnp.zeros((gg,), cs.dtype).at[:g].set(cs)
+
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    out = commitment_sweep_kernel(
+        f_pad, w_pad, c_pad, a=a, b=b, bp=bp, bg=bg, bt=bt, interpret=interpret
+    )[:p, :g]
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("num_coarse", "num_fine", "a", "b"))
+def optimal_commitment_sweep(
+    f: jnp.ndarray,
+    *,
+    a: float = 2.1,
+    b: float = 1.0,
+    num_coarse: int = 128,
+    num_fine: int = 128,
+) -> jnp.ndarray:
+    """Grid+refine minimizer of C(c) on the *reference* path (jnp): coarse
+    grid over [min, max], then a fine grid inside the best coarse bracket.
+    Used for batched planner sweeps where the exact-quantile path would need
+    a full sort per pool per horizon; matches it to ~(range/G^2) accuracy."""
+    if f.ndim == 1:
+        f = f[None, :]
+    lo = f.min(-1)
+    hi = f.max(-1)
+    span = hi - lo
+
+    def stage(lo, span, n):
+        # (P, n) candidate grids per pool
+        steps = jnp.arange(n, dtype=f.dtype) / (n - 1)
+        cands = lo[:, None] + span[:, None] * steps[None, :]
+        diff = f[:, None, :] - cands[:, :, None]
+        costs = jnp.where(diff > 0, a * diff, -b * diff).sum(-1)
+        best = jnp.argmin(costs, -1)
+        c_best = jnp.take_along_axis(cands, best[:, None], 1)[:, 0]
+        new_span = 2.0 * span / (n - 1)
+        return jnp.maximum(c_best - span / (n - 1), lo), new_span, c_best
+
+    lo1, span1, _ = stage(lo, span, num_coarse)
+    _, _, c = stage(lo1, span1, num_fine)
+    return c
+
+
+def commitment_sweep_oracle(f, cs, w=None, a: float = 2.1, b: float = 1.0):
+    """Reference path (exported for tests/benchmarks)."""
+    if f.ndim == 1:
+        f = f[None, :]
+    if w is None:
+        w = jnp.ones_like(f)
+    return commitment_sweep_ref(f, w, cs, a, b)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the commitment sweep kernel.
+
+Weighted two-sided commitment cost over a candidate grid:
+
+    out[p, g] = A * sum_t w[p,t] * max(f[p,t] - c[g], 0)
+             + B * sum_t w[p,t] * max(c[g] - f[p,t], 0)
+
+The weight vector generalizes the paper's objective to masked prefixes
+(Algorithm 1's 52 horizons are 52 weight patterns) and non-uniform hour
+weighting.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def commitment_sweep_ref(
+    f: jnp.ndarray,
+    w: jnp.ndarray,
+    cs: jnp.ndarray,
+    a: float = 2.1,
+    b: float = 1.0,
+) -> jnp.ndarray:
+    """f, w: (P, T); cs: (G,) -> (P, G) in float32."""
+    f = f.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    diff = f[:, None, :] - cs[None, :, None]  # (P, G, T)
+    over = jnp.maximum(diff, 0.0)
+    under = jnp.maximum(-diff, 0.0)
+    return ((a * over + b * under) * w[:, None, :]).sum(-1)

@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention (forward) with GQA, causal masking, padded KV.
+
+Online-softmax blocked attention [Dao et al.], adapted to TPU:
+  * grid (B, Hq, Sq/bq, Skv/bk), KV innermost so (m, l, acc) scratch carries
+    across KV blocks in VMEM;
+  * GQA without materializing repeated KV: the K/V BlockSpec index map sends
+    q-head h to kv-head h // group — HBM traffic is O(Hkv), not O(Hq);
+  * block shapes aligned to MXU tiles: bq, bk multiples of 128 lanes
+    (sublane-padded by ops.py), D assumed <= 256 and lane-aligned;
+  * causal block skip: KV blocks entirely above the diagonal are skipped
+    (pl.when), giving the ~2x wall-time saving on TPU; fully-unmasked blocks
+    skip the mask computation entirely.
+
+Decode alignment: queries are the *last* ``sq`` positions of an effective
+context of ``kv_len`` tokens (kv_len <= Skv covers padded caches), which
+makes the same kernel serve train (sq == skv), prefill, and batched decode
+(sq == 1..few, kv_len = cache fill level).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, kv_len: int, row_offset: int,
+    bq: int, bk: int,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    num_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Absolute positions: query row i (global) sits at context position
+    # row_offset + i; KV column j is valid iff j < kv_len.
+    row0 = row_offset + iq * bq  # absolute position of first q row in block
+    col0 = ik * bk
+
+    # Causal block skip: this KV block starts past the last query's position.
+    block_needed = True
+    if causal:
+        block_needed = col0 <= row0 + bq - 1
+    kv_valid = col0 < kv_len  # KV block fully in padding -> skip
+
+    @pl.when(jnp.logical_and(block_needed, kv_valid))
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols >= kv_len
+        if causal:
+            mask = jnp.logical_or(mask, cols > rows)
+        s = jnp.where(mask, NEG_INF, s)
+
+        m_prev = m_ref[...]            # (bq, 1)
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "kv_len", "row_offset", "scale", "bq", "bk", "interpret",
+    ),
+)
+def flash_attention_kernel(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)   Sq % bq == 0
+    k: jnp.ndarray,  # (B, Hkv, Skv, D) Skv % bk == 0
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    kv_len: int | None = None,
+    row_offset: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    kv_len = skv if kv_len is None else kv_len
+    # Default: queries are the last sq real positions of the kv_len context.
+    row_offset = (kv_len - sq) if row_offset is None else row_offset
+    scale = d ** -0.5 if scale is None else scale
+
+    grid = (b, hq, sq // bq, skv // bk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, kv_len=kv_len, row_offset=row_offset,
+        bq=bq, bk=bk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,80 @@
+"""Public attention op: padding, block-size selection, interpret fallback,
+and a custom_vjp whose backward pass is the (rematerialized) reference —
+forward speed is what matters for serving; training uses the jnp path or the
+same kernel under `jax.remat`."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    kv_len: int | None = None,
+    scale: float | None = None,
+    bq: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Flash attention with automatic seq padding. Shapes:
+    q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    kv_eff = skv if kv_len is None else kv_len
+
+    bq = bq or min(128, _round_up(sq, 8))
+    bk = bk or min(128, _round_up(skv, 8))
+    sq_p, skv_p = _round_up(sq, bq), _round_up(skv, bk)
+
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    qp = jnp.zeros((b, hq, sq_p, d), q.dtype).at[:, :, :sq, :].set(q)
+    kp = jnp.zeros((b, hkv, skv_p, d), k.dtype).at[:, :, :skv, :].set(k)
+    vp = jnp.zeros((b, hkv, skv_p, d), v.dtype).at[:, :, :skv, :].set(v)
+
+    # Real query row i sits at absolute position kv_eff - sq + i; padded q
+    # rows land past kv_eff (they attend to everything valid — garbage rows,
+    # sliced off below).  kv_len masks padded/unfilled KV columns.
+    out = flash_attention_kernel(
+        qp, kp, vp,
+        causal=causal,
+        kv_len=kv_eff,
+        row_offset=kv_eff - sq,
+        scale=scale, bq=bq, bk=bk, interpret=interpret,
+    )
+    return out[:, :, :sq, :]
+
+
+@jax.custom_vjp
+def flash_attention_trainable(q, k, v):
+    return flash_attention(q, k, v, causal=True)
+
+
+def _fwd(q, k, v):
+    return flash_attention_trainable(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=True), q, k, v)
+    return vjp(g)
+
+
+flash_attention_trainable.defvjp(_fwd, _bwd)

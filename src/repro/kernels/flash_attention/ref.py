@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention: GQA + causal + padded-KV masking."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    kv_len: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+
+    mask = jnp.zeros((sq, skv), bool)
+    if causal:
+        # query i sits at absolute position (skv_eff - sq + i): decode-style
+        # alignment where queries are the final sq positions of the context.
+        eff = kv_len if kv_len is not None else skv
+        row = jnp.arange(sq)[:, None] + (eff - sq)
+        col = jnp.arange(skv)[None, :]
+        mask = mask | (col > row)
+    if kv_len is not None:
+        mask = mask | (jnp.arange(skv)[None, :] >= kv_len)
+    s = jnp.where(mask[None, None], -jnp.inf, s)
+
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

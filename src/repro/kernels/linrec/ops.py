@@ -1,0 +1,75 @@
+"""Public RWKV6 linear-attention op: padding, interpret fallback, decode step.
+
+``rwkv6_linear_attention`` handles full sequences (train/prefill);
+``rwkv6_step`` is the O(1)-state decode step (the long_500k enabler: no KV
+cache grows with context)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linrec.linrec import rwkv6_kernel
+from repro.kernels.linrec.ref import rwkv6_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def rwkv6_linear_attention(
+    r: jnp.ndarray,   # (B, H, T, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,   # (B, H, T, dv)
+    w: jnp.ndarray,   # (B, H, T, dk) decay in (0, 1]
+    u: jnp.ndarray,   # (H, dk)
+    state: jnp.ndarray | None = None,
+    *,
+    chunk: int = 32,
+    interpret: bool | None = None,
+):
+    """Returns (y (B,H,T,dv) f32, final_state (B,H,dk,dv) f32)."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    tp = _round_up(t, chunk)
+    if tp != t:
+        pad = ((0, 0), (0, 0), (0, tp - t), (0, 0))
+        # Padding steps: r=k=v=0, w=1 (logw=0) -> y=0, state unchanged.
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+        w = jnp.pad(w, pad, constant_values=1.0)
+
+    logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-30, 1.0))
+    y, s_out = rwkv6_kernel(
+        r, k, v, logw, u, state, chunk=chunk, interpret=interpret
+    )
+    return y[:, :, :t, :], s_out
+
+
+def rwkv6_step(
+    r: jnp.ndarray,   # (B, H, dk) single token
+    k: jnp.ndarray,
+    v: jnp.ndarray,   # (B, H, dv)
+    w: jnp.ndarray,   # (B, H, dk)
+    u: jnp.ndarray,   # (H, dk)
+    state: jnp.ndarray,  # (B, H, dk, dv)
+):
+    """One decode step: y (B,H,dv), new state. Pure jnp (no kernel needed —
+    a single outer product per head)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    att = state + u.astype(f32)[None, :, :, None] * kv
+    y = jnp.einsum("bhk,bhkv->bhv", r, att)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state
+
+
+def rwkv6_oracle(r, k, v, w, u, state=None):
+    return rwkv6_ref(r, k, v, w, u, state)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the RWKV6-style linear recurrence.
+
+Per head, with state S in R^{dk x dv}, data-dependent decay w_t in (0,1]^dk,
+bonus u in R^dk:
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Sequential lax.scan — the oracle for the chunked Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,  # (B, H, T, dk)
+    k: jnp.ndarray,  # (B, H, T, dk)
+    v: jnp.ndarray,  # (B, H, T, dv)
+    w: jnp.ndarray,  # (B, H, T, dk) decay in (0, 1]
+    u: jnp.ndarray,  # (H, dk) bonus
+    state: jnp.ndarray | None = None,  # (B, H, dk, dv)
+):
+    """Returns (y (B,H,T,dv), final_state (B,H,dk,dv)) in float32."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    s0 = (
+        jnp.zeros((b, h, dk, dv), f32)
+        if state is None
+        else state.astype(f32)
+    )
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t, u_h = inp  # (B,H,dk) ... u_h (H,dk)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,dk,dv)
+        att = s + u_h[None, :, :, None] * kv            # bonus on current
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, y
+
+    inputs = (
+        r.transpose(2, 0, 1, 3),
+        k.transpose(2, 0, 1, 3),
+        v.transpose(2, 0, 1, 3),
+        w.transpose(2, 0, 1, 3),
+        jnp.broadcast_to(u, (t, h, dk)),
+    )
+    s_final, ys = jax.lax.scan(step, s0, inputs)
+    return ys.transpose(1, 2, 0, 3), s_final

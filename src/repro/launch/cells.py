@@ -1,0 +1,236 @@
+"""Dry-run cell construction: step functions, abstract inputs, shardings —
+shared by launch/dryrun.py, benchmarks/roofline.py and the perf hillclimbs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models.config import SHAPES, ModelConfig, ShapeCell, cells_for
+from repro.models.model import Model, build
+from repro.models.params import abstract_params, sharding_tree
+from repro.sharding.rules import RULESETS, Rules
+from repro.train.step import (
+    build_grad_accum_train_step,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+
+
+def default_microbatches(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> int:
+    """Gradient-accumulation factor for train cells, sized so the per-layer
+    remat-residual stack (L x B_loc x S x d bf16) fits comfortably under the
+    16 GB/chip budget alongside params+opt.  Production systems make exactly
+    this tradeoff (activation memory vs collective granularity); the roofline
+    totals stay exact because the microbatch loop is python-unrolled."""
+    if cell.kind != "train":
+        return 1
+    n_batch = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(cell.global_batch // n_batch, 1)
+    resid = cfg.num_layers * b_loc * cell.seq_len * cfg.d_model * 2
+    budget = 8 * 1024**3  # headroom for params/opt/transients
+    micro = 1
+    while resid / micro > budget and micro < b_loc:
+        micro *= 2
+    return micro
+
+
+def resolve_rules(rules: Rules, mesh: Mesh, global_batch: int) -> Rules:
+    """Adapt a ruleset to a concrete mesh: drop mesh axes that don't exist
+    (single-pod has no "pod"), and shrink the batch axes to a prefix whose
+    product divides the global batch (long_500k has batch 1)."""
+    out = dict(rules)
+    names = set(mesh.axis_names)
+
+    def filter_part(part):
+        if part is None:
+            return None
+        parts = part if isinstance(part, (tuple, list)) else (part,)
+        kept = tuple(p for p in parts if p in names)
+        return kept if kept else None
+
+    for k, v in out.items():
+        out[k] = filter_part(v)
+
+    batch_axes = out.get("batch") or ()
+    if not isinstance(batch_axes, tuple):
+        batch_axes = (batch_axes,)
+    kept: list[str] = []
+    prod = 1
+    for ax in batch_axes:
+        if global_batch % (prod * mesh.shape[ax]) == 0:
+            kept.append(ax)
+            prod *= mesh.shape[ax]
+    out["batch"] = tuple(kept) if kept else None
+    return out
+
+
+def batch_shardings(inputs: dict[str, Any], mesh: Mesh, rules: Rules):
+    """Shardings for the model-input dict: leading dim is batch."""
+    batch = rules.get("batch")
+
+    def shard(sds):
+        if sds.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(batch, *(None,) * (sds.ndim - 1)))
+
+    return {k: jax.tree.map(shard, v) for k, v in inputs.items()}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    model: Model
+    cell: ShapeCell
+    step_fn: Any
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any = None
+
+
+def _opt_abstract(params_abs):
+    return {
+        "master": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+        ),
+        "m": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+        ),
+        "v": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+        ),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _opt_shardings(param_sh, mesh):
+    return {
+        "master": param_sh,
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def make_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    *,
+    cfg_override: ModelConfig | None = None,
+    rules_override: Rules | None = None,
+) -> Cell:
+    cfg = cfg_override or configs.get(arch)
+    model = build(cfg)
+    cell = SHAPES[shape]
+    rules = dict(rules_override or RULESETS[cell.kind])
+    rules = resolve_rules(rules, mesh, cell.global_batch)
+
+    params_abs = model.abstract()
+    param_sh = model.param_shardings(mesh, rules)
+    inputs = model.input_specs(cell)
+
+    batch_part = rules.get("batch")
+    out_shardings = None
+    if cell.kind == "train":
+        micro = default_microbatches(cfg, cell, mesh)
+        if micro > 1:
+            step = build_grad_accum_train_step(
+                model, num_microbatches=micro, batch_part=batch_part
+            )
+        else:
+            step = build_train_step(model, batch_part=batch_part)
+        opt_abs = _opt_abstract(params_abs)
+        args = (params_abs, opt_abs, inputs)
+        shardings = (
+            param_sh,
+            _opt_shardings(param_sh, mesh),
+            batch_shardings(inputs, mesh, rules),
+        )
+        out_shardings = (
+            NamedSharding(mesh, P()),          # loss
+            param_sh,                           # new params
+            _opt_shardings(param_sh, mesh),     # new opt state
+        )
+    elif cell.kind == "prefill":
+        step = build_prefill_step(
+            model, cache_len=cell.seq_len, batch_part=batch_part
+        )
+        args = (params_abs, inputs)
+        shardings = (param_sh, batch_shardings(inputs, mesh, rules))
+        cache_sh = sharding_tree(
+            model.cache_specs(cell.global_batch, cell.seq_len), mesh, rules
+        )
+        out_shardings = (
+            NamedSharding(mesh, P(batch_part)),  # logits: batch-sharded
+            cache_sh,                             # cache: seq over "model"
+        )
+    else:  # decode
+        step = build_serve_step(model, batch_part=batch_part)
+        cache_abs = inputs.pop("cache")
+        pos = inputs.pop("pos")
+        cache_sh = sharding_tree(
+            model.cache_specs(cell.global_batch, cell.seq_len), mesh, rules
+        )
+        args = (params_abs, cache_abs, inputs, pos)
+        shardings = (
+            param_sh,
+            cache_sh,
+            batch_shardings(inputs, mesh, rules),
+            NamedSharding(mesh, P()),
+        )
+        out_shardings = (
+            NamedSharding(mesh, P(batch_part)),  # logits
+            cache_sh,                             # updated cache
+        )
+
+    return Cell(
+        arch=arch, shape=shape, cfg=cfg, model=model, cell=cell,
+        step_fn=step, abstract_args=args, in_shardings=shardings,
+        out_shardings=out_shardings,
+    )
+
+
+def delta_configs(cfg: ModelConfig) -> tuple[ModelConfig, ModelConfig, int]:
+    """(cfg_L1, cfg_L2, repeat) for the scan-trip cost-extrapolation:
+    total_cost = cost(L1) + (repeat - 1) * (cost(L2) - cost(L1)).
+    The scan unit is a layer (most archs) or a period-8 block (jamba);
+    whisper scales encoder and decoder stacks together."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period
+        return (
+            dataclasses.replace(cfg, num_layers=period, unroll_layers=True),
+            dataclasses.replace(cfg, num_layers=2 * period,
+                                unroll_layers=True),
+            cfg.num_layers // period,
+        )
+    if cfg.family == "audio":
+        return (
+            dataclasses.replace(cfg, num_layers=1, encoder_layers=1,
+                                unroll_layers=True),
+            dataclasses.replace(cfg, num_layers=2, encoder_layers=2,
+                                unroll_layers=True),
+            cfg.num_layers,
+        )
+    base = cfg.first_dense_layers
+    return (
+        dataclasses.replace(cfg, num_layers=base + 1, unroll_layers=True),
+        dataclasses.replace(cfg, num_layers=base + 2, unroll_layers=True),
+        cfg.num_layers - base,
+    )
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in sorted(configs.ARCHS):
+        for shape in cells_for(configs.get(arch)):
+            out.append((arch, shape))
+    return out

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, prove it fits, and extract the roofline inputs.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first backend initialization, and the production
+meshes need 512 placeholder host devices.  Nothing else in the repo sets
+this flag (smoke tests and benchmarks see 1 device).
+
+Per cell this driver lowers/compiles THREE modules:
+  * the full model — memory_analysis (fits-per-device proof) + compile proof
+    + the optimized collective schedule;
+  * an L1 (one scan unit) and L2 (two scan units) variant — XLA's HLO cost
+    analysis counts `while` bodies once regardless of trip count (calibrated
+    in tests/test_dryrun_unit.py), so exact totals come from the affine
+    extrapolation  total = C(L1) + (repeat-1) * (C(L2) - C(L1)),
+    applied identically to FLOPs, HBM bytes, and parsed collective bytes.
+
+Results are cached as JSON per cell under --out so reruns are incremental.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""  # noqa: E402
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.launch import hlo_analysis as ha            # noqa: E402
+from repro.launch.cells import (                        # noqa: E402
+    all_cells,
+    delta_configs,
+    make_cell,
+)
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+MEM_BUDGET_BYTES = 16 * 1024**3  # v5e HBM per chip
+
+
+def _compile_cell(cell, mesh):
+    kw = {"in_shardings": cell.in_shardings}
+    if cell.out_shardings is not None:
+        kw["out_shardings"] = cell.out_shardings
+    with mesh:
+        lowered = jax.jit(cell.step_fn, **kw).lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    rules_override=None,
+    cfg_transform=None,
+    verbose: bool = True,
+) -> dict:
+    """Compile + analyze one cell; returns the result record.
+
+    ``cfg_transform`` (ModelConfig -> ModelConfig) is applied to the cell's
+    config AND its L1/L2 delta variants — the §Perf hillclimbs use it to
+    inject knobs (kv_cache_dtype, moe_capacity_factor, remat_policy...).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = mesh.size
+    t0 = time.time()
+
+    from repro import configs as _configs
+
+    base_cfg = _configs.get(arch)
+    if cfg_transform is not None:
+        base_cfg = cfg_transform(base_cfg)
+
+    cell = make_cell(arch, shape, mesh, cfg_override=base_cfg,
+                     rules_override=rules_override)
+    lowered, compiled = _compile_cell(cell, mesh)
+    mem = compiled.memory_analysis()
+    full_flops, full_bytes = _cost(compiled)
+    full_coll = ha.parse_collectives(compiled.as_text())
+
+    # Delta-method exact totals (scan bodies counted once otherwise).
+    cfg1, cfg2, repeat = delta_configs(cell.cfg)
+    c1 = make_cell(arch, shape, mesh, cfg_override=cfg1,
+                   rules_override=rules_override)
+    c2 = make_cell(arch, shape, mesh, cfg_override=cfg2,
+                   rules_override=rules_override)
+    _, comp1 = _compile_cell(c1, mesh)
+    _, comp2 = _compile_cell(c2, mesh)
+    f1, b1 = _cost(comp1)
+    f2, b2 = _cost(comp2)
+    k1 = ha.parse_collectives(comp1.as_text()).total_bytes
+    k2 = ha.parse_collectives(comp2.as_text()).total_bytes
+
+    flops = f1 + (repeat - 1) * (f2 - f1)
+    flops += ha.inner_recurrence_flops(cell.cfg, cell.cell) / nchips
+    hbm_bytes = b1 + (repeat - 1) * (b2 - b1)
+    coll_bytes = k1 + (repeat - 1) * (k2 - k1)
+
+    model_flops_global = ha.model_flops_for(cell.cfg, cell.model, cell.cell)
+    from repro.launch.cells import resolve_rules
+    from repro.sharding.rules import RULESETS
+    rules = rules_override or RULESETS[cell.cell.kind]
+    rules = resolve_rules(dict(rules), mesh, cell.cell.global_batch)
+    hbm_projected = ha.analytic_hbm_bytes(cell, mesh, rules)
+    roof = ha.roofline_terms(
+        flops, hbm_projected, coll_bytes, model_flops_global / nchips,
+        hbm_bytes_hlo=hbm_bytes,
+    )
+
+    per_dev_bytes = (
+        mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes
+    )
+    # TPU-projected memory: the CPU backend widens bf16 loop state to f32
+    # and never fuses, inflating temp (DESIGN.md §dry-run caveats); args and
+    # outputs are exact (sharded) either way.
+    from repro.launch.cells import default_microbatches
+    n_model = mesh.shape.get("model", 1)
+    n_data = nchips // n_model
+    micro = default_microbatches(cell.cfg, cell.cell, mesh)
+    tpu_temp = ha.analytic_temp_bytes(
+        cell.cfg, cell.cell, n_data, n_model, micro
+    )
+    tpu_projected = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes + tpu_temp
+    )
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": nchips,
+        "compile_ok": True,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes_cpu_backend": mem.temp_size_in_bytes,
+            "temp_bytes_tpu_projected": tpu_temp,
+            "output_bytes": mem.output_size_in_bytes,
+            "total_per_device_cpu": per_dev_bytes,
+            "total_per_device_tpu_projected": tpu_projected,
+            "fits_16gb": bool(tpu_projected < MEM_BUDGET_BYTES),
+        },
+        "cost_full_module": {
+            "flops": full_flops, "bytes": full_bytes,
+            "collective_bytes": full_coll.total_bytes,
+            "collective_counts": full_coll.count_by_kind,
+        },
+        "delta": {
+            "repeat": repeat, "l1_flops": f1, "l2_flops": f2,
+            "l1_coll": k1, "l2_coll": k2,
+        },
+        "roofline": roof.as_dict(),
+        "microbatches": micro,
+        "params_total": cell.model.num_params(),
+        "params_active": ha.active_params(cell.cfg, cell.model),
+    }
+    if verbose:
+        m = record["memory"]
+        r = record["roofline"]
+        print(
+            f"[{arch} x {shape} x {'multi' if multi_pod else 'single'}-pod] "
+            f"compile {record['compile_seconds']}s | "
+            f"mem/dev {tpu_projected/1e9:.2f} GB tpu-proj "
+            f"({per_dev_bytes/1e9:.1f} cpu) "
+            f"(fits={m['fits_16gb']}) | "
+            f"compute {r['compute_s']*1e3:.2f} ms, "
+            f"memory {r['memory_s']*1e3:.2f} ms, "
+            f"collective {r['collective_s']*1e3:.2f} ms "
+            f"-> {r['dominant']}-bound | useful {r['useful_ratio']:.2f}",
+            flush=True,
+        )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {tag}", flush=True)
+                continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=multi_pod)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((tag, str(e)))
+                rec = {
+                    "arch": arch, "shape": shape, "compile_ok": False,
+                    "multi_pod": multi_pod, "error": str(e),
+                }
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (jax locks the device count on first backend init, and the
+dry-run must set XLA_FLAGS before that happens).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod: 256 chips as ("data", "model") = (16, 16).
+    Multi-pod: 2 pods x 256 chips as ("pod", "data", "model") = (2, 16, 16).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D "data" mesh (smoke tests,
+    examples).  Kept separate so tests never build the 512-way mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )

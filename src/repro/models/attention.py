@@ -1,0 +1,386 @@
+"""Attention layers: GQA (with partial rotary / M-RoPE) and MLA
+(DeepSeek/MiniCPM multi-head latent attention with absorbed decode path).
+
+Three execution modes share one set of weights:
+  * train    — full causal self-attention, no cache;
+  * prefill  — same math, query-chunked (python-unrolled so HLO FLOP
+               accounting stays exact — see launch/dryrun delta method), and
+               writes the KV cache;
+  * decode   — single-token query against the cache at fill level ``pos``.
+
+Caches are laid out (B, S, Hkv, D) with logical axes
+("batch", "cache_seq", "kv_heads", "head_dim") so long-context decode can
+shard the *sequence* dimension over the model axis (context parallelism) —
+GQA kv-head counts (4..48) rarely divide a 16-way axis, the cache length
+always does.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm, rms_norm_spec, rope_for
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+NEG_INF = -1e30
+
+# Query-chunk lengths (python-unrolled blockwise attention): bounds the
+# (chunk, Skv) score buffer — the jnp stand-in for the flash kernel's tiling.
+PREFILL_CHUNK = 2048
+TRAIN_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim"), fan_in=d),
+        "wk": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wv": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed"), fan_in=h * hd),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    d, h = cfg.d_model, cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    s: dict[str, Spec] = {}
+    if cfg.q_lora_rank:
+        s["wq_a"] = Spec((d, cfg.q_lora_rank), ("embed", "lora"), fan_in=d)
+        s["q_norm"] = rms_norm_spec(cfg.q_lora_rank)
+        s["wq_b"] = Spec(
+            (cfg.q_lora_rank, h, qk), ("lora", "heads", "head_dim"),
+            fan_in=cfg.q_lora_rank,
+        )
+    else:
+        s["wq"] = Spec((d, h, qk), ("embed", "heads", "head_dim"), fan_in=d)
+    s["wkv_a"] = Spec((d, cfg.kv_lora_rank), ("embed", "lora"), fan_in=d)
+    s["kv_norm"] = rms_norm_spec(cfg.kv_lora_rank)
+    s["wk_rope"] = Spec((d, cfg.qk_rope_dim), ("embed", "head_dim"), fan_in=d)
+    s["wk_b"] = Spec(
+        (cfg.kv_lora_rank, h, cfg.qk_nope_dim),
+        ("lora", "heads", "head_dim"), fan_in=cfg.kv_lora_rank,
+    )
+    s["wv_b"] = Spec(
+        (cfg.kv_lora_rank, h, cfg.v_head_dim),
+        ("lora", "heads", "head_dim"), fan_in=cfg.kv_lora_rank,
+    )
+    s["wo"] = Spec(
+        (h, cfg.v_head_dim, d), ("heads", "head_dim", "embed"),
+        fan_in=h * cfg.v_head_dim,
+    )
+    return s
+
+
+def attn_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    return mla_specs(cfg) if cfg.attention == "mla" else gqa_specs(cfg)
+
+
+def gqa_cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Spec]:
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        # Quantized KV cache (per-token-per-head absmax scales): halves the
+        # decode memory-roofline term (EXPERIMENTS.md §Perf).
+        saxes = ("batch", "cache_seq", "kv_heads", None)
+        return {
+            "k": Spec((batch, seq, hkv, hd), axes, init="zeros",
+                      dtype=jnp.int8),
+            "v": Spec((batch, seq, hkv, hd), axes, init="zeros",
+                      dtype=jnp.int8),
+            "k_scale": Spec((batch, seq, hkv, 1), saxes, init="zeros",
+                            dtype=jnp.bfloat16),
+            "v_scale": Spec((batch, seq, hkv, 1), saxes, init="zeros",
+                            dtype=jnp.bfloat16),
+        }
+    return {
+        "k": Spec((batch, seq, hkv, hd), axes, init="zeros"),
+        "v": Spec((batch, seq, hkv, hd), axes, init="zeros"),
+    }
+
+
+def _quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,S,H,D) -> int8 values + (B,S,H,1) bf16 scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), -1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Spec]:
+    return {
+        "c_kv": Spec(
+            (batch, seq, cfg.kv_lora_rank), ("batch", "cache_seq", "lora"),
+            init="zeros",
+        ),
+        "k_rope": Spec(
+            (batch, seq, cfg.qk_rope_dim), ("batch", "cache_seq", "head_dim"),
+            init="zeros",
+        ),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Spec]:
+    if cfg.attention == "mla":
+        return mla_cache_specs(cfg, batch, seq)
+    return gqa_cache_specs(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _mask(b, sq, skv, *, causal, q_offset, kv_len):
+    """(B, Sq, Skv) bool mask.  ``q_offset``/``kv_len`` may be scalars or
+    per-batch (B,) vectors (continuous batching: per-slot fill levels)."""
+    q_offset = jnp.asarray(q_offset)
+    kv_len = jnp.asarray(kv_len)
+    if q_offset.ndim == 0:
+        q_offset = jnp.broadcast_to(q_offset, (b,))
+    if kv_len.ndim == 0:
+        kv_len = jnp.broadcast_to(kv_len, (b,))
+    cols = jnp.arange(skv)
+    mask = cols[None, None, :] >= kv_len[:, None, None]  # cache padding
+    if causal:
+        rows = q_offset[:, None] + jnp.arange(sq)[None, :]     # (B, Sq)
+        mask = mask | (cols[None, None, :] > rows[:, :, None])
+    return mask
+
+
+def _sdpa(
+    q: jnp.ndarray,      # (B, Sq, H, Dq)
+    k: jnp.ndarray,      # (B, Skv, Hkv, Dq)
+    v: jnp.ndarray,      # (B, Skv, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset,            # scalar or (B,): absolute position of q row 0
+    kv_len,              # scalar or (B,): valid kv entries (mask beyond)
+    scale: float,
+) -> jnp.ndarray:
+    """Blockless scaled-dot-product attention with GQA head grouping."""
+    b, sq, h, dq = q.shape
+    _, skv, hkv, dv = v.shape
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, dq)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = _mask(b, sq, skv, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    s = jnp.where(mask[:, None, None], NEG_INF, s)
+    # softmax in f32, probabilities cast down for the PV matmul (halves the
+    # largest live buffer and doubles MXU throughput on TPU).
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, sq, h, dv).astype(v.dtype)
+
+
+def sdpa_chunked(
+    q, k, v, *, causal: bool, q_offset, kv_len, scale: float,
+    chunk: int = PREFILL_CHUNK,
+):
+    """Query-chunked attention for long prefill: python-unrolled so the
+    (Sq_chunk, Skv) score block is the peak intermediate and HLO cost
+    analysis sees every chunk (no inner scan)."""
+    sq = q.shape[1]
+    if sq <= chunk:
+        return _sdpa(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            scale=scale,
+        )
+    outs = []
+    for start in range(0, sq, chunk):
+        stop = min(start + chunk, sq)
+        outs.append(
+            _sdpa(
+                q[:, start:stop], k, v,
+                causal=causal, q_offset=q_offset + start, kv_len=kv_len,
+                scale=scale,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def _update_cache(cache: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write ``new`` (B, S_new, ...) into the cache at offset ``pos``
+    (scalar, or (B,) for per-slot offsets in continuous batching)."""
+    pos_arr = jnp.asarray(pos)
+    if pos_arr.ndim == 1:
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), p, axis=0
+            )
+        )(cache, new, pos_arr)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos, axis=1
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def gqa_attention(
+    p: dict[str, jnp.ndarray],
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    mode: str,                   # train | prefill | decode
+    cache: dict[str, jnp.ndarray] | None,
+    pos,                         # decode: fill level; prefill: write offset
+    positions: jnp.ndarray,      # rope positions (B, S) or (3, B, S)
+    causal: bool = True,
+):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+
+    rot = int(cfg.head_dim * cfg.rotary_pct)
+    if rot:
+        q = q.at[..., :rot].set(rope_for(cfg, q[..., :rot], positions))
+        k = k.at[..., :rot].set(rope_for(cfg, k[..., :rot], positions))
+
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    quantized = cfg.kv_cache_dtype == "int8"
+
+    def write_cache(cache_, k_, v_):
+        if quantized:
+            kq, ks = _quantize_kv(k_)
+            vq, vs = _quantize_kv(v_)
+            return {
+                "k": _update_cache(cache_["k"], kq, pos),
+                "v": _update_cache(cache_["v"], vq, pos),
+                "k_scale": _update_cache(cache_["k_scale"], ks, pos),
+                "v_scale": _update_cache(cache_["v_scale"], vs, pos),
+            }
+        return {
+            "k": _update_cache(cache_["k"], k_, pos),
+            "v": _update_cache(cache_["v"], v_, pos),
+        }
+
+    def read_cache(cache_):
+        if quantized:
+            return (
+                _dequantize_kv(cache_["k"], cache_["k_scale"], x.dtype),
+                _dequantize_kv(cache_["v"], cache_["v_scale"], x.dtype),
+            )
+        return cache_["k"], cache_["v"]
+
+    new_cache = cache
+    if mode == "train":
+        out = sdpa_chunked(
+            q, k, v, causal=causal, q_offset=0, kv_len=s, scale=scale,
+            chunk=TRAIN_CHUNK,
+        )
+    elif mode == "prefill":
+        new_cache = write_cache(cache, k, v)
+        out = sdpa_chunked(
+            q, k, v, causal=causal, q_offset=0, kv_len=s, scale=scale
+        )
+    else:  # decode
+        new_cache = write_cache(cache, k, v)
+        k_full, v_full = read_cache(new_cache)
+        out = _sdpa(
+            q, k_full, v_full,
+            causal=causal, q_offset=pos, kv_len=pos + s, scale=scale,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA layer
+# ---------------------------------------------------------------------------
+
+def mla_attention(
+    p: dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: dict[str, jnp.ndarray] | None,
+    pos,
+    positions: jnp.ndarray,
+):
+    """Multi-head latent attention.  Cache holds the rank-``kv_lora``
+    latent + the shared rope key — the MLA memory saving.  Decode uses the
+    weight-absorbed form (scores and values contracted in latent space)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_for(cfg, q_rope, positions)
+
+    c_kv = rms_norm(x @ p["wkv_a"], p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    k_rope = rope_for(
+        cfg, (x @ p["wk_rope"])[:, :, None, :], positions
+    )[:, :, 0, :]                                                # (B,S,rd)
+
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    if mode in ("train", "prefill"):
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope_d))],
+            -1,
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = sdpa_chunked(
+            q_full, k_full, v, causal=True, q_offset=0, kv_len=s, scale=scale,
+            chunk=PREFILL_CHUNK if mode == "prefill" else TRAIN_CHUNK,
+        )
+        new_cache = cache
+        if mode == "prefill":
+            new_cache = {
+                "c_kv": _update_cache(cache["c_kv"], c_kv, pos),
+                "k_rope": _update_cache(cache["k_rope"], k_rope, pos),
+            }
+    else:  # decode: absorbed form
+        new_cache = {
+            "c_kv": _update_cache(cache["c_kv"], c_kv, pos),
+            "k_rope": _update_cache(cache["k_rope"], k_rope, pos),
+        }
+        ck = new_cache["c_kv"].astype(jnp.float32)     # (B, T, r)
+        kr = new_cache["k_rope"].astype(jnp.float32)   # (B, T, rd)
+        # Absorb wk_b into the query: q_lat (B,S,H,r)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                           p["wk_b"].astype(jnp.float32))
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat, ck)
+            + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), kr)
+        ) * scale
+        t = new_cache["c_kv"].shape[1]
+        mask = _mask(b, s, t, causal=True, q_offset=pos, kv_len=pos + s)
+        scores = jnp.where(mask[:, None], NEG_INF, scores)  # (B,H,S,T)
+        w = jax.nn.softmax(scores, axis=-1)
+        lat = jnp.einsum("bhst,btr->bshr", w, ck)      # latent attention
+        out = jnp.einsum("bshr,rhk->bshk", lat, p["wv_b"].astype(jnp.float32))
+        out = out.astype(x.dtype)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def attention_layer(p, x, cfg, **kw) -> tuple[jnp.ndarray, Any]:
+    if cfg.attention == "mla":
+        return mla_attention(p, x, cfg, **kw)
+    return gqa_attention(p, x, cfg, **kw)

@@ -1,0 +1,107 @@
+"""Shared layer primitives: RMSNorm, RoPE (standard / partial / M-RoPE)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def rms_norm_spec(d: int) -> Spec:
+    return Spec((d,), ("embed",), init="ones", dtype=jnp.float32)
+
+
+def shard_act(x: jnp.ndarray, batch_part):
+    """Activation sharding constraint: pin the batch dim of (B, ...) to the
+    DP mesh axes.  Without this, GSPMD can resolve the FSDP conflict (batch
+    and param-embed both sharded on "data") by gathering the *batch* —
+    catastrophically — instead of the parameters.  No-op outside a mesh
+    context (CPU smoke tests pass batch_part=None)."""
+    if batch_part is None:
+        return x
+    spec = jax.sharding.PartitionSpec(batch_part, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale).astype(x.dtype)
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    """(dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray,            # (B, S, H, D_rot) -- rotary slice only
+    positions: jnp.ndarray,    # (B, S) int32
+    theta: float,
+) -> jnp.ndarray:
+    """Standard rotary embedding on the last dim (interleaved halves)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,            # (B, S, H, D_rot)
+    positions: jnp.ndarray,    # (3, B, S) int32 -- (t, h, w) position streams
+    theta: float,
+    sections: tuple[int, ...],  # per-section half-dims, sum == D_rot/2
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head-dim halves are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  For pure text all three streams are identical => standard RoPE.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    # Build a (B, S, d/2) position tensor by section.
+    parts = []
+    off = 0
+    for sec, stream in zip(sections, positions):
+        parts.append(
+            stream[..., None].astype(jnp.float32)
+            * jnp.ones((sec,), jnp.float32)
+        )
+        off += sec
+    pos_full = jnp.concatenate(parts, -1)            # (B, S, d/2)
+    ang = pos_full * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def rope_for(cfg: ModelConfig, x, positions):
+    """Dispatch: M-RoPE if configured, else standard; partial rotary slices
+    handled by the caller."""
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:  # text-only: replicate stream
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def checkpoint_body(body, cfg):
+    """jax.checkpoint with the configured policy: "full" saves only layer
+    inputs (max recompute, min memory); "dots" saves matmul outputs
+    (no matmul recompute in backward -> fewer FLOPs, more memory)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable
+        )
+    return jax.checkpoint(body)

@@ -1,0 +1,133 @@
+"""Feed-forward layers: SwiGLU MLP and sort-based capacity-buffer MoE.
+
+The MoE dispatch is FLOP-faithful (computes only top-k routed tokens up to a
+per-expert capacity, not a dense all-experts product) and avoids the
+O(tokens x experts x capacity) one-hot dispatch tensors of einsum-style MoE:
+tokens are argsorted by expert id, ranked within their expert segment, and
+scattered into an (E, C, d) compute buffer (drop-on-overflow).  Expert and
+buffer tensors carry the "experts" logical axis so expert parallelism is a
+sharding-rule choice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int, act: str = "swiglu") -> dict[str, Spec]:
+    if act == "gelu":  # whisper-style
+        return {
+            "w_in": Spec((d_model, d_ff), ("embed", "ff"), fan_in=d_model),
+            "w_out": Spec((d_ff, d_model), ("ff", "embed"), fan_in=d_ff),
+        }
+    return {
+        "w_gate": Spec((d_model, d_ff), ("embed", "ff"), fan_in=d_model),
+        "w_up": Spec((d_model, d_ff), ("embed", "ff"), fan_in=d_model),
+        "w_down": Spec((d_ff, d_model), ("ff", "embed"), fan_in=d_ff),
+    }
+
+
+def mlp(p: dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    if "w_in" in p:
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    s = {
+        "router": Spec((d, e), ("embed", "experts"), fan_in=d,
+                       dtype=jnp.float32),
+        "w_gate": Spec((e, d, f), ("experts", "embed", "moe_ff"), fan_in=d),
+        "w_up": Spec((e, d, f), ("experts", "embed", "moe_ff"), fan_in=d),
+        "w_down": Spec((e, f, d), ("experts", "moe_ff", "embed"), fan_in=f),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * cfg.moe_d_ff
+        s["shared"] = mlp_specs(d, fs)
+    return s
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(
+        cfg.top_k * num_tokens / cfg.num_experts * cfg.moe_capacity_factor
+    )
+    return max(cap, 8)
+
+
+def moe(
+    p: dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Sort-based top-k MoE with capacity dropping. x: (B, S, d)."""
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.top_k
+    e = cfg.num_experts
+    cap = _capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    # Routing (fp32 for numerics).
+    logits = xf.astype(jnp.float32) @ p["router"]          # (n, e)
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_i = jax.lax.top_k(probs, k)                  # (n, k)
+    top_w = top_w / top_w.sum(-1, keepdims=True)            # renormalize
+
+    # Rank each (token, k) assignment within its expert segment.
+    flat_e = top_i.reshape(-1)                              # (n*k,)
+    order = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))   # (e,)
+    rank = jnp.arange(n * k) - seg_start[sorted_e]          # within-expert
+    slot = sorted_e * cap + rank                            # (n*k,)
+    valid = rank < cap                                      # capacity drop
+    slot = jnp.where(valid, slot, e * cap)                  # OOB -> dropped
+
+    # Scatter tokens into the (e*cap, d) compute buffer.
+    token_of = order // k                                   # source token
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[token_of], mode="drop")
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # Expert FFNs (batched einsum over the expert dim).
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", gate * up, p["w_down"])
+
+    # Gather back and combine with routing weights.
+    out_flat = out.reshape(e * cap, d)
+    y_sorted = jnp.where(
+        valid[:, None], out_flat[jnp.clip(slot, 0, e * cap - 1)], 0.0
+    )                                                       # (n*k, d)
+    inv = jnp.argsort(order)                                # unsort
+    y = y_sorted[inv].reshape(n, k, d)
+    y = (y * top_w[..., None].astype(y.dtype)).sum(1)       # (n, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(
+    p: dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (mean over layers is added
+    to the training objective)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax(xf.astype(jnp.float32) @ p["router"], -1)
+    top_i = jnp.argmax(probs, -1)
+    me = probs.mean(0)                                      # router prob mass
+    ce = jnp.zeros((cfg.num_experts,)).at[top_i].add(1.0) / xf.shape[0]
+    return cfg.num_experts * (me * ce).sum()

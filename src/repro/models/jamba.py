@@ -1,0 +1,148 @@
+"""Jamba: hybrid Mamba + attention + MoE (arch jamba-v0.1-52b).
+
+32 layers = 4 scanned super-blocks of the period-8 pattern:
+  slot i in 0..7:  mixer = attention at i == attn_layer_offset (4), else Mamba
+                   ffn   = MoE on odd slots, dense MLP on even slots
+(1:7 attention:Mamba interleave, MoE every other layer — paper config
+arXiv:2403.19887).  The super-block is the scan unit, so per-block params /
+caches stack on a leading axis of 4 and HLO contains exactly one block.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn
+from repro.models.common import rms_norm, rms_norm_spec, shard_act
+from repro.models.config import ModelConfig
+from repro.models.mamba import mamba_layer, mamba_specs, mamba_state_specs
+from repro.models.params import Spec, stack_spec_tree
+
+PERIOD = 8
+
+
+def _block_specs(cfg: ModelConfig) -> dict[str, Any]:
+    s: dict[str, Any] = {}
+    for i in range(PERIOD):
+        layer: dict[str, Any] = {"norm": rms_norm_spec(cfg.d_model)}
+        if cfg.is_attn_layer(i):
+            layer["attn"] = attn.attn_specs(cfg)
+        else:
+            layer["mamba"] = mamba_specs(cfg)
+        layer["ffn_norm"] = rms_norm_spec(cfg.d_model)
+        if cfg.is_moe_layer(i):
+            layer["moe"] = ffn.moe_specs(cfg)
+        else:
+            layer["mlp"] = ffn.mlp_specs(cfg.d_model, cfg.d_ff)
+        s[f"l{i}"] = layer
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, Any]:
+    assert cfg.num_layers % PERIOD == 0
+    nblocks = cfg.num_layers // PERIOD
+    return {
+        "embed": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      fan_in=1),
+        "blocks": stack_spec_tree(_block_specs(cfg), nblocks),
+        "final_norm": rms_norm_spec(cfg.d_model),
+        "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        fan_in=cfg.d_model),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Any]:
+    nblocks = cfg.num_layers // PERIOD
+    per_block: dict[str, Any] = {}
+    for i in range(PERIOD):
+        if cfg.is_attn_layer(i):
+            per_block[f"l{i}"] = attn.cache_specs(cfg, batch, seq)
+        else:
+            per_block[f"l{i}"] = mamba_state_specs(cfg, batch)
+    return {"blocks": stack_spec_tree(per_block, nblocks)}
+
+
+def _block_apply(cfg, p_b, x, cache_b, *, mode, pos, positions,
+                 batch_part=None):
+    new_cache = {}
+    for i in range(PERIOD):
+        p_l = p_b[f"l{i}"]
+        cache_l = cache_b[f"l{i}"] if cache_b is not None else None
+        xn = rms_norm(x, p_l["norm"], cfg.norm_eps)
+        if cfg.is_attn_layer(i):
+            h, nc = attn.attention_layer(
+                p_l["attn"], xn, cfg, mode=mode, cache=cache_l, pos=pos,
+                positions=positions,
+            )
+        else:
+            h, nc = mamba_layer(p_l["mamba"], xn, cfg, mode=mode,
+                                state=cache_l)
+        x = shard_act(x + h, batch_part)
+        new_cache[f"l{i}"] = nc
+        xn = rms_norm(x, p_l["ffn_norm"], cfg.norm_eps)
+        if cfg.is_moe_layer(i):
+            x = x + ffn.moe(p_l["moe"], xn, cfg)
+        else:
+            x = x + ffn.mlp(p_l["mlp"], xn)
+        x = shard_act(x, batch_part)
+    return x, new_cache
+
+
+def apply(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: jnp.ndarray,
+    embeds=None,
+    mode: str = "train",
+    cache: dict[str, Any] | None = None,
+    pos: jnp.ndarray | int = 0,
+    remat: bool = True,
+    batch_part=None,
+):
+    from repro.models.transformer import _positions
+
+    x = shard_act(params["embed"][tokens], batch_part)
+    b, s = tokens.shape
+    positions = _positions(pos, b, s)
+
+    def body(x, xs):
+        p_b, cache_b = xs
+        return _block_apply(
+            cfg, p_b, x, cache_b, mode=mode, pos=pos, positions=positions,
+            batch_part=batch_part,
+        )
+
+    if mode == "train" and remat:
+        from repro.models.common import checkpoint_body
+        body = checkpoint_body(body, cfg)
+
+    if cfg.unroll_layers:
+        from repro.models.transformer import _unrolled_layers
+        x, new_blocks = _unrolled_layers(
+            body, x, params["blocks"],
+            cache["blocks"] if cache is not None else None,
+        )
+        new_cache = {"blocks": new_blocks} if cache is not None else None
+    elif cache is not None:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+    else:
+        def body_nc(x, p_b):
+            x, _ = body(x, (p_b, None))
+            return x, None
+        x, _ = jax.lax.scan(body_nc, x, params["blocks"])
+        new_cache = None
+
+    if mode == "prefill":
+        # next-token logits only: a 32k-token fp32 logit tensor is O(100 GB)
+        # of vocab-head compute and output traffic nobody reads.
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache

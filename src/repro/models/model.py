@@ -1,0 +1,126 @@
+"""Unified model API: build(cfg) -> Model with init / apply / caches /
+input_specs, dispatching on architecture family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import jamba, rwkv, transformer, whisper
+from repro.models.config import ModelConfig, ShapeCell
+from repro.models.params import (
+    Spec,
+    abstract_params,
+    count_params,
+    init_params,
+    pspec_tree,
+    sharding_tree,
+)
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv,
+    "hybrid": jamba,
+    "audio": whisper,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Any
+    apply_fn: Callable
+
+    # ---- params ----
+    def init(self, key: jax.Array):
+        return init_params(self.param_specs, key, self._dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_specs, self._dtype)
+
+    def num_params(self) -> int:
+        return count_params(self.param_specs)
+
+    def param_shardings(self, mesh, rules):
+        return sharding_tree(self.param_specs, mesh, rules)
+
+    def param_pspecs(self, rules):
+        return pspec_tree(self.param_specs, rules)
+
+    @property
+    def _dtype(self):
+        return jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+
+    # ---- caches ----
+    def cache_specs(self, batch: int, seq: int):
+        return _FAMILY_MODULES[self.cfg.family].cache_specs(
+            self.cfg, batch, seq
+        )
+
+    def abstract_cache(self, batch: int, seq: int):
+        return abstract_params(self.cache_specs(batch, seq), self._dtype)
+
+    def init_cache(self, batch: int, seq: int):
+        specs = self.cache_specs(batch, seq)
+        return init_params(specs, jax.random.PRNGKey(0), self._dtype)
+
+    # ---- forward ----
+    def apply(self, params, **kw):
+        return self.apply_fn(params, self.cfg, **kw)
+
+    # ---- assignment input shapes ----
+    def input_specs(self, cell: ShapeCell) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell
+        (weak-type-correct, shardable, no device allocation)."""
+        cfg = self.cfg
+        b = cell.global_batch
+        s = cell.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        def tok(shape):
+            return sds(shape, i32)
+
+        if cell.kind == "train":
+            specs: dict[str, Any] = {}
+            if cfg.embeds_input:
+                specs["embeds"] = sds((b, s, cfg.d_model), self._dtype)
+            else:
+                specs["tokens"] = tok((b, s))
+            if cfg.family == "audio":
+                specs["enc_frames"] = sds(
+                    (b, cfg.encoder_seq, cfg.d_model), self._dtype
+                )
+            specs["labels"] = tok((b, s))
+            return specs
+        if cell.kind == "prefill":
+            specs = {}
+            if cfg.embeds_input:
+                specs["embeds"] = sds((b, s, cfg.d_model), self._dtype)
+            else:
+                specs["tokens"] = tok((b, s))
+            if cfg.family == "audio":
+                specs["enc_frames"] = sds(
+                    (b, cfg.encoder_seq, cfg.d_model), self._dtype
+                )
+            return specs
+        # decode: one new token against a cache of length s
+        specs = {
+            "tokens": tok((b, 1)),
+            "cache": self.abstract_cache(b, s),
+            "pos": sds((), i32),
+        }
+        if cfg.embeds_input:
+            specs["embeds"] = sds((b, 1, cfg.d_model), self._dtype)
+            del specs["tokens"]
+        return specs
+
+
+def build(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    return Model(cfg=cfg, param_specs=mod.param_specs(cfg), apply_fn=mod.apply)

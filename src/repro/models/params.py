@@ -1,0 +1,162 @@
+"""Parameter specs: one declaration drives init, abstract shapes, and
+logical-axis sharding (MaxText-style logical->mesh rules)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis name per dim
+    init: str = "normal"               # normal | zeros | ones | scaled
+    fan_in: int | None = None          # for "scaled": stddev = 1/sqrt(fan_in)
+    dtype: Any = None                  # override (e.g. fp32 for norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+PyTree = Any
+
+
+def tree_specs_map(fn: Callable[[Spec], Any], specs: PyTree) -> PyTree:
+    return jax.tree.map(fn, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def init_params(specs: PyTree, key: jax.Array, default_dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def make(spec: Spec, k):
+        dt = spec.dtype or default_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        fan = spec.fan_in or (spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+        std = 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: PyTree, default_dtype=jnp.bfloat16):
+    return tree_specs_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype), specs
+    )
+
+
+def partition_spec(spec: Spec, rules: dict[str, str | tuple | None]) -> PartitionSpec:
+    return PartitionSpec(*(rules.get(a) if a else None for a in spec.axes))
+
+
+def _axis_size(mesh: Mesh, part) -> int:
+    if part is None:
+        return 1
+    if isinstance(part, (tuple, list)):
+        n = 1
+        for p in part:
+            n *= mesh.shape[p]
+        return n
+    return mesh.shape[part]
+
+
+def sanitize_partition_spec(
+    spec: Spec, rules: dict, mesh: Mesh
+) -> PartitionSpec:
+    """Partition spec with divisibility repair ("axis spill").
+
+    GQA head counts (4..48), some vocab sizes, and whisper's 1500-frame
+    cross cache don't divide a 16-way mesh axis.  Rather than rely on GSPMD
+    padding for parameters (memory-hostile) we *spill*: a mesh axis whose
+    target dim is indivisible moves to the first other dim of the same
+    tensor that divides it and is not yet sharded on that axis; if none
+    exists the axis is dropped (replicated).  Deterministic, per-tensor, and
+    logged into the spec so the dry-run report shows what moved.
+    """
+    parts = [rules.get(a) if a else None for a in spec.axes]
+
+    def mesh_axes_of(part):
+        if part is None:
+            return []
+        return list(part) if isinstance(part, (tuple, list)) else [part]
+
+    # Pass 1: strip mesh axes that don't divide their dim, or that an
+    # earlier dim of this tensor already uses (a mesh axis may appear only
+    # once per PartitionSpec).
+    homeless: list[str] = []
+    used: set[str] = set()
+    for i, part in enumerate(parts):
+        axes = mesh_axes_of(part)
+        kept = []
+        size = spec.shape[i]
+        for ax in axes:
+            if ax in used:
+                continue  # duplicate across dims: drop silently
+            n = mesh.shape[ax]
+            combined = n
+            for k in kept:
+                combined *= mesh.shape[k]
+            if size % combined == 0:
+                kept.append(ax)
+                used.add(ax)
+            else:
+                homeless.append(ax)
+        parts[i] = tuple(kept) if len(kept) > 1 else (kept[0] if kept else None)
+
+    # Pass 2: re-home stripped axes on other dims (never duplicating a mesh
+    # axis already used by this tensor).
+    for ax in homeless:
+        if ax in used:
+            continue
+        for i, part in enumerate(parts):
+            current = _axis_size(mesh, part)
+            if spec.shape[i] % (current * mesh.shape[ax]) == 0:
+                axes = mesh_axes_of(part) + [ax]
+                parts[i] = tuple(axes) if len(axes) > 1 else axes[0]
+                used.add(ax)
+                break
+        # not placeable -> replicated on that axis (dropped)
+    return PartitionSpec(*parts)
+
+
+def sharding_tree(specs: PyTree, mesh: Mesh, rules: dict) -> PyTree:
+    return tree_specs_map(
+        lambda s: NamedSharding(mesh, sanitize_partition_spec(s, rules, mesh)),
+        specs,
+    )
+
+
+def pspec_tree(specs: PyTree, rules: dict) -> PyTree:
+    return tree_specs_map(lambda s: partition_spec(s, rules), specs)
+
+
+def count_params(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, Spec))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_layers(spec: Spec, num_layers: int) -> Spec:
+    """Add a leading scanned-layers dim (never sharded)."""
+    return dataclasses.replace(
+        spec,
+        shape=(num_layers, *spec.shape),
+        axes=("layers", *spec.axes),
+    )
+
+
+def stack_spec_tree(specs: PyTree, num_layers: int) -> PyTree:
+    return tree_specs_map(lambda s: stack_layers(s, num_layers), specs)

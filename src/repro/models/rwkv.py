@@ -1,0 +1,264 @@
+"""RWKV-6 "Finch" (data-dependent decay linear attention) — arch rwkv6-3b.
+
+Attention-free: per-head (hs x hs) state instead of a KV cache, which is what
+makes the long_500k cell O(1) in context length.  The chunked recurrence
+mirrors kernels/linrec (the Pallas TPU kernel); this jnp path is used inside
+pjit for training/dry-run (chunk loop via lax.scan; the small FLOPs remainder
+hidden from HLO cost analysis is restored analytically — see
+launch/hlo_analysis.inner_recurrence_flops).
+
+Deviation from upstream RWKV: LayerNorm is replaced by RMSNorm (consistent
+with the rest of the zoo; capacity-neutral).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm, rms_norm_spec, shard_act
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+from repro.models.scan_utils import pick_chunk, unrolled_chunk_scan
+
+# Mix components order: r, k, v, w (decay), g (gate)
+_N_MIX = 5
+
+
+def rwkv_layer_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    d, dff = cfg.d_model, cfg.d_ff
+    h, hs = cfg.rwkv_heads, cfg.rwkv_head_size
+    m, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    return {
+        "ln1": rms_norm_spec(d),
+        "ln2": rms_norm_spec(d),
+        # time-mix (ddlerp) parameters
+        "mu_base": Spec((d,), ("embed",), init="zeros"),
+        "mu": Spec((_N_MIX, d), (None, "embed"), init="zeros"),
+        "mix_a": Spec((d, _N_MIX * m), ("embed", None), fan_in=d),
+        "mix_b": Spec((_N_MIX, m, d), (None, None, "embed"), fan_in=m),
+        # data-dependent decay
+        "w0": Spec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "wa": Spec((d, ld), ("embed", None), fan_in=d),
+        "wb": Spec((ld, d), (None, "embed"), fan_in=ld),
+        # projections
+        "wr": Spec((d, d), ("embed", "ff"), fan_in=d),
+        "wk": Spec((d, d), ("embed", "ff"), fan_in=d),
+        "wv": Spec((d, d), ("embed", "ff"), fan_in=d),
+        "wg": Spec((d, d), ("embed", "ff"), fan_in=d),
+        "u": Spec((h, hs), (None, None), init="zeros", dtype=jnp.float32),
+        "ln_x": Spec((d,), ("embed",), init="ones", dtype=jnp.float32),
+        "wo": Spec((d, d), ("ff", "embed"), fan_in=d),
+        # channel-mix
+        "cmix_k": Spec((d,), ("embed",), init="zeros"),
+        "cmix_r": Spec((d,), ("embed",), init="zeros"),
+        "cwk": Spec((d, dff), ("embed", "ff"), fan_in=d),
+        "cwv": Spec((dff, d), ("ff", "embed"), fan_in=dff),
+        "cwr": Spec((d, d), ("embed", "ff"), fan_in=d),
+    }
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int) -> dict[str, Spec]:
+    d, h, hs = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_size
+    return {
+        "att_shift": Spec((batch, d), ("batch", "embed"), init="zeros"),
+        "ffn_shift": Spec((batch, d), ("batch", "embed"), init="zeros"),
+        "s": Spec((batch, h, hs, hs), ("batch", None, None, None),
+                  init="zeros", dtype=jnp.float32),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      fan_in=1),
+        "layers": _stack(rwkv_layer_specs(cfg), cfg.num_layers),
+        "final_norm": rms_norm_spec(cfg.d_model),
+        "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        fan_in=cfg.d_model),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    del seq  # attention-free: O(1) state regardless of context length
+    return {"layers": _stack(rwkv_state_specs(cfg, batch), cfg.num_layers)}
+
+
+def _stack(specs, n):
+    from repro.models.params import stack_spec_tree
+
+    return stack_spec_tree(specs, n)
+
+
+def apply(
+    params: dict,
+    cfg: ModelConfig,
+    *,
+    tokens: jnp.ndarray,
+    embeds=None,
+    mode: str = "train",
+    cache: dict | None = None,
+    pos=0,
+    remat: bool = True,
+    batch_part=None,
+):
+    x = shard_act(params["embed"][tokens], batch_part)
+
+    def body(x, xs):
+        p_l, state_l = xs
+        x, st = rwkv_layer(p_l, x, cfg, mode=mode, state=state_l)
+        return shard_act(x, batch_part), st
+
+    if mode == "train" and remat:
+        from repro.models.common import checkpoint_body
+        body = checkpoint_body(body, cfg)
+
+    if cfg.unroll_layers:
+        from repro.models.transformer import _unrolled_layers
+        x, new_states = _unrolled_layers(
+            body, x, params["layers"],
+            cache["layers"] if cache is not None else None,
+        )
+        new_cache = {"layers": new_states} if cache is not None else None
+    elif cache is not None:
+        x, new_states = jax.lax.scan(body, x, (params["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_states}
+    else:
+        def body_nc(x, p_l):
+            x, _ = body(x, (p_l, None))
+            return x, None
+        x, _ = jax.lax.scan(body_nc, x, params["layers"])
+        new_cache = None
+
+    if mode == "prefill":
+        # next-token logits only: a 32k-token fp32 logit tensor is O(100 GB)
+        # of vocab-head compute and output traffic nobody reads.
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None) -> jnp.ndarray:
+    """xs_t = x_{t-1}; first position takes ``prev`` (decode carry) or 0."""
+    first = (
+        jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    )
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _chunked_wkv(r, k, v, logw, u, s0, chunk):
+    """Chunked linear attention (jnp mirror of kernels/linrec).
+    r,k,v,logw: (B, T, H, hs) fp32; u (H, hs); s0 (B, H, hs, hs)."""
+    b, t, h, hs = r.shape
+    nchunks = t // chunk
+
+    def body(s, xs):
+        r_c, k_c, v_c, lw_c = xs                        # (B, L, H, hs)
+        cum = jnp.cumsum(lw_c, axis=1)
+        cumprev = cum - lw_c
+        y_state = jnp.einsum("blhi,bhij->blhj", r_c * jnp.exp(cumprev), s)
+        decay = jnp.exp(cumprev[:, :, None] - cum[:, None, :])  # (B,L,M,H,hs)
+        att = jnp.einsum("blhi,bmhi,blmhi->bhlm", r_c, k_c, decay)
+        li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        att = jnp.where((li > mi)[None, None], att, 0.0)
+        diag = jnp.einsum("blhi,hi,blhi->blh", r_c, u, k_c)
+        y = y_state + jnp.einsum("bhlm,bmhj->blhj", att, v_c) \
+            + diag[..., None] * v_c
+        total = cum[:, -1]                              # (B, H, hs)
+        k_dec = k_c * jnp.exp(total[:, None] - cum)
+        s_new = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "blhi,blhj->bhij", k_dec, v_c
+        )
+        return s_new, y
+
+    def chunked(z):
+        return z.reshape(b, nchunks, chunk, h, hs).swapaxes(0, 1)
+
+    s_final, ys = unrolled_chunk_scan(
+        body, s0, (chunked(r), chunked(k), chunked(v), chunked(logw))
+    )
+    return ys.swapaxes(0, 1).reshape(b, t, h, hs), s_final
+
+
+def rwkv_layer(
+    p: dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    state: dict[str, jnp.ndarray] | None,
+):
+    b, t, d = x.shape
+    h, hs = cfg.rwkv_heads, cfg.rwkv_head_size
+    dtype = x.dtype
+
+    # ---- time mix ----
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    prev_att = state["att_shift"] if (state is not None and mode == "decode") \
+        else None
+    xs = _token_shift(xn, prev_att)
+    dx = xs - xn
+    base = xn + dx * p["mu_base"][None, None].astype(dtype)
+    z = jnp.tanh(base @ p["mix_a"]).reshape(b, t, _N_MIX, cfg.rwkv_lora_mix)
+    offs = jnp.einsum("btfm,fmd->btfd", z, p["mix_b"])      # (B,T,5,d)
+    comps = [
+        xn + dx * (p["mu"][i][None, None].astype(dtype) + offs[:, :, i])
+        for i in range(_N_MIX)
+    ]
+    x_r, x_k, x_v, x_w, x_g = comps
+
+    f32 = jnp.float32
+    w_raw = p["w0"] + jnp.tanh(x_w.astype(f32) @ p["wa"].astype(f32)) \
+        @ p["wb"].astype(f32)
+    logw = -jnp.exp(jnp.clip(w_raw, -20.0, 10.0))           # (B,T,d) <= 0
+    r = (x_r @ p["wr"]).reshape(b, t, h, hs).astype(f32)
+    k = (x_k @ p["wk"]).reshape(b, t, h, hs).astype(f32)
+    v = (x_v @ p["wv"]).reshape(b, t, h, hs).astype(f32)
+    g = x_g @ p["wg"]
+    logw = logw.reshape(b, t, h, hs)
+
+    s0 = (
+        state["s"].astype(f32)
+        if (state is not None and mode == "decode")
+        else jnp.zeros((b, h, hs, hs), f32)
+    )
+    u = p["u"].astype(f32)
+
+    if mode == "decode" and t == 1:
+        kv = k[:, 0, :, :, None] * v[:, 0, :, None, :]
+        att = s0 + u[None, :, :, None] * kv
+        y = jnp.einsum("bhi,bhij->bhj", r[:, 0], att)[:, None]
+        s_new = jnp.exp(logw[:, 0])[..., None] * s0 + kv
+    else:
+        # chunk^2 decay tensor bounds max_chunk; target few unrolled iters
+        chunk = pick_chunk(t, target_iters=32, max_chunk=256)
+        y, s_new = _chunked_wkv(r, k, v, logw, u, s0, chunk)
+
+    # per-head group norm
+    yh = y.reshape(b, t, h, hs)
+    yh = yh * jax.lax.rsqrt((yh * yh).mean(-1, keepdims=True) + cfg.norm_eps)
+    y = (yh.reshape(b, t, d) * p["ln_x"][None, None]).astype(dtype)
+    att_out = (y * jax.nn.silu(g)) @ p["wo"]
+    x = x + att_out
+
+    # ---- channel mix ----
+    xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    prev_ffn = state["ffn_shift"] if (state is not None and mode == "decode") \
+        else None
+    xs2 = _token_shift(xn2, prev_ffn)
+    dx2 = xs2 - xn2
+    xk = xn2 + dx2 * p["cmix_k"][None, None].astype(dtype)
+    xr = xn2 + dx2 * p["cmix_r"][None, None].astype(dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cwk"]))
+    ffn_out = jax.nn.sigmoid(xr @ p["cwr"]) * (kk @ p["cwv"])
+    x = x + ffn_out
+
+    new_state = {
+        "att_shift": xn[:, -1].astype(dtype),
+        "ffn_shift": xn2[:, -1].astype(dtype),
+        "s": s_new,
+    }
+    return x, new_state

@@ -1,0 +1,51 @@
+"""Chunked-scan helper.
+
+XLA's HLO cost analysis counts a `while` body once, regardless of trip
+count.  The dry-run's L1/L2 delta method corrects the *layer* dimension by
+unrolling layers; the inner per-layer chunk recurrences (Mamba/RWKV) stay as
+``lax.scan`` (unrolling them exploded trace/compile time ~20x via
+associative_scan expansion), and the small FLOPs remainder they hide —
+measured <5% of a Mamba/RWKV layer, dominated by projections — is added
+back analytically (`hlo_analysis.inner_recurrence_flops`, documented in
+EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+MAX_UNROLL = 512
+
+
+def unrolled_chunk_scan(
+    body: Callable[[Any, Any], tuple[Any, Any]],
+    carry: Any,
+    xs: Any,
+    *,
+    axis: int = 0,
+) -> tuple[Any, Any]:
+    """Scan over the leading axis of ``xs`` leaves via lax.scan.
+
+    body(carry, x_slice) -> (carry, y_slice); ys are stacked on ``axis``.
+    (Name kept from the earlier python-unrolled implementation; see module
+    docstring for why this is a lax.scan now.)
+    """
+    if axis != 0:
+        xs = jax.tree.map(lambda a: jnp.moveaxis(a, axis, 0), xs)
+    carry, ys = jax.lax.scan(body, carry, xs)
+    if axis != 0:
+        ys = jax.tree.map(lambda a: jnp.moveaxis(a, 0, axis), ys)
+    return carry, ys
+
+
+def pick_chunk(seq_len: int, *, target_iters: int = 64, min_chunk: int = 32,
+               max_chunk: int = 1024) -> int:
+    """Chunk length giving ~target_iters unrolled iterations, divisor-aligned."""
+    chunk = max(min_chunk, min(max_chunk, -(-seq_len // target_iters)))
+    # round up to a multiple of min_chunk that divides seq_len if possible
+    while seq_len % chunk and chunk < max_chunk:
+        chunk += 1
+    return min(chunk, seq_len)

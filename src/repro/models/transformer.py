@@ -1,0 +1,197 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone families).
+
+Layers are scanned with stacked parameters (O(1) HLO in depth); optional
+unscanned prefix layers cover heterogeneous stacks (DeepSeek's first dense
+layer).  The KV cache rides through the layer scan as scanned inputs/outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn
+from repro.models.common import rms_norm, rms_norm_spec, shard_act
+from repro.models.config import ModelConfig
+from repro.models.params import Spec, stack_spec_tree
+
+
+def _layer_specs(cfg: ModelConfig, moe_layer: bool) -> dict[str, Any]:
+    s: dict[str, Any] = {
+        "attn_norm": rms_norm_spec(cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "mlp_norm": rms_norm_spec(cfg.d_model),
+    }
+    if moe_layer:
+        s["moe"] = ffn.moe_specs(cfg)
+    else:
+        d_ff = cfg.d_ff
+        s["mlp"] = ffn.mlp_specs(cfg.d_model, d_ff)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, Any]:
+    n_scanned = cfg.num_layers - cfg.first_dense_layers
+    moe = cfg.num_experts > 0
+    specs: dict[str, Any] = {}
+    if not cfg.embeds_input:
+        specs["embed"] = Spec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), fan_in=1
+        )
+    if cfg.first_dense_layers:
+        specs["prefix"] = [
+            _layer_specs(cfg, moe_layer=False)
+            for _ in range(cfg.first_dense_layers)
+        ]
+    specs["layers"] = stack_spec_tree(
+        _layer_specs(cfg, moe_layer=moe), n_scanned
+    )
+    specs["final_norm"] = rms_norm_spec(cfg.d_model)
+    specs["lm_head"] = Spec(
+        (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), fan_in=cfg.d_model
+    )
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Any]:
+    n_scanned = cfg.num_layers - cfg.first_dense_layers
+    per_layer = attn.cache_specs(cfg, batch, seq)
+    out: dict[str, Any] = {
+        "layers": stack_spec_tree(per_layer, n_scanned),
+    }
+    if cfg.first_dense_layers:
+        out["prefix"] = [
+            attn.cache_specs(cfg, batch, seq)
+            for _ in range(cfg.first_dense_layers)
+        ]
+    return out
+
+
+def _layer_apply(cfg, p_l, x, cache_l, *, mode, pos, positions, moe_layer,
+                 batch_part=None):
+    h, new_cache = attn.attention_layer(
+        p_l["attn"],
+        rms_norm(x, p_l["attn_norm"], cfg.norm_eps),
+        cfg, mode=mode, cache=cache_l, pos=pos, positions=positions,
+    )
+    x = shard_act(x + h, batch_part)
+    xn = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+    if moe_layer:
+        x = x + ffn.moe(p_l["moe"], xn, cfg)
+    else:
+        x = x + ffn.mlp(p_l["mlp"], xn)
+    return shard_act(x, batch_part), new_cache
+
+
+def apply(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: jnp.ndarray | None = None,    # (B, S) int32
+    embeds: jnp.ndarray | None = None,    # (B, S, d) for embeds_input archs
+    mode: str = "train",
+    cache: dict[str, Any] | None = None,
+    pos: jnp.ndarray | int = 0,
+    remat: bool = True,
+    batch_part=None,
+):
+    """Returns (logits (B,S,V) fp32, new_cache)."""
+    if cfg.embeds_input:
+        x = embeds
+        b, s, _ = x.shape
+    else:
+        x = params["embed"][tokens]
+        b, s = tokens.shape
+    x = shard_act(x, batch_part)
+
+    positions = _positions(pos, b, s)
+
+    moe = cfg.num_experts > 0
+
+    new_prefix_caches = []
+    if cfg.first_dense_layers:
+        for i, p_l in enumerate(params["prefix"]):
+            cache_l = cache["prefix"][i] if cache is not None else None
+            x, nc = _layer_apply(
+                cfg, p_l, x, cache_l, mode=mode, pos=pos,
+                positions=positions, moe_layer=False, batch_part=batch_part,
+            )
+            new_prefix_caches.append(nc)
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        return _layer_apply(
+            cfg, p_l, x, cache_l, mode=mode, pos=pos,
+            positions=positions, moe_layer=moe, batch_part=batch_part,
+        )
+
+    if mode == "train" and remat:
+        from repro.models.common import checkpoint_body
+        body = checkpoint_body(body, cfg)
+
+    if cfg.unroll_layers:
+        x, new_layer_caches = _unrolled_layers(
+            body, x, params["layers"],
+            cache["layers"] if cache is not None else None,
+        )
+    elif cache is not None:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"])
+        )
+    else:
+        x, _ = jax.lax.scan(
+            functools.partial(_no_cache_body, body), x, params["layers"]
+        )
+        new_layer_caches = None
+
+    if mode == "prefill":
+        # next-token logits only: a 32k-token fp32 logit tensor is O(100 GB)
+        # of vocab-head compute and output traffic nobody reads.
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layer_caches}
+        if cfg.first_dense_layers:
+            new_cache["prefix"] = new_prefix_caches
+    return logits, new_cache
+
+
+def _no_cache_body(body, x, p_l):
+    x, _ = body(x, (p_l, None))
+    return x, None
+
+
+def _positions(pos, b: int, s: int) -> jnp.ndarray:
+    """(B, S) absolute positions from scalar or per-batch (B,) offsets."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        return pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return jnp.broadcast_to(
+        pos + jnp.arange(s, dtype=jnp.int32)[None, :], (b, s)
+    )
+
+
+def _unrolled_layers(body, x, stacked_params, stacked_cache):
+    """Python-unrolled equivalent of the layer scan (see config.unroll_layers)."""
+    num = jax.tree.leaves(stacked_params)[0].shape[0]
+    new_caches = []
+    for i in range(num):
+        p_l = jax.tree.map(lambda a: a[i], stacked_params)
+        c_l = (
+            jax.tree.map(lambda a: a[i], stacked_cache)
+            if stacked_cache is not None else None
+        )
+        x, nc = body(x, (p_l, c_l))
+        new_caches.append(nc)
+    if stacked_cache is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *new_caches)
+    else:
+        stacked = None
+    return x, stacked

@@ -1,0 +1,128 @@
+"""Serving engine: continuous batching over a fixed slot pool.
+
+One engine replica = one jit'd (prefill, decode) pair over a slotted KV
+cache.  Requests are admitted into free slots (prefilled individually into
+their slot), every engine tick decodes ALL active slots in one batched step,
+finished sequences free their slots.  Replica counts are managed by the
+free-pool autoscaler (serve/autoscaler.py, paper §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, *, num_slots: int, cache_len: int):
+        self.model = model
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.cache = model.init_cache(num_slots, cache_len)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int32)
+        self.slot_limit = np.zeros(num_slots, np.int32)
+
+        def decode_step(params, cache, tokens, pos_vec):
+            # batched decode: every slot advances by one token.  Each slot
+            # has its own fill level; we decode with per-slot positions by
+            # using the max position mask trick (positions padded safely).
+            logits, new_cache = model.apply(
+                params, tokens=tokens, mode="decode", cache=cache,
+                pos=pos_vec,
+            )
+            return logits, new_cache
+
+        self._decode = jax.jit(decode_step)
+
+        def _batch_axis(c_shape, nc_shape):
+            # cache leaves are (L, B, ...) or (B, ...): the batch axis is the
+            # first axis where pool cache (B=num_slots) and single-slot
+            # result (B=1) disagree.
+            for ax, (a, b) in enumerate(zip(c_shape, nc_shape)):
+                if a != b:
+                    return ax
+            raise ValueError(f"no batch axis: {c_shape} vs {nc_shape}")
+
+        def prefill_one(params, cache, tokens, slot):
+            # prefill into a fresh single-slot cache, then merge that slot
+            # into the pool cache (other slots untouched).
+            single = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                model.abstract_cache(1, cache_len),
+            )
+            logits, new_single = model.apply(
+                params, tokens=tokens, mode="prefill", cache=single, pos=0,
+            )
+
+            def merge(c, nc):
+                if c.shape == nc.shape:  # num_slots == 1: whole leaf
+                    return nc.astype(c.dtype)
+                ax = _batch_axis(c.shape, nc.shape)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, nc.astype(c.dtype), slot, axis=ax
+                )
+
+            return logits, jax.tree.map(merge, cache, new_single)
+
+        self._prefill = jax.jit(prefill_one, static_argnums=())
+
+    # ------------------------------------------------------------ admission
+    def try_admit(self, params, req: Request) -> bool:
+        for slot, occupant in enumerate(self.slot_req):
+            if occupant is None:
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, self.cache = self._prefill(
+                    params, self.cache, tokens, slot
+                )
+                first = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(first)
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = len(req.prompt)
+                self.slot_limit[slot] = len(req.prompt) + req.max_new_tokens
+                return True
+        return False
+
+    @property
+    def active_slots(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # ----------------------------------------------------------------- tick
+    def tick(self, params):
+        """One decode step for every active slot."""
+        if self.active_slots == 0:
+            return
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                tokens[slot, 0] = req.generated[-1]
+        # per-slot fill levels: the decode step supports vector pos
+        # (continuous batching with heterogeneous positions).
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode(
+            params, self.cache, jnp.asarray(tokens), pos
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[slot]))
+            self.slot_pos[slot] += 1
+            if self.slot_pos[slot] >= self.slot_limit[slot]:
+                req.done = True
+                self.slot_req[slot] = None

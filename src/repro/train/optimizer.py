@@ -1,0 +1,92 @@
+"""AdamW with fp32 master weights and sharded optimizer state.
+
+Optimizer state mirrors the parameter tree (same logical axes), so the
+FSDP x TP sharding of params applies verbatim to m/v/master — the memory
+math that lets jamba-52B train on 256 chips (see DESIGN §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params: Any) -> dict[str, Any]:
+    # copy=True: fp32 param leaves (norm scales) must not alias the master
+    # copy, or buffer donation sees the same buffer twice.
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)  # noqa: E731
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: dict[str, Any], cfg: AdamWConfig
+) -> tuple[Any, dict[str, Any]]:
+    """Returns (new bf16 params, new opt state)."""
+    step = opt_state["step"]
+    lr = _schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        w_new = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return m_new, v_new, w_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_w = jax.tree.leaves(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_w = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    # bf16 working copy for the forward pass
+    orig_dtypes = jax.tree.map(lambda g: g.dtype, grads)
+    new_params = jax.tree.map(lambda w, d: w.astype(d), new_w, orig_dtypes)
+    new_state = {
+        "master": new_w, "m": new_m, "v": new_v, "step": step + 1,
+    }
+    return new_params, new_state

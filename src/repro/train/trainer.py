@@ -1,0 +1,146 @@
+"""Trainer: the production loop — jit'd step, checkpoint/restart, straggler
+watchdog, elastic re-mesh restore, deterministic data resume.
+
+Fault-tolerance model (single-host container, cluster-shaped logic):
+  * `fit` periodically checkpoints (async) params+opt+data-state; a crash at
+    any point resumes from the newest complete checkpoint (atomic renames
+    guarantee completeness) and the data pipeline skips ahead
+    deterministically — verified bit-exact in tests/test_fault_tolerance.py;
+  * the straggler watchdog compares each step's wall time against a running
+    EMA; slow steps past `straggler_factor` raise a counter and trigger the
+    (pluggable) mitigation hook — on a real cluster that hook re-assigns the
+    data shard / evicts the slow host; here it is observable state tests
+    assert on;
+  * elastic re-mesh: `CheckpointManager.restore(..., shardings=...)` places
+    saved full arrays onto any new mesh; the Trainer just rebuilds its jit
+    with the new shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import build_train_step, init_train_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_ema: float = 0.9
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float, ema: float):
+        self.factor = factor
+        self.ema_coef = ema
+        self.ema: float | None = None
+        self.flagged_steps: list[int] = []
+        self.mitigations = 0
+
+    def observe(self, step: int, dt: float,
+                mitigate: Callable[[], None] | None = None):
+        if self.ema is None:
+            self.ema = dt
+            return False
+        slow = dt > self.factor * self.ema
+        if slow:
+            self.flagged_steps.append(step)
+            self.mitigations += 1
+            if mitigate is not None:
+                mitigate()
+        # slow steps don't poison the EMA
+        self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * (
+            min(dt, self.factor * self.ema)
+        )
+        return slow
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        pipeline: TokenPipeline,
+        cfg: TrainerConfig,
+        ckpt_dir: str,
+        *,
+        shardings: Any | None = None,
+        donate: bool = True,
+    ):
+        self.model = model
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.watchdog = StragglerWatchdog(
+            cfg.straggler_factor, cfg.straggler_ema
+        )
+        step_fn = build_train_step(model, cfg.opt)
+        jit_kw = {}
+        if donate:
+            jit_kw["donate_argnums"] = (0, 1)
+        self.step_fn = jax.jit(step_fn, **jit_kw)
+        self.losses: list[float] = []
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+
+    # ------------------------------------------------------------ lifecycle
+    def init_or_restore(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params, opt_state = init_train_state(self.model, key)
+        restored = self.ckpt.restore_latest(
+            {"params": params, "opt": opt_state}
+        )
+        if restored is None:
+            self.params, self.opt_state, self.step = params, opt_state, 0
+        else:
+            step, tree, meta = restored
+            self.params, self.opt_state = tree["params"], tree["opt"]
+            self.step = step
+            self.pipeline.skip_to(meta.get("data_step", step))
+        return self.step
+
+    def _checkpoint(self):
+        self.ckpt.save_async(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            metadata={"data_step": self.pipeline.step,
+                      "losses_tail": self.losses[-5:]},
+        )
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, max_steps: int | None = None,
+            fail_at_step: int | None = None):
+        """Run to cfg.total_steps.  ``fail_at_step`` injects a crash for the
+        fault-tolerance tests."""
+        total = max_steps or self.cfg.total_steps
+        while self.step < total:
+            if fail_at_step is not None and self.step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            batch_np = self.pipeline.next_batch()
+            batch = jax.tree.map(jax.numpy.asarray, batch_np)
+            t0 = time.perf_counter()
+            loss, self.params, self.opt_state = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(loss)
+            dt = time.perf_counter() - t0
+            self.watchdog.observe(self.step, dt)
+            self.losses.append(loss)
+            self.step += 1
+            if self.step % self.cfg.ckpt_every == 0:
+                self._checkpoint()
+        self.ckpt.wait()
+        return self.losses

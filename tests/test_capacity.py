@@ -1,0 +1,85 @@
+"""Capacity layer: pricing tables, fleet simulation, end-to-end planning,
+deferrable-workload scheduling."""
+
+import numpy as np
+import pytest
+
+from repro.capacity import pricing
+from repro.capacity.scheduler import default_workloads, schedule
+from repro.capacity.simulator import (
+    ServingFleet,
+    TrainingJob,
+    default_fleet,
+    fleet_chip_demand,
+    plan_fleet,
+)
+from repro.core import commitment as cm
+
+
+class TestPricing:
+    def test_paper_premium(self):
+        """Paper §3.1: on-demand ~2.1x the 3y savings-plan rate."""
+        assert pricing.on_demand_premium() == pytest.approx(2.1, abs=0.05)
+
+    def test_table2_rows(self):
+        assert len(pricing.SAVINGS_PLANS) == 8
+        assert 0.50 <= pricing.mean_discount_3y() <= 0.55
+
+    def test_table1_transitions(self):
+        gains = {t.new: t.latency_reduction
+                 for t in pricing.HARDWARE_TRANSITIONS}
+        assert gains["Graviton3"] == 0.25
+        assert gains["Axion"] == 0.50
+
+
+class TestFleetSimulator:
+    def test_default_fleet_covers_all_archs(self):
+        fleets, jobs = default_fleet()
+        assert len(fleets) == 10
+        big = {f.arch: f.chips_per_replica for f in fleets}
+        # replica footprints scale with model size
+        assert big["jamba-v0.1-52b"] > big["stablelm-1.6b"]
+        assert all(j.chips >= 64 for j in jobs)
+
+    def test_demand_includes_training_blocks(self):
+        fleets = [ServingFleet("stablelm-1.6b", 1, 5e4, 50.0)]
+        jobs = [TrainingJob("stablelm-1.6b", chips=100, start_hour=48,
+                            duration_hours=24)]
+        d = fleet_chip_demand(fleets, jobs, 24 * 7)
+        assert d[50] >= d[20] + 99  # training block visible
+
+    def test_plan_fleet_saves_money(self):
+        fleets, jobs = default_fleet()
+        demand = fleet_chip_demand(fleets, jobs, 24 * 7 * 30)
+        plan = plan_fleet(demand, horizon_weeks=4)
+        assert plan.commitment > 0
+        assert 0.0 < plan.savings_vs_on_demand < 0.6
+        assert plan.total_cost < plan.all_on_demand_cost
+
+    def test_timeshift_reduces_on_demand(self):
+        fleets, jobs = default_fleet()
+        demand = fleet_chip_demand(fleets, jobs, 24 * 7 * 30)
+        base = plan_fleet(demand, horizon_weeks=4, shiftable_frac=0.0)
+        shifted = plan_fleet(demand, horizon_weeks=4, shiftable_frac=0.3)
+        assert shifted.on_demand_cost <= base.on_demand_cost
+
+
+class TestScheduler:
+    def test_framework_workloads_fit_troughs(self):
+        import jax
+        from repro.core import demand as dm
+
+        base = np.asarray(dm.synth_demand(
+            24 * 7, dm.DemandConfig(annual_growth=0.0, base_level=100.0),
+            key=jax.random.PRNGKey(0)))
+        c = float(cm.optimal_commitment_quantile(
+            np.asarray(base, np.float32)))
+        report = schedule(base, c, default_workloads())
+        assert report.savings >= 0.0
+        assert set(report.placements) == {
+            "nightly-eval-sweep", "ckpt-replay-regression",
+            "serving-loadtest", "artifact-builds",
+        }
+        # interruptible workloads may be split; every placement lands work
+        for name, slices in report.placements.items():
+            assert sum(w for _, w in slices) > 0, name

@@ -1,0 +1,77 @@
+"""Examples must stay runnable: execute each in-process with tiny settings."""
+
+import runpy
+import sys
+
+import pytest
+
+
+def run_example(path, argv=None):
+    old = sys.argv
+    sys.argv = [path] + (argv or [])
+    try:
+        runpy.run_path(path, run_name="__main__")
+    finally:
+        sys.argv = old
+
+
+class TestExamples:
+    def test_quickstart(self, capsys):
+        run_example("examples/quickstart.py")
+        out = capsys.readouterr().out
+        assert "Algorithm 1" in out
+        assert "c* = min over horizons" in out
+
+    def test_capacity_planning(self, capsys):
+        run_example("examples/capacity_planning.py")
+        out = capsys.readouterr().out
+        assert "commitment plan" in out
+        assert "savings" in out
+
+    def test_train_lm_small(self, tmp_path, capsys):
+        run_example(
+            "examples/train_lm.py",
+            ["--steps", "8", "--ckpt-dir", str(tmp_path)],
+        )
+        out = capsys.readouterr().out
+        assert "loss" in out
+
+    def test_serve_freepool(self, capsys):
+        run_example("examples/serve_freepool.py")
+        out = capsys.readouterr().out
+        assert "served 10 requests" in out
+        assert "free-pool sizing" in out
+
+
+class TestDataTraces:
+    def test_synthetic_pools_schema(self):
+        from repro.data.traces import synthetic_pools
+
+        pools = synthetic_pools(num_pools=3, num_hours=24 * 30)
+        assert len(pools) == 3
+        for (cloud, region, mtype), arr in pools.items():
+            assert arr.shape == (24 * 30,)
+            assert (arr >= 0).all()
+
+    def test_csv_roundtrip(self, tmp_path):
+        import csv
+
+        import numpy as np
+
+        from repro.data.traces import load_dataset_csv
+
+        path = tmp_path / "shavedice.csv"
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=[
+                "timestamp", "cloud", "region", "machine_type",
+                "normalized_count"])
+            w.writeheader()
+            for h in range(48):
+                w.writerow({
+                    "timestamp": f"2023-01-01T{h % 24:02d}:00:00+{h // 24}",
+                    "cloud": "aws", "region": "r1", "machine_type": "m1",
+                    "normalized_count": 1.0 + h * 0.1,
+                })
+        pools = load_dataset_csv(str(path))
+        assert ("aws", "r1", "m1") in pools
+        assert len(pools[("aws", "r1", "m1")]) == 48

@@ -1,0 +1,237 @@
+"""Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles,
+executed in interpret mode (TPU kernels, CPU validation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import commitment as cm
+from repro.kernels.commitment_sweep.ops import (
+    commitment_sweep,
+    commitment_sweep_oracle,
+    optimal_commitment_sweep,
+)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.linrec.ops import (
+    rwkv6_linear_attention,
+    rwkv6_oracle,
+    rwkv6_step,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# commitment_sweep
+# ---------------------------------------------------------------------------
+
+class TestCommitmentSweep:
+    @pytest.mark.parametrize("p,t,g", [
+        (1, 100, 9),          # paper Fig 4 scenario scan
+        (5, 700, 37),
+        (8, 512, 128),        # exactly one block
+        (9, 513, 129),        # ragged everything
+        (16, 24 * 7 * 4, 64),
+    ])
+    def test_shapes_vs_oracle(self, p, t, g):
+        f = jnp.asarray(RNG.gamma(2, 50, (p, t)).astype(np.float32))
+        cs = jnp.linspace(float(f.min()), float(f.max()), g)
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs),
+            commitment_sweep_oracle(f, cs),
+            rtol=2e-4, atol=1e-2,
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        f = jnp.asarray(RNG.gamma(2, 50, (4, 300)), dtype=dtype)
+        cs = jnp.linspace(10.0, 300.0, 33).astype(dtype)
+        tol = 1e-4 if dtype == jnp.float32 else 6e-3
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs),
+            commitment_sweep_oracle(f, cs),
+            rtol=tol, atol=tol * 1e3,
+        )
+
+    def test_weights_mask_prefix(self):
+        """Weighted sweep == unweighted sweep on the prefix (Algorithm 1)."""
+        f = jnp.asarray(RNG.gamma(2, 50, (2, 400)).astype(np.float32))
+        cs = jnp.linspace(10.0, 300.0, 17)
+        w = jnp.zeros_like(f).at[:, :250].set(1.0)
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs, w),
+            commitment_sweep_oracle(f[:, :250], cs),
+            rtol=2e-4, atol=1e-2,
+        )
+
+    def test_matches_core_cost_curve(self):
+        f = jnp.asarray(RNG.gamma(2, 50, (200,)).astype(np.float32))
+        cs = jnp.linspace(float(f.min()), float(f.max()), 21)
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs), cm.cost_curve(f, cs), rtol=2e-4,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        a=st.floats(1.0, 4.0), b=st.floats(0.25, 2.0),
+        seed=st.integers(0, 10_000),
+    )
+    def test_property_ab_weighting(self, a, b, seed):
+        rng = np.random.default_rng(seed)
+        f = jnp.asarray(rng.gamma(2, 50, (3, 257)).astype(np.float32))
+        cs = jnp.linspace(float(f.min()), float(f.max()), 13)
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs, a=a, b=b),
+            commitment_sweep_oracle(f, cs, a=a, b=b),
+            rtol=3e-4, atol=1e-2,
+        )
+
+    def test_grid_refine_matches_exact(self):
+        f = jnp.asarray(RNG.gamma(2, 60, (6, 24 * 14)).astype(np.float32))
+        c_gr = optimal_commitment_sweep(f)
+        c_ex = cm.optimal_commitment_quantile(f)
+        for i in range(6):
+            assert float(cm.commitment_cost(f[i], c_gr[i])) <= float(
+                cm.commitment_cost(f[i], c_ex[i])
+            ) * (1 + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+        (1, 4, 4, 128, 128, 64),    # MHA, exact blocks
+        (2, 8, 2, 200, 200, 64),    # GQA 4:1, ragged seq
+        (1, 8, 1, 64, 64, 128),     # MQA
+        (2, 4, 2, 1, 300, 64),      # decode: single query
+        (1, 2, 2, 96, 160, 32),     # cross-ish lengths
+    ])
+    def test_shapes_vs_oracle(self, b, hq, hkv, sq, skv, d):
+        q = randn((b, hq, sq, d))
+        k = randn((b, hkv, skv, d))
+        v = randn((b, hkv, skv, d))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, causal=True),
+            attention_ref(q, k, v, causal=True),
+            atol=2e-5, rtol=1e-4,
+        )
+
+    def test_noncausal(self):
+        q, k, v = randn((2, 4, 100, 64)), randn((2, 2, 150, 64)), randn((2, 2, 150, 64))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, causal=False),
+            attention_ref(q, k, v, causal=False),
+            atol=2e-5, rtol=1e-4,
+        )
+
+    def test_kv_len_padded_cache(self):
+        """Decode against a partially-filled, padded KV cache."""
+        q = randn((2, 8, 1, 64))
+        k = randn((2, 2, 384, 64))
+        v = randn((2, 2, 384, 64))
+        out = flash_attention(q, k, v, causal=True, kv_len=257)
+        ref = attention_ref(q, k[:, :, :257], v[:, :, :257], causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("dtype,atol", [
+        (jnp.float32, 2e-5), (jnp.bfloat16, 2e-2),
+    ])
+    def test_dtypes(self, dtype, atol):
+        q = randn((1, 4, 128, 64), dtype)
+        k = randn((1, 2, 128, 64), dtype)
+        v = randn((1, 2, 128, 64), dtype)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32),
+            atol=atol, rtol=1e-2,
+        )
+        assert out.dtype == dtype
+
+    def test_causality_property(self):
+        """Perturbing future tokens must not change past outputs."""
+        q, k, v = randn((1, 2, 64, 32)), randn((1, 2, 64, 32)), randn((1, 2, 64, 32))
+        out1 = flash_attention(q, k, v, causal=True)
+        k2 = k.at[:, :, 50:, :].add(10.0)
+        v2 = v.at[:, :, 50:, :].add(10.0)
+        out2 = flash_attention(q, k2, v2, causal=True)
+        np.testing.assert_allclose(
+            out1[:, :, :50], out2[:, :, :50], atol=1e-5, rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# linrec (RWKV6)
+# ---------------------------------------------------------------------------
+
+class TestLinrec:
+    @pytest.mark.parametrize("b,h,t,d,chunk", [
+        (1, 2, 32, 16, 32),    # single chunk
+        (2, 3, 70, 16, 16),    # ragged
+        (1, 4, 128, 64, 32),   # rwkv6 head_size
+        (2, 2, 33, 32, 32),    # T = chunk + 1
+    ])
+    def test_shapes_vs_oracle(self, b, h, t, d, chunk):
+        r, k, v = randn((b, h, t, d)), randn((b, h, t, d)), randn((b, h, t, d))
+        w = jnp.asarray(RNG.uniform(0.2, 1.0, (b, h, t, d)).astype(np.float32))
+        u = randn((h, d))
+        y_k, s_k = rwkv6_linear_attention(r, k, v, w, u, chunk=chunk)
+        y_r, s_r = rwkv6_oracle(r, k, v, w, u)
+        np.testing.assert_allclose(y_k, y_r, atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(s_k, s_r, atol=2e-3, rtol=2e-3)
+
+    def test_strong_decay_stability(self):
+        """Decays near 0 (logw very negative) must not overflow/NaN — this is
+        the case that breaks the factored r~/k~ formulation."""
+        b, h, t, d = 1, 2, 64, 16
+        r, k, v = randn((b, h, t, d)), randn((b, h, t, d)), randn((b, h, t, d))
+        w = jnp.full((b, h, t, d), 1e-6, jnp.float32)
+        u = randn((h, d))
+        y_k, s_k = rwkv6_linear_attention(r, k, v, w, u, chunk=32)
+        y_r, s_r = rwkv6_oracle(r, k, v, w, u)
+        assert jnp.isfinite(y_k).all()
+        np.testing.assert_allclose(y_k, y_r, atol=2e-3, rtol=2e-3)
+
+    def test_step_consistency(self):
+        """T sequential decode steps == one chunked call."""
+        b, h, t, d = 1, 2, 17, 16
+        r, k, v = randn((b, h, t, d)), randn((b, h, t, d)), randn((b, h, t, d))
+        w = jnp.asarray(RNG.uniform(0.3, 1.0, (b, h, t, d)).astype(np.float32))
+        u = randn((h, d))
+        y_full, s_full = rwkv6_linear_attention(r, k, v, w, u, chunk=16)
+        s = jnp.zeros((b, h, d, d), jnp.float32)
+        ys = []
+        for i in range(t):
+            y_i, s = rwkv6_step(r[:, :, i], k[:, :, i], v[:, :, i], w[:, :, i], u, s)
+            ys.append(y_i)
+        np.testing.assert_allclose(
+            jnp.stack(ys, 2), y_full, atol=2e-3, rtol=2e-3
+        )
+        np.testing.assert_allclose(s, s_full, atol=2e-3, rtol=2e-3)
+
+    def test_state_carry_across_calls(self):
+        """Splitting a sequence across two kernel calls == one call."""
+        b, h, t, d = 2, 2, 64, 16
+        r, k, v = randn((b, h, t, d)), randn((b, h, t, d)), randn((b, h, t, d))
+        w = jnp.asarray(RNG.uniform(0.3, 1.0, (b, h, t, d)).astype(np.float32))
+        u = randn((h, d))
+        y_full, s_full = rwkv6_linear_attention(r, k, v, w, u, chunk=16)
+        y1, s1 = rwkv6_linear_attention(
+            r[:, :, :32], k[:, :, :32], v[:, :, :32], w[:, :, :32], u, chunk=16)
+        y2, s2 = rwkv6_linear_attention(
+            r[:, :, 32:], k[:, :, 32:], v[:, :, 32:], w[:, :, 32:], u,
+            state=s1, chunk=16)
+        np.testing.assert_allclose(
+            jnp.concatenate([y1, y2], 2), y_full, atol=2e-3, rtol=2e-3
+        )
+        np.testing.assert_allclose(s2, s_full, atol=2e-3, rtol=2e-3)

@@ -1,0 +1,123 @@
+"""Perf-knob correctness: int8 KV cache, dots remat policy, grad-accum
+equivalence — the §Perf hillclimb changes must not alter semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import (
+    build_grad_accum_train_step,
+    build_train_step,
+    init_train_state,
+)
+
+
+def _toks(b, s, v, key=0):
+    return jnp.asarray(
+        np.random.default_rng(key).integers(0, v, (b, s)), jnp.int32
+    )
+
+
+class TestInt8KVCache:
+    @pytest.mark.parametrize("arch", ["stablelm-1.6b", "internlm2-20b"])
+    def test_decode_close_to_bf16(self, arch):
+        cfg = configs.reduced(arch)
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        toks = _toks(2, 13, cfg.vocab_size)
+        outs = {}
+        for name, c in [("bf16", cfg), ("int8", cfg8)]:
+            model = build(c)
+            params = model.init(jax.random.PRNGKey(0))
+            cache = model.init_cache(2, 32)
+            _, cache = model.apply(
+                params, tokens=toks[:, :12], mode="prefill", cache=cache,
+                pos=0)
+            logits, _ = model.apply(
+                params, tokens=toks[:, 12:13], mode="decode", cache=cache,
+                pos=jnp.int32(12))
+            outs[name] = np.asarray(logits, np.float32)
+        # int8 quantization error stays small relative to logit scale
+        scale = np.abs(outs["bf16"]).max()
+        err = np.abs(outs["bf16"] - outs["int8"]).max()
+        assert err < 0.05 * scale + 0.1, (err, scale)
+
+    def test_cache_bytes_halved(self):
+        cfg = configs.get("internlm2-20b")
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        from repro.models.params import Spec, tree_specs_map
+
+        def total_bytes(c):
+            import numpy as np
+
+            model = build(c)
+            tot = 0
+
+            def add(s: Spec):
+                nonlocal tot
+                nbytes = np.dtype(s.dtype).itemsize if s.dtype else 2
+                tot += int(np.prod(s.shape)) * nbytes
+                return s
+
+            tree_specs_map(add, model.cache_specs(8, 1024))
+            return tot
+
+        assert total_bytes(cfg8) < 0.6 * total_bytes(cfg)
+
+
+class TestRematPolicy:
+    def test_dots_policy_same_loss_and_grads(self):
+        cfg = configs.reduced("stablelm-1.6b")
+        cfg_d = dataclasses.replace(cfg, remat_policy="dots")
+        toks = _toks(2, 16, cfg.vocab_size)
+        labels = _toks(2, 16, cfg.vocab_size, key=1)
+        vals = {}
+        for name, c in [("full", cfg), ("dots", cfg_d)]:
+            model = build(c)
+            params = model.init(jax.random.PRNGKey(0))
+
+            def loss(p):
+                logits, _ = model.apply(p, tokens=toks, mode="train")
+                lp = jax.nn.log_softmax(logits, -1)
+                return -jnp.take_along_axis(lp, labels[..., None], -1).mean()
+
+            l, g = jax.value_and_grad(loss)(params)
+            vals[name] = (float(l), g)
+        assert vals["full"][0] == pytest.approx(vals["dots"][0], rel=1e-3)
+        for a, b in zip(jax.tree.leaves(vals["full"][1]),
+                        jax.tree.leaves(vals["dots"][1])):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=2e-2, rtol=2e-2,
+            )
+
+
+class TestGradAccum:
+    def test_accum_matches_single_batch(self):
+        """4-way accumulation == single big batch (same loss, ~same params);
+        the memory/collective-granularity knob must be semantics-free."""
+        cfg = configs.reduced("stablelm-1.6b")
+        model = build(cfg)
+        batch = {
+            "tokens": _toks(8, 16, cfg.vocab_size),
+            "labels": _toks(8, 16, cfg.vocab_size, key=1),
+        }
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1)
+        one = jax.jit(build_train_step(model, opt))
+        acc = jax.jit(build_grad_accum_train_step(model, opt,
+                                                  num_microbatches=4))
+        params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+        l1, p1, _ = one(params, opt_state, batch)
+        params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+        l2, p2, _ = acc(params, opt_state, batch)
+        assert float(l1) == pytest.approx(float(l2), rel=1e-2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=5e-2,
+            )

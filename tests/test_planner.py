@@ -1,0 +1,206 @@
+"""Tests for the forecaster (§3.3.3), Algorithm 1 planner, laddering (§3.3.4),
+time shifting (§4) and free pools (§5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import commitment as cm
+from repro.core import demand as dm
+from repro.core import forecast as fc
+from repro.core import freepool as fp
+from repro.core import ladder as ld
+from repro.core import planner as pl
+from repro.core import timeshift as ts
+from repro.core.demand import HOURS_PER_WEEK
+
+
+@pytest.fixture(scope="module")
+def history():
+    return dm.synth_demand(24 * 7 * 26, key=jax.random.PRNGKey(0))  # 26 weeks
+
+
+class TestForecast:
+    def test_fit_predict_insample(self, history):
+        model = fc.fit(history)
+        yhat = fc.predict(model, jnp.arange(history.shape[0]))
+        mape = float(jnp.abs((yhat - history) / history).mean())
+        assert mape < 0.08, f"in-sample MAPE too high: {mape}"
+
+    def test_future_captures_periodicity(self, history):
+        model = fc.fit(history)
+        fut = fc.forecast_horizon(model, history.shape[0], HOURS_PER_WEEK * 2)
+        ratio = float(dm.diurnal_peak_trough_ratio(fut))
+        assert ratio > 1.15, "forecast must carry the diurnal cycle forward"
+
+    def test_captures_trend(self):
+        hist = dm.synth_demand(24 * 7 * 52)
+        model = fc.fit(hist)
+        fut = fc.forecast_horizon(model, hist.shape[0], HOURS_PER_WEEK * 8)
+        assert float(fut.mean()) > float(hist[-HOURS_PER_WEEK:].mean()) * 0.98
+
+    def test_asymmetric_weighting_biases_up(self, history):
+        """With under-forecast penalized 2.1x, the fit sits above the
+        symmetric fit on average."""
+        sym = fc.fit(history, fc.ForecastConfig(asym_weight=1.0, irls_iters=4))
+        asym = fc.fit(history, fc.ForecastConfig(asym_weight=2.1, irls_iters=4))
+        t = jnp.arange(history.shape[0])
+        assert float(fc.predict(asym, t).mean()) >= float(
+            fc.predict(sym, t).mean()
+        )
+
+    def test_weighted_mape_asymmetry(self):
+        y = jnp.ones(10) * 100.0
+        under = jnp.ones(10) * 90.0   # model under-forecasts
+        over = jnp.ones(10) * 110.0   # model over-forecasts
+        assert float(fc.weighted_mape(y, under)) > float(
+            fc.weighted_mape(y, over)
+        )
+
+    def test_batched_fit(self, history):
+        ys = jnp.stack([history, history * 2.0])
+        model = fc.fit_batched(ys)
+        preds = fc.predict_batched(model, jnp.arange(history.shape[0]))
+        assert preds.shape == (2, history.shape[0])
+        np.testing.assert_allclose(
+            preds[1] / preds[0], 2.0, rtol=0.05
+        )
+
+
+class TestPlanner:
+    def test_algorithm1_min_over_horizons(self, history):
+        res = pl.plan_commitment(history, num_horizons=8)
+        assert res.commitment == pytest.approx(
+            float(res.per_horizon_levels.min()), rel=1e-6
+        )
+        assert res.per_horizon_levels.shape == (8,)
+        assert res.forecast.shape == (8 * HOURS_PER_WEEK,)
+
+    def test_solver_paths_agree(self, history):
+        r_q = pl.plan_commitment(history, num_horizons=4, solver="quantile")
+        r_g = pl.plan_commitment(history, num_horizons=4, solver="golden")
+        # Same cost on the binding horizon (PWL flat minima allowed).
+        w = (r_q.argmin_horizon + 1) * HOURS_PER_WEEK
+        seg = r_q.forecast[:w]
+        assert float(cm.commitment_cost(seg, r_q.commitment)) == pytest.approx(
+            float(cm.commitment_cost(seg, r_g.commitment)), rel=5e-3
+        )
+
+    def test_fig8_longer_horizon_cheaper_before_holiday(self):
+        """Fig 8: when a demand drop is coming, the 2-week-horizon commitment
+        is lower and cheaper over the 2-week window than the 1-week one."""
+        # Build a forecast-like series: week 1 normal, week 2 has a holiday dip
+        base = dm.synth_demand(HOURS_PER_WEEK * 2, dm.DemandConfig(
+            annual_growth=0.0, noise_sigma=0.0))
+        dip = jnp.concatenate([
+            jnp.ones(HOURS_PER_WEEK),
+            1.0 - 0.15 * jnp.ones(HOURS_PER_WEEK) * 0.9,
+        ])
+        yhat = base * dip
+        out = pl.compare_horizons(yhat, (1, 2))
+        assert out[2]["level"] < out[1]["level"]
+        assert out[2]["total_spend"] < out[1]["total_spend"]
+
+
+class TestLadder:
+    def test_active_level(self):
+        lad = ld.empty_ladder().extended(0, 10, 5.0).extended(5, 10, 2.0)
+        lvl = lad.active_level(20)
+        assert lvl[0] == 5.0 and lvl[6] == 7.0 and lvl[12] == 2.0
+        assert lvl[16] == 0.0
+
+    def test_plan_purchases_never_sells(self):
+        targets = np.array([10.0, 12.0, 8.0, 14.0])
+        lad = ld.plan_purchases(targets, period_hours=5, term_hours=100)
+        lvl = lad.active_level(20)
+        # Level only steps up at purchase instants, never down within terms.
+        assert lvl[0] == 10.0 and lvl[5] == 12.0
+        assert lvl[10] == 12.0  # target 8 < active 12: no sale
+        assert lvl[15] == 14.0
+
+    def test_expirations_step_down(self):
+        targets = np.array([10.0, 10.0, 10.0])
+        lad = ld.plan_purchases(targets, period_hours=5, term_hours=7)
+        lvl = lad.active_level(15)
+        assert lvl[0] == 10.0
+        assert lvl[6] == 10.0   # still active (term 7)
+        assert lvl[8] == 0.0    # expired at t=7, next purchase only at t=10
+        assert lvl[12] == 10.0  # re-bought at period 3 start (t=10)
+
+    def test_fig9_laddering_saves(self):
+        """Fig 9: weekly laddered levels beat one flat level across a
+        holiday-dip month (paper: ~1.1% savings)."""
+        cfgs = dm.DemandConfig(annual_growth=0.0, noise_sigma=0.0)
+        demand = np.asarray(dm.synth_demand(HOURS_PER_WEEK * 4, cfgs))
+        # inject a holiday drop in week 3
+        demand = demand.copy()
+        demand[HOURS_PER_WEEK * 2 : HOURS_PER_WEEK * 3] *= 0.92
+        weekly_targets = [
+            float(cm.optimal_commitment_quantile(
+                jnp.asarray(demand[w * HOURS_PER_WEEK:(w + 1) * HOURS_PER_WEEK])
+            ))
+            for w in range(4)
+        ]
+        out = ld.ladder_vs_flat(demand, np.array(weekly_targets))
+        assert out["laddered_spend"] < out["flat_spend"]
+        assert 0.0 < out["savings_frac"] < 0.10
+
+
+class TestTimeshift:
+    def test_schedule_fills_troughs(self):
+        base = np.asarray(dm.synth_demand(24 * 7, dm.DemandConfig(
+            annual_growth=0.0, noise_sigma=0.0)))
+        c = float(cm.optimal_commitment_quantile(jnp.asarray(base)))
+        jobs = [ts.Job(arrival=10, work=30.0, deadline=24 * 7)]
+        out = ts.schedule_jobs(base, c, jobs)
+        assert out["on_demand_cost_shifted"] <= out["on_demand_cost_naive"]
+        assert out["on_demand_savings"] >= 0.0
+        # Work conserved:
+        np.testing.assert_allclose(
+            out["demand"].sum(), base.sum() + 30.0, rtol=1e-6
+        )
+
+    def test_fluid_shift_conserves_and_flattens(self):
+        f = dm.synth_demand(24 * 7, dm.DemandConfig(
+            annual_growth=0.0, noise_sigma=0.0))
+        c = float(cm.optimal_commitment_quantile(f))
+        g = ts.shift_demand(f, c, 0.5)
+        np.testing.assert_allclose(float(g.sum()), float(f.sum()), rtol=1e-4)
+        assert float(jnp.maximum(g - c, 0).sum()) < float(
+            jnp.maximum(f - c, 0).sum()
+        )
+
+    def test_shiftable_supply_weekend_concentration(self):
+        f = np.asarray(dm.synth_demand(24 * 7 * 4, dm.DemandConfig(
+            annual_growth=0.0, noise_sigma=0.0)))
+        c = float(cm.optimal_commitment_quantile(jnp.asarray(f)))
+        stats = ts.shiftable_supply_stats(f, c)
+        # Weekends are 2/7 = 28.6% of hours but hold most of the trough.
+        assert stats["weekend_share"] > 0.5
+        assert 0.0 < stats["unused_frac"] < 0.2
+
+
+class TestFreePool:
+    def test_static_pool_is_quantile(self):
+        d = jnp.asarray(np.random.default_rng(0).gamma(2, 10, 500).astype(np.float32))
+        cfg = fp.FreePoolConfig(p_over=1.0, p_under=3.0)
+        pool = float(fp.optimal_static_pool(d, cfg))
+        grid = jnp.linspace(d.min(), d.max(), 400)
+        costs = jnp.stack([
+            fp.pool_cost(jnp.full_like(d, g), d, cfg) for g in grid
+        ])
+        assert float(fp.pool_cost(jnp.full_like(d, pool), d, cfg)) <= float(
+            costs.min()
+        ) * (1 + 1e-3)
+
+    def test_predicted_beats_static(self):
+        hist = dm.synth_demand(24 * 7 * 8, key=jax.random.PRNGKey(2))
+        fut = dm.synth_demand(24 * 7 * 9, key=jax.random.PRNGKey(2))[-24 * 7:]
+        cfg = fp.FreePoolConfig(p_over=1.0, p_under=10.0, lead_time=1)
+        out = fp.compare_static_vs_predicted(hist, fut, cfg)
+        assert out["predicted_cost"] < out["static_cost"]
+
+    def test_critical_fractile(self):
+        cfg = fp.FreePoolConfig(p_over=1.0, p_under=10.0)
+        assert fp.critical_fractile(cfg) == pytest.approx(10.0 / 11.0)

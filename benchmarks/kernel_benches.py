@@ -57,6 +57,33 @@ def bench_commitment_sweep() -> list[Row]:
         ("kernel_commitment_sweep_interpret", us_kernel,
          "pallas interpret-mode validation path")
     )
+
+    # 2-D sweep: per-pool candidate grids + dual over/under accumulators
+    # (the portfolio optimizer's input) — jnp oracle throughput plus the
+    # Pallas kernel path in interpret mode (plumbing validation off-TPU).
+    from repro.kernels.commitment_sweep.ops import (
+        commitment_sweep_over_under,
+        commitment_sweep_over_under_oracle,
+    )
+    cs2 = f.min(-1, keepdims=True) + (
+        f.max(-1, keepdims=True) - f.min(-1, keepdims=True)
+    ) * jnp.linspace(0.0, 1.0, g)[None, :]
+    oracle2 = jax.jit(
+        lambda f_, c_: commitment_sweep_over_under_oracle(f_, c_)
+    )
+    us_2d = _time(oracle2, f, cs2)
+    rows.append(
+        ("kernel_commitment_sweep_2d_over_under_oracle", us_2d,
+         f"{p} per-pool grids x{g}, {2 * flops / us_2d / 1e3:.1f} GFLOP/s")
+    )
+    us_2d_k = _time(
+        lambda f_, c_: commitment_sweep_over_under(f_, c_, interpret=True),
+        f[:4], cs2[:4], iters=1, warmup=1,
+    )
+    rows.append(
+        ("kernel_commitment_sweep_2d_over_under_interpret", us_2d_k,
+         "pallas 2-D per-pool-grid path, interpret mode")
+    )
     return rows
 
 

@@ -12,7 +12,12 @@ import numpy as np
 
 from repro.capacity.pricing import on_demand_premium
 from repro.capacity.scheduler import default_workloads, schedule
-from repro.capacity.simulator import default_fleet, fleet_chip_demand, plan_fleet
+from repro.capacity.simulator import (
+    default_fleet,
+    fleet_chip_demand,
+    plan_fleet,
+    plan_fleet_portfolio,
+)
 from repro.core import commitment as cm
 from repro.core import ladder as ld
 from repro.core.demand import HOURS_PER_WEEK
@@ -42,6 +47,23 @@ def main():
     print(f"  savings:              {base.savings_vs_on_demand * 100:13.1f}%")
     print(f"  with 5% time shifting: on-demand spill "
           f"{base.on_demand_cost:.0f} -> {shifted.on_demand_cost:.0f}")
+
+    # Portfolio of Table-2 purchasing options instead of one averaged level.
+    port = plan_fleet_portfolio(demand, horizon_weeks=8)
+    hedged = plan_fleet_portfolio(demand, horizon_weeks=8, term_weighting=1.0)
+    print("\n== commitment portfolio (Table 2 SKUs) ==")
+    for opt, w in zip(port.options, port.widths):
+        if w > 0:
+            print(f"  {opt.name:24s} rate {opt.rate:.2f} "
+                  f"term {opt.term_weeks:3d}w  width {w:7.1f} chips")
+    print(f"  on-demand above {port.total_commitment:.0f} chips")
+    print(f"  total cost:           {port.total_cost:14.0f}")
+    print(f"  vs single-level plan: {port.savings_vs_single_level * 100:12.2f}% cheaper")
+    print(f"  vs all-on-demand:     {port.savings_vs_on_demand * 100:12.1f}%")
+    hedge_names = [o.name for o, w in zip(hedged.options, hedged.widths)
+                   if w > 0]
+    print(f"  term-weighted hedge stack: {', '.join(hedge_names)} "
+          f"({hedged.savings_vs_single_level * 100:.2f}% vs single-level)")
 
     # Laddered purchases over the planning window (paper §3.3.4).
     weeks = 8

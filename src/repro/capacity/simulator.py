@@ -19,6 +19,7 @@ from repro import configs
 from repro.core import commitment as cm
 from repro.core import demand as dm
 from repro.core import planner as pl
+from repro.core import portfolio as pf
 from repro.core import timeshift as ts
 from repro.capacity.pricing import on_demand_premium
 from repro.models.model import build
@@ -116,9 +117,24 @@ def plan_fleet(
     *,
     horizon_weeks: int = 8,
     shiftable_frac: float = 0.0,
-) -> FleetPlan:
+    portfolio: bool = False,
+    options: "list[pf.PurchaseOption] | None" = None,
+    term_weighting: float = 0.0,
+):
     """Run Algorithm 1 on fleet demand; optionally time-shift the deferrable
-    fraction into troughs first (§4) — the full paper pipeline."""
+    fraction into troughs first (§4) — the full paper pipeline.
+
+    With ``portfolio=True`` the single averaged commitment is replaced by a
+    stack of Table-2 purchasing options (returns a ``PortfolioFleetPlan``
+    with per-option spend breakdown; see ``plan_fleet_portfolio``;
+    ``term_weighting`` > 0 prices term-stranding risk and admits the 1y
+    hedge bands onto the stack)."""
+    if portfolio:
+        return plan_fleet_portfolio(
+            demand, horizon_weeks=horizon_weeks,
+            shiftable_frac=shiftable_frac, options=options,
+            term_weighting=term_weighting,
+        )
     hist = jnp.asarray(demand[: -horizon_weeks * 168].astype(np.float32))
     res = pl.plan_commitment(hist, num_horizons=horizon_weeks)
     c = res.commitment
@@ -144,4 +160,76 @@ def plan_fleet(
         total_cost=total,
         all_on_demand_cost=all_od,
         savings_vs_on_demand=1.0 - total / all_od,
+    )
+
+
+@dataclasses.dataclass
+class PortfolioFleetPlan:
+    """Fleet plan built from a stack of Table-2 purchasing options."""
+
+    options: list[pf.PurchaseOption]
+    widths: np.ndarray                  # (K,) committed band widths
+    total_commitment: float             # stack top
+    breakdown: dict[str, float]         # per-option committed spend (nonzero)
+    committed_cost: float
+    on_demand_cost: float
+    total_cost: float
+    all_on_demand_cost: float
+    savings_vs_on_demand: float
+    single_level_cost: float            # the single-level plan, same trace
+    savings_vs_single_level: float
+
+
+def plan_fleet_portfolio(
+    demand: np.ndarray,
+    *,
+    horizon_weeks: int = 8,
+    shiftable_frac: float = 0.0,
+    options: list[pf.PurchaseOption] | None = None,
+    term_weighting: float = 0.0,
+) -> PortfolioFleetPlan:
+    """§3 pipeline with the Table-2 purchase portfolio instead of one
+    averaged commitment level: Algorithm 1 runs once per option term, the
+    resulting stack is billed per option at its own committed rate, and the
+    result is compared against both all-on-demand and the single-level
+    ``plan_fleet`` on the same trace.
+
+    Accounting note: rates are normalized so the mean 3y committed rate is
+    1.0 — identical units to ``plan_fleet`` — so ``savings_vs_single_level``
+    is an apples-to-apples statement about mixing SKUs (cheaper base-load
+    rate + per-term thresholds) rather than a unit artifact."""
+    options = options if options is not None else pf.options_from_pricing()
+    premium = on_demand_premium()
+
+    hist = jnp.asarray(demand[: -horizon_weeks * 168].astype(np.float32))
+    res = pl.plan_portfolio(
+        hist, options, num_horizons=horizon_weeks,
+        od_rate=premium, term_weighting=term_weighting,
+    )
+    widths = np.asarray(res.widths)
+
+    actual = jnp.asarray(demand[-horizon_weeks * 168:].astype(np.float32))
+    single = plan_fleet(
+        demand, horizon_weeks=horizon_weeks, shiftable_frac=shiftable_frac
+    )
+    if shiftable_frac > 0:
+        actual = ts.shift_demand(actual, float(widths.sum()), shiftable_frac)
+
+    spend = pf.portfolio_spend(actual, widths, options, od_rate=premium)
+    breakdown = {
+        o.name: float(c)
+        for o, c in zip(options, spend.committed) if c > 0
+    }
+    return PortfolioFleetPlan(
+        options=options,
+        widths=widths,
+        total_commitment=float(widths.sum()),
+        breakdown=breakdown,
+        committed_cost=float(spend.committed.sum()),
+        on_demand_cost=spend.on_demand,
+        total_cost=spend.total,
+        all_on_demand_cost=spend.all_on_demand,
+        savings_vs_on_demand=spend.savings_vs_on_demand,
+        single_level_cost=single.total_cost,
+        savings_vs_single_level=1.0 - spend.total / single.total_cost,
     )

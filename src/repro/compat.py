@@ -1,0 +1,90 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern JAX surface (``jax.shard_map`` with
+``check_vma``/``axis_names``, ``jax.make_mesh(..., axis_types=...)`` with
+``jax.sharding.AxisType``), but must also run on older installs (0.4.x) where
+shard_map lives in ``jax.experimental.shard_map`` with the ``check_rep`` /
+``auto`` spelling and meshes have no axis types.  All call sites in the repo
+import from here instead of feature-testing jax themselves.
+
+Translation table (new API -> 0.4.x):
+
+    check_vma=False                  -> check_rep=False
+    axis_names={manual axes}         -> auto = mesh axes - manual axes
+    axis_types=(AxisType.Auto, ...)  -> dropped (0.4.x meshes are untyped)
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+    axis_names: frozenset | None = None,
+):
+    """``jax.shard_map`` with the modern keyword surface on any JAX version.
+
+    ``axis_names`` is the set of *manual* mesh axes (None = all axes manual,
+    matching the native default).
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        kwargs = dict(
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Sequence | None = None,
+    devices=None,
+):
+    """``jax.make_mesh`` accepting ``axis_types`` on any JAX version.
+
+    ``axis_types`` entries may be given as the strings "auto" / "explicit"
+    so callers need not touch ``jax.sharding.AxisType`` directly; on JAX
+    versions without typed mesh axes the argument is ignored.
+    """
+    if HAS_AXIS_TYPE and axis_types is not None:
+        resolved = tuple(
+            getattr(jax.sharding.AxisType, t.capitalize())
+            if isinstance(t, str) else t
+            for t in axis_types
+        )
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices, axis_types=resolved
+        )
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def auto_axis_types(n: int):
+    """``n`` Auto-typed axes where supported, else None (untyped mesh)."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None

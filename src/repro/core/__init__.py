@@ -7,6 +7,7 @@
   ladder      — §3.3.4 staggered commitments / expirations
   timeshift   — §4 deferrable-workload scheduling into troughs
   freepool    — §5 predictive pre-provisioning (newsvendor pools)
+  portfolio   — §3 generalized to Table-2 purchase-option stacks
 """
 
 from repro.core import (  # noqa: F401
@@ -16,5 +17,6 @@ from repro.core import (  # noqa: F401
     freepool,
     ladder,
     planner,
+    portfolio,
     timeshift,
 )

@@ -70,8 +70,17 @@ def predicted_pool(
     time shifts the target: the pool set now must cover demand ``lead_time``
     windows ahead (provisioning latency), so we take the max of the forecast
     over the lead window.
+
+    The pool model deliberately has NO trend changepoints: the final
+    changepoint segment's slope is fit on a sliver of recent history (often
+    pure weekend/noise), and ``fc.predict`` extrapolates that slope — over
+    even a 2-day sizing horizon this injected double-digit-% phantom demand
+    drops, sinking the pool below actual demand (far more SLO misses than a
+    static p50 pool).  A single global trend plus daily/weekly seasonality
+    is the right capacity model for short free-pool horizons; the in-sample
+    residual quantile then absorbs what the simpler trend misses.
     """
-    model_cfg = fc.ForecastConfig(yearly_order=0, num_changepoints=4)
+    model_cfg = fc.ForecastConfig(yearly_order=0, num_changepoints=0)
     t_hist = demand_history.shape[-1]
     beta = fc._fit(demand_history, model_cfg, float(t_hist - 1))
     model = fc.ForecastModel(beta=beta, t_max=float(t_hist - 1), cfg=model_cfg)

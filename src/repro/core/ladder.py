@@ -27,25 +27,50 @@ from repro.core.demand import HOURS_PER_WEEK
 
 @dataclasses.dataclass(frozen=True)
 class Ladder:
-    """Tranches: arrays of (start_hour, term_hours, amount)."""
+    """Tranches: arrays of (start_hour, term_hours, amount[, option]).
+
+    ``option`` tags each tranche with the index of the purchasing option it
+    was bought under (§3 portfolio; -1 = untagged/single-option ladders) so
+    terms are per-tranche properties of the SKU, not a global constant."""
 
     start: np.ndarray   # (K,) int
     term: np.ndarray    # (K,) int
     amount: np.ndarray  # (K,) float
+    option: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), int) - 1
+    )                   # (K,) int, -1 = untagged
 
-    def active_level(self, num_hours: int) -> np.ndarray:
-        """Cumulative committed level for hours [0, num_hours)."""
+    def __post_init__(self):
+        if self.option.shape != self.start.shape:
+            if self.option.size:  # caller passed tags but mis-sized them
+                raise ValueError(
+                    f"option tags shape {self.option.shape} != tranche "
+                    f"shape {self.start.shape}"
+                )
+            object.__setattr__(
+                self, "option",
+                np.full(self.start.shape, -1, int),
+            )
+
+    def active_level(self, num_hours: int, option: int | None = None):
+        """Cumulative committed level for hours [0, num_hours); restricted
+        to one option's tranches when ``option`` is given."""
         t = np.arange(num_hours)[:, None]
         active = (t >= self.start[None, :]) & (
             t < (self.start + self.term)[None, :]
         )
+        if option is not None:
+            active = active & (self.option[None, :] == option)
         return (active * self.amount[None, :]).sum(-1)
 
-    def extended(self, start: int, term: int, amount: float) -> "Ladder":
+    def extended(
+        self, start: int, term: int, amount: float, option: int = -1
+    ) -> "Ladder":
         return Ladder(
             start=np.append(self.start, start),
             term=np.append(self.term, term),
             amount=np.append(self.amount, amount),
+            option=np.append(self.option, option),
         )
 
 
@@ -75,6 +100,42 @@ def plan_purchases(
         gap = float(target_levels[p]) - active_now
         if gap > 1e-9:
             ladder = ladder.extended(t0, term_hours, gap)
+    return ladder
+
+
+def plan_portfolio_purchases(
+    target_levels: np.ndarray,
+    term_hours: np.ndarray,
+    *,
+    period_hours: int = HOURS_PER_WEEK,
+    existing: Ladder | None = None,
+) -> Ladder:
+    """Portfolio laddering: per period, per option, buy the increment that
+    lifts that option's active tranches up to its target band width.
+
+    target_levels (W, K): per-period target *width* of each option's band
+    (e.g. the widths from ``planner.plan_portfolio`` re-run each week).
+    term_hours (K,): each option's own commitment term — a 1y tranche rolls
+    off 3x sooner than a 3y tranche, which is exactly the flexibility the
+    portfolio pays for."""
+    ladder = existing or empty_ladder()
+    target_levels = np.asarray(target_levels)
+    num_periods, num_options = target_levels.shape
+
+    def active_at(lad: Ladder, t0: int, k: int) -> float:
+        # Single-hour sample, O(tranches) — not the full activity matrix.
+        live = (
+            (t0 >= lad.start) & (t0 < lad.start + lad.term)
+            & (lad.option == k)
+        )
+        return float((live * lad.amount).sum())
+
+    for p in range(num_periods):
+        t0 = p * period_hours
+        for k in range(num_options):
+            gap = float(target_levels[p, k]) - active_at(ladder, t0, k)
+            if gap > 1e-9:
+                ladder = ladder.extended(t0, int(term_hours[k]), gap, k)
     return ladder
 
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import commitment as cm
 from repro.core import forecast as fc
+from repro.core import portfolio as pf
 from repro.core.demand import HOURS_PER_WEEK
 
 
@@ -32,30 +33,6 @@ class PlanResult:
     per_horizon_levels: jnp.ndarray   # (W,) c_w for each horizon
     argmin_horizon: int               # which horizon set the binding level
     forecast: jnp.ndarray             # (W*168,) hourly forecast used
-
-
-def _masked_prefix_optimum(
-    yhat: jnp.ndarray, w_hours: jnp.ndarray, a: float, b: float
-) -> jnp.ndarray:
-    """Optimal commitment over the prefix yhat[:w_hours] without dynamic
-    shapes: elements past the prefix are masked to +inf for the 'over' hinge
-    and... simpler: replace them with the prefix's own values via clamped
-    gather is costly — instead use the weighted-quantile closed form with a
-    validity mask (exact for the two-sided objective)."""
-    t = jnp.arange(yhat.shape[0])
-    valid = (t < w_hours).astype(yhat.dtype)
-    # Weighted quantile at q = a/(a+b) over valid entries:
-    q = a / (a + b)
-    # Sort demand ascending; accumulate validity mass; pick first index where
-    # cumulative fraction >= q.
-    order = jnp.argsort(yhat)
-    sorted_y = yhat[order]
-    sorted_valid = valid[order]
-    cum = jnp.cumsum(sorted_valid)
-    total = jnp.maximum(cum[-1], 1.0)
-    frac = cum / total
-    idx = jnp.argmax(frac >= q)  # first crossing
-    return sorted_y[idx]
 
 
 def plan_commitment(
@@ -76,9 +53,10 @@ def plan_commitment(
     w_hours = (jnp.arange(1, num_horizons + 1)) * HOURS_PER_WEEK  # Step 2
 
     if solver == "quantile":
-        levels = jax.vmap(
-            lambda w: _masked_prefix_optimum(yhat, w, a, b)
-        )(w_hours)  # Step 3
+        # Exact weighted quantile at q = a/(a+b) over each masked prefix —
+        # the K=1 instance of the portfolio prefix solver (one shared sort).
+        q = jnp.asarray([a / (a + b)], yhat.dtype)
+        levels = _prefix_weighted_quantiles(yhat, w_hours, q)[:, 0]  # Step 3
     else:
         def golden_prefix(w):
             t = jnp.arange(yhat.shape[0])
@@ -115,6 +93,99 @@ def plan_commitment(
         commitment=float(c_star),
         per_horizon_levels=levels,
         argmin_horizon=int(jnp.argmin(levels)),
+        forecast=yhat,
+    )
+
+
+@dataclasses.dataclass
+class PortfolioPlanResult:
+    """Algorithm 1 generalized to a commitment portfolio (one run per
+    option term).  Arrays are aligned with ``options``."""
+
+    options: list[pf.PurchaseOption]
+    widths: jnp.ndarray               # (K,) band width to purchase now
+    levels: jnp.ndarray               # (K,) stack tops (envelope-monotone)
+    per_horizon_levels: jnp.ndarray   # (W, K) per-horizon prefix thresholds
+    fractiles: jnp.ndarray            # (K,) per-option critical fractiles
+    forecast: jnp.ndarray             # (W*168,) hourly forecast used
+
+
+def _prefix_weighted_quantiles(
+    yhat: jnp.ndarray, w_hours: jnp.ndarray, qs: jnp.ndarray
+) -> jnp.ndarray:
+    """Thresholds (W, K): for each horizon prefix yhat[:w] the weighted
+    quantile at each fractile q — the vectorized heart of Step 3, one sort
+    for all horizons x options (same masked-prefix trick as the single-level
+    path, broadcast over the portfolio's critical fractiles)."""
+    order = jnp.argsort(yhat)
+    sorted_y = yhat[order]
+    t = jnp.arange(yhat.shape[0])
+    sorted_t = t[order]
+
+    def one_horizon(w):
+        valid = (sorted_t < w).astype(yhat.dtype)
+        cum = jnp.cumsum(valid)
+        frac = cum / jnp.maximum(cum[-1], 1.0)
+        idx = jnp.argmax(frac[None, :] >= qs[:, None], axis=-1)  # (K,)
+        return sorted_y[idx]
+
+    return jax.vmap(one_horizon)(w_hours)
+
+
+def plan_portfolio(
+    history: jnp.ndarray,
+    options: list[pf.PurchaseOption] | None = None,
+    *,
+    num_horizons: int = 52,
+    od_rate: float = 2.1,
+    term_weighting: float = 0.0,
+    cfg: fc.ForecastConfig = fc.ForecastConfig(),
+) -> PortfolioPlanResult:
+    """Algorithm 1 with one horizon sweep per purchasing option.
+
+    Steps 1-2 are shared (one forecast, 52 weekly prefixes).  Step 3
+    computes each option's optimal stack threshold on every prefix — a
+    weighted quantile at the option's critical fractile (portfolio lower
+    envelope).  Step 4 takes the min per option over the horizons *within
+    that option's term*: a commitment can never be reduced while its term
+    runs, so upcoming demand drops inside the term cap today's safe
+    purchase; drops after expiry are irrelevant (the tranche simply is not
+    renewed) — short-term options therefore clear fewer horizons and may
+    commit more aggressively than long-term ones.  Finally the stack is
+    re-monotonized (running max in envelope-depth order) since per-option
+    minima over different horizon sets can cross."""
+    options = options if options is not None else pf.options_from_pricing()
+    alphas, betas = pf.option_lines(options, term_weighting=term_weighting)
+    qs = pf.handover_fractiles(alphas, betas, od_rate=od_rate)
+
+    model = fc.fit(history, cfg)
+    t0 = history.shape[-1]
+    horizon_hours = num_horizons * HOURS_PER_WEEK
+    yhat = fc.forecast_horizon(model, t0, horizon_hours)          # Step 1
+    w_hours = jnp.arange(1, num_horizons + 1) * HOURS_PER_WEEK    # Step 2
+
+    per_horizon = _prefix_weighted_quantiles(yhat, w_hours, qs)   # Step 3
+
+    term_weeks = jnp.asarray([o.term_weeks for o in options])
+    weeks = jnp.arange(1, num_horizons + 1)[:, None]              # (W, 1)
+    in_term = weeks <= jnp.maximum(term_weeks[None, :], 1)        # Step 4
+    big = jnp.float32(jnp.inf)
+    mins = jnp.where(in_term, per_horizon, big).min(0)            # (K,)
+    on_env = qs > 0
+
+    # Monotone stack in envelope-depth order (ascending fractile).
+    depth = jnp.argsort(jnp.where(on_env, qs, jnp.inf))
+    inv = jnp.argsort(depth)
+    mins_d = jnp.where(on_env, mins, 0.0)[depth]
+    tops_d = jax.lax.associative_scan(jnp.maximum, mins_d)
+    prev_d = jnp.concatenate([jnp.zeros((1,), tops_d.dtype), tops_d[:-1]])
+    widths_d = jnp.where(on_env[depth], tops_d - prev_d, 0.0)
+    return PortfolioPlanResult(
+        options=options,
+        widths=widths_d[inv],
+        levels=tops_d[inv],
+        per_horizon_levels=per_horizon,
+        fractiles=qs,
         forecast=yhat,
     )
 

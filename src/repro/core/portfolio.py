@@ -1,0 +1,394 @@
+"""Multi-option commitment portfolios (paper §3 generalized; Table 2 SKUs).
+
+The paper optimizes ONE commitment level against one on-demand premium, yet
+its Table 2 lists eight savings-plan SKUs across three clouds with distinct
+1y/3y discounts.  Mixing purchasing options strictly dominates any
+single-option plan ("Hedge Your Bets", Ambati et al.; "No Reservations",
+Ambati/Irwin/Shenoy): cheap long commitments cover the always-on demand
+base, lighter short commitments the mid band, on-demand the peaks.
+
+Model.  Capacity is built as a *stack* of tranches: option k covers the band
+(s_{k-1}, s_k], on-demand everything above the stack top.  Each option is a
+**cost line** over slice utilization: a capacity slice at height y is used in
+the hours where demand f_t > y and idle otherwise, so with
+u(y) = #{t: f_t < y} / T the per-hour cost of covering the slice with
+option k is
+
+    l_k(u) = alpha_k * (1 - u) + beta_k * u
+       alpha_k : $/hour while the slice is USED
+       beta_k  : $/hour while the slice sits IDLE
+    committed option:  alpha = beta = committed rate r_k (paid regardless);
+                       beta optionally discounted by term length — a
+                       stranded 1y tranche stops billing 3x sooner than a
+                       stranded 3y tranche (``term_weighting``).
+    on-demand:         alpha = od_rate, beta = 0.
+
+The paper's Eq (1) is the K=1 instance (alpha_1=0, beta_1=B, od_rate=A).
+
+Because every l_k is linear in u and u(y) is monotone in y, the optimal
+stack is the *lower envelope* of the K+1 lines: each option wins a
+contiguous utilization interval, so each optimal threshold s_k is a weighted
+quantile of f at the fractile where option k hands over to the next — the
+exact stacked generalization of the A/(A+B) newsvendor quantile in
+``commitment.optimal_commitment_quantile``.  The objective stays convex
+piecewise-linear, so a grid solver over the Pallas over/under sweep serves
+as the jit/vmap oracle (``optimal_portfolio_grid``).
+
+Band-assignment solver (exact, O(T log T) per pool): the argmin of the K+1
+lines over the T+1 discrete utilization levels i/T is *demand independent* —
+one (T+1, K+1) argmin shared by every pool — and per-pool thresholds are
+gathers into the pool's sorted demand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.capacity import pricing
+
+
+@dataclasses.dataclass(frozen=True)
+class PurchaseOption:
+    """One purchasable commitment SKU.
+
+    ``rate`` is the committed $/unit-hour in the repo's normalized units
+    (mean Table-2 3y committed rate = 1.0, so on-demand ~= 2.1).
+    """
+
+    name: str
+    cloud: str
+    rate: float
+    term_weeks: int
+
+
+ON_DEMAND = "on-demand"
+
+
+def options_from_pricing(
+    plans: Sequence[pricing.SavingsPlan] | None = None,
+    *,
+    terms: Sequence[str] = ("1y", "3y"),
+    clouds: Sequence[str] | None = None,
+) -> list[PurchaseOption]:
+    """Turn Table 2 rows into PurchaseOptions (1y and 3y per SKU), rates
+    normalized so the mean 3y committed rate is 1.0 — the same unit the
+    single-level planner prices commitments in."""
+    plans = list(plans if plans is not None else pricing.SAVINGS_PLANS)
+    if clouds is not None:
+        plans = [p for p in plans if p.cloud in clouds]
+    base = 1.0 - pricing.mean_discount_3y()
+    out = []
+    for p in plans:
+        if "1y" in terms:
+            out.append(PurchaseOption(
+                f"{p.cloud}/{p.family}/1y", p.cloud,
+                (1.0 - p.discount_1y) / base, 52,
+            ))
+        if "3y" in terms:
+            out.append(PurchaseOption(
+                f"{p.cloud}/{p.family}/3y", p.cloud,
+                (1.0 - p.discount_3y) / base, 156,
+            ))
+    return out
+
+
+def option_lines(
+    options: Sequence[PurchaseOption],
+    *,
+    term_weighting: float = 0.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(alphas, betas) cost-line coefficients for ``options``.
+
+    ``term_weighting`` in [0, 1] interpolates the idle-cost coefficient
+    between exact in-window dollars (0.0: beta = rate — every active tranche
+    bills all window hours) and term-proportional stranding (1.0:
+    beta = rate * term/term_max — an idle tranche bills only until it
+    expires, so short terms are cheaper to strand; this is what lets weaker
+    1y discounts onto the envelope as a hedging mid-band)."""
+    if not options:
+        raise ValueError("portfolio requires at least one purchase option")
+    rates = jnp.asarray([o.rate for o in options], jnp.float32)
+    terms = jnp.asarray([o.term_weeks for o in options], jnp.float32)
+    load = (1.0 - term_weighting) + term_weighting * terms / terms.max()
+    return rates, rates * load
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PortfolioPlan:
+    """A stacked-commitment plan for one pool.
+
+    Arrays are aligned with the input option list; options off the envelope
+    get zero width.  ``levels[k]`` is the stack top of option k's band (==
+    the bottom of the band when the width is zero)."""
+
+    levels: jnp.ndarray       # (..., K) band tops
+    widths: jnp.ndarray       # (..., K) band widths, >= 0
+    total: jnp.ndarray        # (...,)   stack top = on-demand threshold
+    cost: jnp.ndarray         # (...,)   objective value (cost-line dollars)
+
+
+def _stack_heights(
+    has: jnp.ndarray, lo: jnp.ndarray, widths: jnp.ndarray, sentinel
+) -> jnp.ndarray:
+    """Geometric stack tops from per-option band widths: cumulative widths
+    in envelope depth order (ascending first-band index ``lo``; options off
+    the envelope sort last via ``sentinel``), scattered back to input-option
+    order.  Shared by the exact and grid solvers."""
+    order = jnp.argsort(jnp.where(has, lo, sentinel), axis=-1)
+    inv = jnp.argsort(order, axis=-1)
+    w_ord = jnp.take_along_axis(
+        jnp.broadcast_to(widths, jnp.broadcast_shapes(widths.shape, order.shape)),
+        jnp.broadcast_to(order, jnp.broadcast_shapes(widths.shape, order.shape)),
+        axis=-1,
+    )
+    heights = jnp.cumsum(w_ord, axis=-1)
+    return jnp.take_along_axis(
+        heights, jnp.broadcast_to(inv, heights.shape), axis=-1
+    )
+
+
+def _band_assignment(
+    t: int, alphas: jnp.ndarray, betas: jnp.ndarray, od_rate: float
+) -> jnp.ndarray:
+    """(T,) argmin option per capacity band; K = on-demand.
+
+    Band j sits between sorted demand values j-1 and j, where exactly j of
+    the T hours fall below it: per-height cost of covering it with option k
+    is alpha_k*(T-j) + beta_k*j, vs od_rate*(T-j) uncovered.  On-demand is
+    placed FIRST so cost ties (e.g. a zero-discount option) resolve to no
+    commitment."""
+    j = jnp.arange(t, dtype=jnp.float32)[:, None]
+    lines = jnp.concatenate(
+        [
+            jnp.asarray([[od_rate]], jnp.float32) * (t - j),
+            alphas[None, :] * (t - j) + betas[None, :] * j,
+        ],
+        axis=1,
+    )  # (T, K+1); column 0 = on-demand
+    return jnp.argmin(lines, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("od_rate",))
+def optimal_portfolio_stack(
+    f: jnp.ndarray,
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    od_rate: float = 2.1,
+) -> PortfolioPlan:
+    """Exact minimizer of the stacked cost-line objective. f (..., T).
+
+    The lower-envelope intervals are computed once (demand independent);
+    per-pool thresholds are gathers into sorted demand — vmap/jit friendly,
+    O(T log T) per pool like the single-level quantile solver."""
+    t = f.shape[-1]
+    k = alphas.shape[0]
+    best = _band_assignment(t, alphas, betas, od_rate)  # (T,)
+    opt = best - 1  # -1 = on-demand, 0..K-1 = options
+
+    sorted_f = jnp.sort(f, axis=-1)  # (..., T); band j's top is sorted_f[j]
+    bands = jnp.arange(t)
+    mask = opt[None, :] == jnp.arange(k)[:, None]      # (K, T)
+    has = mask.any(-1)
+    hi = jnp.where(mask, bands[None, :], -1).max(-1)            # (K,)
+    lo = jnp.where(mask, bands[None, :], t + 1).min(-1)         # (K,)
+
+    def gather(idx):  # sorted_f[..., idx] with idx (K,) >= 0
+        return jnp.take(sorted_f, idx, axis=-1)
+
+    tops = gather(jnp.maximum(hi, 0))
+    bottoms = jnp.where(lo > 0, gather(jnp.maximum(lo - 1, 0)), 0.0)
+    widths = jnp.where(has, tops - bottoms, 0.0)
+    # The committed bands tile a prefix of the capacity axis, so cumulative
+    # widths in envelope depth order ARE the geometric tops.  The (has, lo)
+    # assignment is demand independent — one permutation for every pool.
+    heights = _stack_heights(has, lo, widths, t + 1)
+
+    # Exact objective: integrate the winning line over every band.
+    jf = bands.astype(jnp.float32)
+    alph_all = jnp.concatenate([jnp.asarray([od_rate], jnp.float32), alphas])
+    beta_all = jnp.concatenate([jnp.asarray([0.0], jnp.float32), betas])
+    line_best = alph_all[best] * (t - jf) + beta_all[best] * jf     # (T,)
+    h = jnp.diff(sorted_f, axis=-1, prepend=jnp.zeros_like(sorted_f[..., :1]))
+    covered = (opt >= 0)
+    cost_committed = (h * line_best * covered).sum(-1)
+    total = widths.sum(-1) + jnp.zeros_like(f[..., 0])
+    over = jnp.maximum(f - total[..., None], 0.0).sum(-1)
+    cost = cost_committed + od_rate * over
+
+    shape = f.shape[:-1] + (k,)
+    return PortfolioPlan(
+        levels=jnp.broadcast_to(heights, shape),
+        widths=jnp.broadcast_to(widths, shape),
+        total=total,
+        cost=cost,
+    )
+
+
+def portfolio_cost(
+    f: jnp.ndarray,
+    levels: jnp.ndarray,
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    od_rate: float = 2.1,
+) -> jnp.ndarray:
+    """Cost-line objective of an arbitrary monotone stack. f (..., T),
+    levels (..., K) nondecreasing band tops *in stack order* (option k
+    covers the band (levels[k-1], levels[k]]).  The brute-force/test
+    oracle — reduces to ``commitment.commitment_cost`` at K=1, alpha=0."""
+    prev = jnp.concatenate(
+        [jnp.zeros_like(levels[..., :1]), levels[..., :-1]], axis=-1
+    )
+    fexp = f[..., None, :]                               # (..., 1, T)
+    top = levels[..., :, None]
+    bot = prev[..., :, None]
+    used = jnp.clip(jnp.minimum(fexp, top) - bot, 0.0, None).sum(-1)
+    width = levels - prev
+    unused = width * f.shape[-1] - used
+    over = jnp.maximum(f - levels[..., -1:], 0.0).sum(-1)
+    return (alphas * used + betas * unused).sum(-1) + od_rate * over
+
+
+def optimal_portfolio_grid(
+    f: jnp.ndarray,
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    od_rate: float = 2.1,
+    num_grid: int = 256,
+    use_kernel: bool = False,
+) -> PortfolioPlan:
+    """Grid solver on the over/under sweep — the batched jit oracle.
+
+    One sweep over candidate levels per pool yields exact per-cell
+    used/idle integrals (d/dc of the over/under hinge sums), the envelope
+    picks the best option per cell, thresholds land on cell edges
+    (resolution span/num_grid).  With ``use_kernel`` the sweep runs through
+    the Pallas 2-D kernel: P pools x G candidates in one HBM pass."""
+    squeeze = f.ndim == 1
+    if squeeze:
+        f = f[None, :]
+    p, t = f.shape
+    k = alphas.shape[0]
+
+    grid = jnp.linspace(0.0, 1.0, num_grid, dtype=jnp.float32)
+    cs = f.max(-1, keepdims=True) * grid[None, :]        # (P, G) per-pool
+    if use_kernel:
+        from repro.kernels.commitment_sweep.ops import (
+            commitment_sweep_over_under,
+        )
+        over, under = commitment_sweep_over_under(f, cs)
+    else:
+        from repro.kernels.commitment_sweep.ref import (
+            commitment_sweep_over_under_ref,
+        )
+        over, under = commitment_sweep_over_under_ref(
+            f, jnp.ones_like(f), cs
+        )
+
+    used = over[:, :-1] - over[:, 1:]                    # (P, G-1) cell ints
+    idle = under[:, 1:] - under[:, :-1]
+    cell_cost = jnp.concatenate(
+        [
+            (od_rate * used)[:, None, :],
+            alphas[None, :, None] * used[:, None, :]
+            + betas[None, :, None] * idle[:, None, :],
+        ],
+        axis=1,
+    )  # (P, K+1, G-1); index 0 = on-demand (first wins ties)
+    best = jnp.argmin(cell_cost, axis=1) - 1             # (P, G-1)
+
+    cells = jnp.arange(num_grid - 1)
+    mask = best[:, None, :] == jnp.arange(k)[None, :, None]   # (P, K, G-1)
+    has = mask.any(-1)
+    hi = jnp.where(mask, cells[None, None, :], -1).max(-1)    # (P, K)
+    lo = jnp.where(mask, cells[None, None, :], num_grid).min(-1)
+    tops = jnp.take_along_axis(cs, jnp.maximum(hi + 1, 0), axis=-1)
+    bottoms = jnp.take_along_axis(cs, jnp.clip(lo, 0, num_grid - 1), axis=-1)
+    widths = jnp.where(has, tops - bottoms, 0.0)
+    heights = _stack_heights(has, lo, widths, num_grid)
+    cost = jnp.min(cell_cost, axis=1).sum(-1)
+
+    plan = PortfolioPlan(
+        levels=heights, widths=widths, total=widths.sum(-1), cost=cost
+    )
+    if squeeze:
+        plan = PortfolioPlan(
+            levels=plan.levels[0], widths=plan.widths[0],
+            total=plan.total[0], cost=plan.cost[0],
+        )
+    return plan
+
+
+def handover_fractiles(
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    od_rate: float = 2.1,
+    resolution: int = 4096,
+) -> jnp.ndarray:
+    """(K,) utilization fractile u*_k where option k hands over to the next
+    envelope occupant; 0.0 marks options off the envelope (zero width).
+    These are the per-option critical fractiles: the optimal threshold of
+    option k on ANY demand curve is its weighted u*_k-quantile — what the
+    horizon planner evaluates on forecast prefixes."""
+    u = jnp.linspace(0.0, 1.0, resolution)
+    lines = jnp.concatenate(
+        [
+            (od_rate * (1.0 - u))[:, None],
+            alphas[None, :] * (1.0 - u)[:, None]
+            + betas[None, :] * u[:, None],
+        ],
+        axis=1,
+    )
+    best = jnp.argmin(lines, axis=1) - 1                 # (R,) -1 = od
+    k = alphas.shape[0]
+    mask = best[None, :] == jnp.arange(k)[:, None]
+    hi = jnp.where(mask, u[None, :], -1.0).max(-1)       # (K,)
+    return jnp.where(hi >= 0, hi, 0.0)
+
+
+@dataclasses.dataclass
+class PortfolioSpend:
+    """Real-dollar accounting of a stack over an evaluation window."""
+
+    committed: np.ndarray         # (K,) committed spend per option
+    on_demand: float
+    total: float
+    all_on_demand: float
+    savings_vs_on_demand: float
+
+
+def portfolio_spend(
+    f: jnp.ndarray,
+    widths: jnp.ndarray,
+    options: Sequence[PurchaseOption],
+    *,
+    od_rate: float = 2.1,
+) -> PortfolioSpend:
+    """In-window dollars: every active tranche bills its committed rate for
+    all hours; demand above the stack pays on-demand."""
+    t = f.shape[-1]
+    rates = np.asarray([o.rate for o in options])
+    w = np.asarray(widths)
+    committed = rates * w * t
+    total_level = float(w.sum())
+    over = float(jnp.maximum(f - total_level, 0.0).sum())
+    od = od_rate * over
+    all_od = od_rate * float(f.sum())
+    total = float(committed.sum()) + od
+    return PortfolioSpend(
+        committed=committed,
+        on_demand=od,
+        total=total,
+        all_on_demand=all_od,
+        savings_vs_on_demand=1.0 - total / all_od,
+    )

@@ -116,11 +116,17 @@ def shift_demand(
     movable = shiftable_frac * over
     f_cut = f - movable
     budget = movable.sum()
+    # Trough room per hour; hours already above the line contribute none
+    # (without the clip, negative "room" poisons the fill sums and the
+    # conservation rescale divides by ~0 — blowing demand up by ~1e12 when
+    # the commitment sits low and the troughs cannot absorb the budget).
+    room = jnp.maximum(c - f_cut, 0.0)
+    placeable = jnp.minimum(budget, room.sum())
 
     # Water-fill the troughs: find level L <= c such that
-    # sum(max(L - f_cut, 0) clipped to trough) == budget.
+    # sum(max(L - f_cut, 0) clipped to trough room) == placeable.
     def fill_amount(level):
-        return jnp.minimum(jnp.maximum(level - f_cut, 0.0), c - f_cut).sum()
+        return jnp.minimum(jnp.maximum(level - f_cut, 0.0), room).sum()
 
     lo = f_cut.min()
     hi = c
@@ -128,17 +134,19 @@ def shift_demand(
     def body(_, st):
         lo, hi = st
         mid = 0.5 * (lo + hi)
-        too_much = fill_amount(mid) > budget
+        too_much = fill_amount(mid) > placeable
         return jnp.where(too_much, lo, mid), jnp.where(too_much, mid, hi)
 
     import jax
 
     lo, hi = jax.lax.fori_loop(0, 40, body, (lo, hi))
     level = 0.5 * (lo + hi)
-    add = jnp.minimum(jnp.maximum(level - f_cut, 0.0), c - f_cut)
-    # Exact conservation: scale the fill to match the budget.
-    add = add * (budget / jnp.maximum(add.sum(), 1e-12))
-    return f_cut + add
+    add = jnp.minimum(jnp.maximum(level - f_cut, 0.0), room)
+    # Exact conservation: scale the fill to the placeable budget; work the
+    # troughs cannot absorb stays on the timeline, spread uniformly.
+    add = add * (placeable / jnp.maximum(add.sum(), 1e-12))
+    excess = (budget - placeable) / f.shape[-1]
+    return f_cut + add + excess
 
 
 def shiftable_supply_stats(f: np.ndarray, c: float) -> dict:

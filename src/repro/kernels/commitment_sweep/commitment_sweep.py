@@ -1,20 +1,32 @@
 """Pallas TPU kernel: one-HBM-pass commitment-cost sweep (paper §3.2).
 
-Evaluates the two-sided cost C(c) for a whole candidate grid and a batch of
-pools in a single pass over the demand trace.  This is the hot loop of the
+Evaluates the two-sided mismatch areas for a whole candidate grid and a batch
+of pools in a single pass over the demand trace.  This is the hot loop of the
 planner: P pools x G candidate levels x T hours (multi-year hourly traces,
 T ~ 26k) — bandwidth-bound, so the point of the kernel is to stream each
 (pool, time) block of the trace HBM->VMEM exactly once and amortize it over
 every candidate level resident in VMEM, instead of the naive G passes.
 
-Grid: (P/bp, G/bg, T/bt), T innermost so the (bp, bg) output block is
-revisited and accumulated across time blocks (out BlockSpec ignores the t
+The sweep is 2-D on the candidate side: every pool carries its *own* grid of
+candidate levels ``cs (P, G)`` (the grid+refine optimizer brackets each pool
+separately, and the portfolio optimizer spans each pool's own demand range).
+The kernel accumulates the raw over/under integrals
+
+    over [p, g] = sum_t w[p,t] * max(f[p,t] - c[p,g], 0)
+    under[p, g] = sum_t w[p,t] * max(c[p,g] - f[p,t], 0)
+
+as two outputs instead of a single pre-weighted cost, so one pass serves any
+(a, b) weighting — in particular all K cost lines of the §3 portfolio
+optimizer — as a cheap (P, G) epilogue.
+
+Grid: (P/bp, G/bg, T/bt), T innermost so the (bp, bg) output blocks are
+revisited and accumulated across time blocks (out BlockSpecs ignore the t
 grid index).  VMEM working set per step:
-    f block   bp x bt        (demand)
-    w block   bp x bt        (hour weights / horizon mask)
-    c block   bg             (candidate levels)
-    out block bp x bg        (accumulated costs, fp32)
-    broadcast tmp bp x bg x bt  — sized to stay well under VMEM (see ops.py)
+    f block     bp x bt        (demand)
+    w block     bp x bt        (hour weights / horizon mask)
+    c block     bp x bg        (per-pool candidate levels)
+    out blocks  2 x bp x bg    (accumulated over/under, fp32)
+    broadcast tmp bp x bg x bt — sized to stay well under VMEM (see ops.py)
 All dims padded to TPU lane/sublane multiples by ops.py.
 """
 
@@ -27,53 +39,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sweep_kernel(f_ref, w_ref, c_ref, out_ref, *, a: float, b: float):
+def _sweep_kernel(f_ref, w_ref, c_ref, over_ref, under_ref):
     t_idx = pl.program_id(2)
 
     @pl.when(t_idx == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        over_ref[...] = jnp.zeros_like(over_ref)
+        under_ref[...] = jnp.zeros_like(under_ref)
 
     f = f_ref[...].astype(jnp.float32)  # (bp, bt)
     w = w_ref[...].astype(jnp.float32)  # (bp, bt)
-    c = c_ref[...].astype(jnp.float32)  # (bg,)
+    c = c_ref[...].astype(jnp.float32)  # (bp, bg)
 
-    diff = f[:, None, :] - c[None, :, None]          # (bp, bg, bt)
-    hinge = jnp.where(diff > 0, a * diff, -b * diff)  # a*over + b*under
-    out_ref[...] += (hinge * w[:, None, :]).sum(-1)
+    diff = f[:, None, :] - c[:, :, None]             # (bp, bg, bt)
+    wexp = w[:, None, :]
+    over_ref[...] += (jnp.maximum(diff, 0.0) * wexp).sum(-1)
+    under_ref[...] += (jnp.maximum(-diff, 0.0) * wexp).sum(-1)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("a", "b", "bp", "bg", "bt", "interpret"),
+    static_argnames=("bp", "bg", "bt", "interpret"),
 )
 def commitment_sweep_kernel(
     f: jnp.ndarray,
     w: jnp.ndarray,
     cs: jnp.ndarray,
     *,
-    a: float = 2.1,
-    b: float = 1.0,
     bp: int = 8,
     bg: int = 128,
     bt: int = 512,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """f, w: (P, T); cs: (G,) -> costs (P, G).  P % bp == G % bg == T % bt == 0
-    (ops.py handles padding)."""
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """f, w: (P, T); cs: (P, G) -> (over, under), each (P, G) fp32.
+    P % bp == G % bg == T % bt == 0 (ops.py handles padding)."""
     p, t = f.shape
-    (g,) = cs.shape
+    g = cs.shape[-1]
     grid = (p // bp, g // bg, t // bt)
 
+    out_spec = pl.BlockSpec((bp, bg), lambda i, j, k: (i, j))
     return pl.pallas_call(
-        functools.partial(_sweep_kernel, a=a, b=b),
+        _sweep_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bp, bt), lambda i, j, k: (i, k)),
             pl.BlockSpec((bp, bt), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bg,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bp, bg), lambda i, j, k: (i, j)),
         ],
-        out_specs=pl.BlockSpec((bp, bg), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((p, g), jnp.float32),
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, g), jnp.float32),
+            jax.ShapeDtypeStruct((p, g), jnp.float32),
+        ],
         interpret=interpret,
     )(f, w, cs)

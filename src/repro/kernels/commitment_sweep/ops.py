@@ -11,7 +11,10 @@ import jax.numpy as jnp
 from repro.kernels.commitment_sweep.commitment_sweep import (
     commitment_sweep_kernel,
 )
-from repro.kernels.commitment_sweep.ref import commitment_sweep_ref
+from repro.kernels.commitment_sweep.ref import (
+    commitment_sweep_over_under_ref,
+    commitment_sweep_ref,
+)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -22,26 +25,30 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def commitment_sweep(
+def commitment_sweep_over_under(
     f: jnp.ndarray,
     cs: jnp.ndarray,
     w: jnp.ndarray | None = None,
     *,
-    a: float = 2.1,
-    b: float = 1.0,
     interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Cost curve C(c) for pools f (P, T) [or (T,)] over candidates cs (G,).
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw over/under integrals for pools f (P, T) [or (T,)] over candidate
+    levels cs (P, G), (G,) or (T,)-style 1-D grids.
 
-    Pads every dim to TPU-friendly multiples (weights zero on padding so
-    padded hours contribute nothing; padded pools/candidates are sliced off)
-    and dispatches to the Pallas kernel (interpret mode off-TPU).
+    The 2-D sweep primitive: every pool gets its own candidate grid in one
+    HBM pass.  Pads every dim to TPU-friendly multiples (weights zero on
+    padding so padded hours contribute nothing; padded pools/candidates are
+    sliced off; candidate padding reuses each pool's last level so no
+    spurious extreme levels enter the padded lanes) and dispatches to the
+    Pallas kernel (interpret mode off-TPU).
     """
     squeeze = f.ndim == 1
     if squeeze:
         f = f[None, :]
     p, t = f.shape
-    (g,) = cs.shape
+    if cs.ndim == 1:
+        cs = jnp.broadcast_to(cs[None, :], (p, cs.shape[0]))
+    g = cs.shape[-1]
     if w is None:
         w = jnp.ones_like(f)
 
@@ -53,15 +60,40 @@ def commitment_sweep(
     pp, gg, tt = _round_up(p, bp), _round_up(g, bg), _round_up(t, bt)
     f_pad = jnp.zeros((pp, tt), f.dtype).at[:p, :t].set(f)
     w_pad = jnp.zeros((pp, tt), w.dtype).at[:p, :t].set(w)
-    c_pad = jnp.zeros((gg,), cs.dtype).at[:g].set(cs)
+    c_pad = jnp.zeros((pp, gg), cs.dtype)
+    c_pad = c_pad.at[:p, :].set(
+        jnp.concatenate(
+            [cs, jnp.broadcast_to(cs[:, -1:], (p, gg - g))], axis=-1
+        )
+        if gg > g else cs
+    )
 
     if interpret is None:
         interpret = not _on_tpu()
 
-    out = commitment_sweep_kernel(
-        f_pad, w_pad, c_pad, a=a, b=b, bp=bp, bg=bg, bt=bt, interpret=interpret
-    )[:p, :g]
-    return out[0] if squeeze else out
+    over, under = commitment_sweep_kernel(
+        f_pad, w_pad, c_pad, bp=bp, bg=bg, bt=bt, interpret=interpret
+    )
+    over, under = over[:p, :g], under[:p, :g]
+    if squeeze:
+        over, under = over[0], under[0]
+    return over, under
+
+
+def commitment_sweep(
+    f: jnp.ndarray,
+    cs: jnp.ndarray,
+    w: jnp.ndarray | None = None,
+    *,
+    a: float = 2.1,
+    b: float = 1.0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Cost curve C(c) for pools f (P, T) [or (T,)] over candidates cs,
+    shared (G,) or per-pool (P, G).  Thin epilogue over the over/under
+    sweep: costs = a*over + b*under."""
+    over, under = commitment_sweep_over_under(f, cs, w, interpret=interpret)
+    return a * over + b * under
 
 
 @functools.partial(jax.jit, static_argnames=("num_coarse", "num_fine", "a", "b"))
@@ -106,3 +138,14 @@ def commitment_sweep_oracle(f, cs, w=None, a: float = 2.1, b: float = 1.0):
     if w is None:
         w = jnp.ones_like(f)
     return commitment_sweep_ref(f, w, cs, a, b)
+
+
+def commitment_sweep_over_under_oracle(f, cs, w=None):
+    """Reference path for the raw over/under sweep."""
+    if f.ndim == 1:
+        f = f[None, :]
+    if cs.ndim == 1:
+        cs = jnp.broadcast_to(cs[None, :], (f.shape[0], cs.shape[0]))
+    if w is None:
+        w = jnp.ones_like(f)
+    return commitment_sweep_over_under_ref(f, w, cs)

@@ -1,11 +1,13 @@
 """Pure-jnp oracle for the commitment sweep kernel.
 
-Weighted two-sided commitment cost over a candidate grid:
+Weighted two-sided commitment mismatch areas over a candidate grid:
 
-    out[p, g] = A * sum_t w[p,t] * max(f[p,t] - c[g], 0)
-             + B * sum_t w[p,t] * max(c[g] - f[p,t], 0)
+    over [p, g] = sum_t w[p,t] * max(f[p,t] - c[p,g], 0)
+    under[p, g] = sum_t w[p,t] * max(c[p,g] - f[p,t], 0)
 
-The weight vector generalizes the paper's objective to masked prefixes
+and the classic cost combination a*over + b*under.  Candidate grids are
+per-pool (``cs (P, G)``); a shared 1-D grid is just a broadcast of the same
+row.  The weight vector generalizes the paper's objective to masked prefixes
 (Algorithm 1's 52 horizons are 52 weight patterns) and non-uniform hour
 weighting.
 """
@@ -15,6 +17,22 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def commitment_sweep_over_under_ref(
+    f: jnp.ndarray,
+    w: jnp.ndarray,
+    cs: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """f, w: (P, T); cs: (P, G) -> (over, under), each (P, G) in float32."""
+    f = f.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    diff = f[:, None, :] - cs[:, :, None]  # (P, G, T)
+    wexp = w[:, None, :]
+    over = (jnp.maximum(diff, 0.0) * wexp).sum(-1)
+    under = (jnp.maximum(-diff, 0.0) * wexp).sum(-1)
+    return over, under
+
+
 def commitment_sweep_ref(
     f: jnp.ndarray,
     w: jnp.ndarray,
@@ -22,11 +40,8 @@ def commitment_sweep_ref(
     a: float = 2.1,
     b: float = 1.0,
 ) -> jnp.ndarray:
-    """f, w: (P, T); cs: (G,) -> (P, G) in float32."""
-    f = f.astype(jnp.float32)
-    w = w.astype(jnp.float32)
-    cs = cs.astype(jnp.float32)
-    diff = f[:, None, :] - cs[None, :, None]  # (P, G, T)
-    over = jnp.maximum(diff, 0.0)
-    under = jnp.maximum(-diff, 0.0)
-    return ((a * over + b * under) * w[:, None, :]).sum(-1)
+    """f, w: (P, T); cs: (P, G) or (G,) -> (P, G) in float32."""
+    if cs.ndim == 1:
+        cs = jnp.broadcast_to(cs[None, :], (f.shape[0], cs.shape[0]))
+    over, under = commitment_sweep_over_under_ref(f, w, cs)
+    return a * over + b * under

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single-pod: 256 chips as ("data", "model") = (16, 16).
@@ -16,9 +18,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    return compat.make_mesh(
+        shape, axes, axis_types=compat.auto_axis_types(len(axes))
     )
 
 
@@ -26,6 +27,6 @@ def make_host_mesh():
     """Whatever devices exist locally, as a 1-D "data" mesh (smoke tests,
     examples).  Kept separate so tests never build the 512-way mesh."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    return compat.make_mesh(
+        (n,), ("data",), axis_types=compat.auto_axis_types(1)
     )

@@ -126,21 +126,29 @@ class Trainer:
         """Run to cfg.total_steps.  ``fail_at_step`` injects a crash for the
         fault-tolerance tests."""
         total = max_steps or self.cfg.total_steps
-        while self.step < total:
-            if fail_at_step is not None and self.step == fail_at_step:
-                raise RuntimeError(f"injected failure at step {self.step}")
-            batch_np = self.pipeline.next_batch()
-            batch = jax.tree.map(jax.numpy.asarray, batch_np)
-            t0 = time.perf_counter()
-            loss, self.params, self.opt_state = self.step_fn(
-                self.params, self.opt_state, batch
-            )
-            loss = float(loss)
-            dt = time.perf_counter() - t0
-            self.watchdog.observe(self.step, dt)
-            self.losses.append(loss)
-            self.step += 1
-            if self.step % self.cfg.ckpt_every == 0:
-                self._checkpoint()
-        self.ckpt.wait()
+        try:
+            while self.step < total:
+                if fail_at_step is not None and self.step == fail_at_step:
+                    raise RuntimeError(
+                        f"injected failure at step {self.step}"
+                    )
+                batch_np = self.pipeline.next_batch()
+                batch = jax.tree.map(jax.numpy.asarray, batch_np)
+                t0 = time.perf_counter()
+                loss, self.params, self.opt_state = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+                loss = float(loss)
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(self.step, dt)
+                self.losses.append(loss)
+                self.step += 1
+                if self.step % self.cfg.ckpt_every == 0:
+                    self._checkpoint()
+        finally:
+            # Graceful-shutdown flush: drain any pending async save before a
+            # failure escapes the loop (the SIGTERM-grace-period behavior on
+            # a real cluster).  Without it a crash races the checkpoint
+            # writer thread and restart may resume from the previous step.
+            self.ckpt.wait()
         return self.losses

@@ -5,13 +5,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import commitment as cm
 from repro.core import demand as dm
 
 jax.config.update("jax_enable_x64", False)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the deterministic tests only
+    HAVE_HYPOTHESIS = False
 
 
 def _trace(n=24 * 14, key=0):
@@ -65,23 +70,6 @@ class TestSolverAgreement:
         cost_q = float(cm.commitment_cost(f, c_q))
         assert cost_g == pytest.approx(cost_q, rel=1e-3)
 
-    @settings(max_examples=25, deadline=None)
-    @given(
-        seed=st.integers(0, 2**31 - 1),
-        a=st.floats(1.1, 5.0),
-        b=st.floats(0.2, 2.0),
-        n=st.integers(24, 24 * 21),
-    )
-    def test_property_quantile_is_global_min(self, seed, a, b, n):
-        """Property: the quantile solution is never beaten by any grid point."""
-        rng = np.random.default_rng(seed)
-        f = jnp.asarray(rng.gamma(2.0, 50.0, size=n).astype(np.float32))
-        c_q = cm.optimal_commitment_quantile(f, a, b)
-        cost_q = float(cm.commitment_cost(f, c_q, a, b))
-        grid = jnp.linspace(f.min(), f.max(), 257)
-        grid_costs = cm.cost_curve(f, grid, a, b)
-        assert cost_q <= float(grid_costs.min()) * (1 + 1e-4)
-
     def test_vmap_golden(self):
         fs = jnp.stack([_trace(key=k) for k in range(4)])
         cs = jax.vmap(cm.optimal_commitment_golden)(fs)
@@ -90,6 +78,31 @@ class TestSolverAgreement:
             cq_cost = float(cm.commitment_cost(fs[i], c_q))
             cg_cost = float(cm.commitment_cost(fs[i], cs[i]))
             assert cg_cost == pytest.approx(cq_cost, rel=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    class TestSolverProperties:
+        @settings(max_examples=25, deadline=None)
+        @given(
+            seed=st.integers(0, 2**31 - 1),
+            a=st.floats(1.1, 5.0),
+            b=st.floats(0.2, 2.0),
+            n=st.integers(24, 24 * 21),
+        )
+        def test_property_quantile_is_global_min(self, seed, a, b, n):
+            """Property: the quantile solution is never beaten by any grid
+            point."""
+            rng = np.random.default_rng(seed)
+            f = jnp.asarray(rng.gamma(2.0, 50.0, size=n).astype(np.float32))
+            c_q = cm.optimal_commitment_quantile(f, a, b)
+            cost_q = float(cm.commitment_cost(f, c_q, a, b))
+            grid = jnp.linspace(f.min(), f.max(), 257)
+            grid_costs = cm.cost_curve(f, grid, a, b)
+            assert cost_q <= float(grid_costs.min()) * (1 + 1e-4)
+else:
+    class TestSolverProperties:
+        def test_property_quantile_is_global_min(self):
+            pytest.importorskip("hypothesis")
 
 
 class TestPaperNumbers:

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.launch import hlo_analysis as ha
 from repro.launch.cells import delta_configs, resolve_rules
 from repro.models.config import SHAPES
@@ -77,8 +77,8 @@ class TestDeltaConfigs:
 
 class TestRules:
     def test_resolve_drops_missing_axes(self):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((1,), ("data",),
+                                axis_types=compat.auto_axis_types(1))
         rules = resolve_rules(dict(RULESETS["train"]), mesh, 256)
         assert rules["batch"] == ("data",)
         assert rules["heads"] is None  # "model" axis doesn't exist
@@ -103,14 +103,13 @@ class TestRules:
 
 class TestSanitize:
     def _mesh(self):
-        import os
         # uses whatever devices exist; spec math only needs mesh.shape
-        return jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        return compat.make_mesh((1,), ("model",),
+                                axis_types=compat.auto_axis_types(1))
 
     def test_even_dims_untouched(self):
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((1,), ("model",),
+                                axis_types=compat.auto_axis_types(1))
         spec = Spec((32, 64), ("heads", None))
         ps = sanitize_partition_spec(spec, {"heads": "model"}, mesh)
         assert ps == P("model", None)

@@ -171,6 +171,18 @@ class TestTimeshift:
             jnp.maximum(f - c, 0).sum()
         )
 
+    def test_fluid_shift_overfull_budget_stays_finite(self):
+        """When the troughs cannot absorb the movable work (commitment far
+        below demand), the fluid shifter must cap the fill at the available
+        room and keep the excess on the timeline — not divide by the ~0
+        fill sum (regression: 1e12x demand blowup)."""
+        f = dm.synth_demand(24 * 7, dm.DemandConfig(
+            annual_growth=0.0, noise_sigma=0.0))
+        g = ts.shift_demand(f, float(f.min()) + 0.5, 0.9)
+        assert bool(jnp.isfinite(g).all())
+        assert float(g.max()) <= float(f.max()) * 1.01
+        np.testing.assert_allclose(float(g.sum()), float(f.sum()), rtol=1e-4)
+
     def test_shiftable_supply_weekend_concentration(self):
         f = np.asarray(dm.synth_demand(24 * 7 * 4, dm.DemandConfig(
             annual_growth=0.0, noise_sigma=0.0)))

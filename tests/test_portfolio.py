@@ -1,0 +1,272 @@
+"""Tests for the §3 commitment-portfolio optimizer: exact stacked-quantile
+solver vs brute force, degenerate cases, the Pallas 2-D sweep, the per-term
+planner/ladder threading, and the fleet-level acceptance comparison."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import commitment as cm
+from repro.core import demand as dm
+from repro.core import ladder as ld
+from repro.core import planner as pl
+from repro.core import portfolio as pf
+
+OD = 2.1
+
+
+def _trace(n=200, seed=0, scale=50.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.gamma(2.0, scale, size=n).astype(np.float32))
+
+
+def _brute_force_cost(f, alphas, betas, num_grid=48):
+    """Global min over monotone stacks on a level grid, trying every option
+    assignment order — the no-cleverness oracle."""
+    k = alphas.shape[0]
+    grid = np.linspace(0.0, float(f.max()) * 1.02, num_grid)
+    stacks = np.asarray([
+        s for s in itertools.combinations_with_replacement(grid, k)
+    ], np.float32)  # monotone by construction
+    best = np.inf
+    for perm in itertools.permutations(range(k)):
+        al = alphas[jnp.asarray(perm)]
+        be = betas[jnp.asarray(perm)]
+        costs = pf.portfolio_cost(
+            f[None, :], jnp.asarray(stacks), al, be, od_rate=OD
+        )
+        best = min(best, float(jnp.min(costs)))
+    return best
+
+
+class TestExactSolver:
+    def test_k1_reproduces_single_level_quantile(self):
+        """K=1 with (alpha=0, beta=B, od=A) IS the paper's Eq (1): the stack
+        top must equal the A/(A+B) order-statistic solver exactly."""
+        for seed, (a, b) in itertools.product(
+            range(4), [(2.1, 1.0), (3.0, 0.5)]
+        ):
+            f = _trace(seed=seed, n=137)
+            plan = pf.optimal_portfolio_stack(
+                f, jnp.asarray([0.0]), jnp.asarray([b]), od_rate=a
+            )
+            c_q = float(cm.optimal_commitment_quantile(f, a, b))
+            assert float(plan.total) == pytest.approx(c_q, rel=1e-6)
+            assert float(plan.cost) == pytest.approx(
+                float(cm.commitment_cost(f, c_q, a, b)), rel=1e-5
+            )
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_matches_brute_force(self, seed):
+        """Exact stacked solver is never beaten by any monotone grid stack
+        under any option ordering (random cost lines)."""
+        rng = np.random.default_rng(100 + seed)
+        k = 3
+        alphas = jnp.asarray(rng.uniform(0.0, 1.8, k).astype(np.float32))
+        betas = jnp.asarray(rng.uniform(0.1, 2.5, k).astype(np.float32))
+        f = _trace(seed=seed, n=150)
+        plan = pf.optimal_portfolio_stack(f, alphas, betas, od_rate=OD)
+        brute = _brute_force_cost(f, alphas, betas)
+        assert float(plan.cost) <= brute * (1 + 1e-4)
+
+    def test_cost_matches_evaluator(self):
+        """Solver-reported cost == portfolio_cost of its own stack (options
+        taken in envelope depth order)."""
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        f = _trace(n=400, seed=3)
+        plan = pf.optimal_portfolio_stack(f, al, be, od_rate=OD)
+        nz = [i for i in range(len(opts)) if float(plan.widths[i]) > 0]
+        nz.sort(key=lambda i: float(plan.levels[i]))
+        levels = jnp.asarray(
+            np.cumsum([float(plan.widths[i]) for i in nz]).astype(np.float32)
+        )
+        c = pf.portfolio_cost(
+            f, levels, al[jnp.asarray(nz)], be[jnp.asarray(nz)], od_rate=OD
+        )
+        assert float(plan.cost) == pytest.approx(float(c), rel=1e-5)
+
+    def test_zero_discount_gets_zero_allocation(self):
+        """An option priced at the on-demand rate can never out-compete
+        on-demand (it adds idle cost), so it must get zero width."""
+        opts = [
+            pf.PurchaseOption("useless/1y", "aws", OD, 52),
+            pf.PurchaseOption("useless/3y", "aws", OD, 156),
+            pf.PurchaseOption("good/3y", "gcp", 0.93, 156),
+        ]
+        for tw in (0.0, 1.0):
+            al, be = pf.option_lines(opts, term_weighting=tw)
+            plan = pf.optimal_portfolio_stack(
+                _trace(seed=7), al, be, od_rate=OD
+            )
+            w = np.asarray(plan.widths)
+            assert w[0] == 0.0 and w[1] == 0.0
+            assert w[2] > 0.0
+
+    def test_dominated_rate_gets_zero_allocation(self):
+        """With equal terms, only the cheapest rate can sit on the envelope
+        (identical lines up to level shifts) — single-SKU degeneracy."""
+        opts = pf.options_from_pricing(terms=("3y",))
+        al, be = pf.option_lines(opts)
+        plan = pf.optimal_portfolio_stack(_trace(seed=2), al, be, od_rate=OD)
+        w = np.asarray(plan.widths)
+        assert (w > 0).sum() == 1
+        assert w[int(np.argmin([o.rate for o in opts]))] > 0
+
+    def test_term_weighting_builds_mixed_stack(self):
+        """Term-proportional idle discounting puts a weaker-discount 1y band
+        on top of the 3y base (the hedge structure from Table-2 numbers)."""
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        plan = pf.optimal_portfolio_stack(_trace(seed=0), al, be, od_rate=OD)
+        terms = np.asarray([o.term_weeks for o in opts])
+        w = np.asarray(plan.widths)
+        assert (w[terms == 156] > 0).any()
+        assert (w[terms == 52] > 0).any()
+
+    def test_vmap_batch_of_pools(self):
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        fs = jnp.stack([_trace(seed=s, n=300) for s in range(4)])
+        plan = pf.optimal_portfolio_stack(fs, al, be, od_rate=OD)
+        assert plan.widths.shape == (4, len(opts))
+        for i in range(4):
+            solo = pf.optimal_portfolio_stack(fs[i], al, be, od_rate=OD)
+            np.testing.assert_allclose(
+                np.asarray(plan.widths[i]), np.asarray(solo.widths),
+                rtol=1e-5, atol=1e-4,
+            )
+
+
+class TestGridSolver:
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_matches_exact(self, use_kernel):
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        fs = jnp.stack([_trace(seed=s, n=500) for s in range(3)])
+        exact = pf.optimal_portfolio_stack(fs, al, be, od_rate=OD)
+        grid = pf.optimal_portfolio_grid(
+            fs, al, be, od_rate=OD, num_grid=512, use_kernel=use_kernel
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.cost), np.asarray(exact.cost), rtol=2e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.total), np.asarray(exact.total), rtol=2e-2
+        )
+
+
+class TestGridSolverStackTop:
+    def test_total_is_stack_top_regardless_of_option_order(self):
+        """Regression: grid solver's ``total`` must be the stack top
+        (sum of widths), not the last listed option's band top — a deep
+        option listed last used to truncate it to its own band."""
+        opts = [
+            pf.PurchaseOption("hedge/1y", "gcp", 1.3, 52),
+            pf.PurchaseOption("base/3y", "gcp", 0.8, 156),
+        ]
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        f = _trace(seed=11, n=400)
+        exact = pf.optimal_portfolio_stack(f, al, be, od_rate=OD)
+        grid = pf.optimal_portfolio_grid(f, al, be, od_rate=OD, num_grid=512)
+        assert float(grid.total) == pytest.approx(
+            float(jnp.sum(grid.widths)), rel=1e-6
+        )
+        assert float(grid.total) == pytest.approx(
+            float(exact.total), rel=2e-2
+        )
+
+
+class TestPallas2DSweep:
+    def test_fleet_size_vs_cost_curve(self):
+        """Acceptance: (64 pools x 256 grid x 2048 hours) kernel sweep
+        matches the jnp cost_curve reference within 1e-5 (relative)."""
+        from repro.kernels.commitment_sweep.ops import commitment_sweep
+
+        rng = np.random.default_rng(0)
+        f = jnp.asarray(rng.gamma(2, 50, (64, 2048)).astype(np.float32))
+        cs = jnp.linspace(float(f.min()), float(f.max()), 256)
+        out = commitment_sweep(f, cs)
+        ref = cm.cost_curve(f, cs)
+        err = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+        assert err < 1e-5
+
+    def test_per_pool_grids_vs_oracle(self):
+        from repro.kernels.commitment_sweep.ops import (
+            commitment_sweep_over_under,
+            commitment_sweep_over_under_oracle,
+        )
+
+        rng = np.random.default_rng(1)
+        f = jnp.asarray(rng.gamma(2, 50, (9, 413)).astype(np.float32))
+        cs = jnp.asarray(
+            np.sort(rng.uniform(0, 400, (9, 33)), -1).astype(np.float32)
+        )
+        over, under = commitment_sweep_over_under(f, cs)
+        over_r, under_r = commitment_sweep_over_under_oracle(f, cs)
+        np.testing.assert_allclose(over, over_r, rtol=2e-4, atol=1e-2)
+        np.testing.assert_allclose(under, under_r, rtol=2e-4, atol=1e-2)
+
+
+class TestPortfolioPlanner:
+    def _history(self):
+        return dm.synth_demand(24 * 7 * 20, key=jax.random.PRNGKey(0))
+
+    def test_stack_is_monotone_and_on_envelope(self):
+        res = pl.plan_portfolio(self._history(), num_horizons=6)
+        w = np.asarray(res.widths)
+        assert (w >= 0).all() and w.sum() > 0
+        qs = np.asarray(res.fractiles)
+        assert (w[qs == 0] == 0).all()          # off-envelope: nothing bought
+
+    def test_shorter_terms_clear_fewer_horizons(self):
+        """A 2-week-term synthetic option may commit above a 156-week one
+        when a demand dip lies beyond week 2 (Step 4 min is per-term)."""
+        hist = self._history()
+        opts = [
+            pf.PurchaseOption("short", "aws", 0.9, 2),
+            pf.PurchaseOption("long", "aws", 0.9, 156),
+        ]
+        res = pl.plan_portfolio(hist, opts, num_horizons=8)
+        ph = np.asarray(res.per_horizon_levels)
+        # identical rates => identical fractiles => identical per-horizon
+        # thresholds; the min differs only through the horizon mask:
+        assert ph[:2, 0].min() >= ph.min()
+
+    def test_portfolio_ladder_tranches_carry_terms(self):
+        opts = pf.options_from_pricing(clouds=("gcp",))
+        targets = np.asarray([[3.0, 10.0], [4.0, 10.0], [4.0, 12.0]])
+        terms = np.asarray([o.term_weeks * 168 for o in opts[:2]])
+        lad = ld.plan_portfolio_purchases(
+            targets, terms, period_hours=168
+        )
+        assert set(np.asarray(lad.option)) <= {0, 1}
+        for k in (0, 1):
+            sel = lad.option == k
+            assert (lad.term[sel] == terms[k]).all()
+        # per-option active level reaches each target band width
+        lvl0 = lad.active_level(3 * 168, option=0)
+        lvl1 = lad.active_level(3 * 168, option=1)
+        assert lvl0[2 * 168] == pytest.approx(4.0)
+        assert lvl1[2 * 168] == pytest.approx(12.0)
+
+
+class TestFleetAcceptance:
+    def test_portfolio_beats_single_level_on_default_fleet(self):
+        """Acceptance: portfolio total cost <= single-level plan_fleet cost
+        on the same default-fleet trace."""
+        from repro.capacity.simulator import (
+            default_fleet, fleet_chip_demand, plan_fleet,
+        )
+
+        fleets, jobs = default_fleet()
+        demand = fleet_chip_demand(fleets, jobs, 24 * 7 * 30)
+        single = plan_fleet(demand, horizon_weeks=4)
+        port = plan_fleet(demand, horizon_weeks=4, portfolio=True)
+        assert port.total_cost <= single.total_cost
+        assert port.savings_vs_single_level >= 0.0
+        assert port.breakdown                       # nonzero per-SKU spend
+        assert port.total_cost < port.all_on_demand_cost

@@ -87,6 +87,72 @@ def bench_commitment_sweep() -> list[Row]:
     return rows
 
 
+def bench_pool_portfolio_sweep() -> list[Row]:
+    """Fleet-scale per-pool planning shape (paper §6): P=12 pools x 3y of
+    hourly demand (T=26280) x G=128 per-pool candidate levels — the batch
+    the multi-pool planner feeds the commitment_sweep kernel.  Compares ONE
+    batched (P, T) x (P, G) pass against a python loop of P single-pool
+    calls.  On the kernel path the loop pays per-call dispatch AND pool
+    padding (every (1, T) call is padded to the bp=8 pool block), so the
+    batched sweep wins by ~an order of magnitude; the jnp-oracle rows are
+    context showing XLA CPU materializing the (P, G, T) broadcast instead
+    of tiling it (the problem the Pallas kernel exists to solve)."""
+    from repro.kernels.commitment_sweep.ops import (
+        commitment_sweep_over_under,
+        commitment_sweep_over_under_oracle,
+    )
+
+    rng = np.random.default_rng(3)
+    p, t, g = 12, 24 * 365 * 3, 128
+    f = jnp.asarray(rng.gamma(2, 50, (p, t)).astype(np.float32))
+    lo = f.min(-1, keepdims=True)
+    hi = f.max(-1, keepdims=True)
+    cs = lo + (hi - lo) * jnp.linspace(0.0, 1.0, g)[None, :]
+    shape = f"{p} pools x {t}h x {g} levels"
+
+    us_kb = _time(
+        lambda f_, c_: commitment_sweep_over_under(f_, c_, interpret=True),
+        f, cs, iters=1, warmup=1,
+    )
+
+    def kernel_loop(f_, c_):
+        return [
+            commitment_sweep_over_under(
+                f_[i : i + 1], c_[i : i + 1], interpret=True
+            )
+            for i in range(p)
+        ]
+
+    us_kl = _time(kernel_loop, f, cs, iters=1, warmup=1)
+    rows = [
+        ("kernel_pool_sweep_batched", us_kb,
+         f"{shape}, one (P,T)x(P,G) kernel pass"),
+        ("kernel_pool_sweep_loop", us_kl,
+         f"{p} single-pool kernel calls, {us_kl / us_kb:.1f}x slower "
+         "than batched (dispatch + bp=8 pool padding)"),
+    ]
+
+    oracle = jax.jit(
+        lambda f_, c_: commitment_sweep_over_under_oracle(f_, c_)
+    )
+    us_ob = _time(oracle, f, cs, iters=1, warmup=1)
+    us_ol = _time(
+        lambda f_, c_: [
+            oracle(f_[i : i + 1], c_[i : i + 1]) for i in range(p)
+        ],
+        f, cs, iters=1, warmup=1,
+    )
+    rows.append(
+        ("kernel_pool_sweep_oracle_batched", us_ob,
+         f"{shape}, jnp oracle, one dispatch")
+    )
+    rows.append(
+        ("kernel_pool_sweep_oracle_loop", us_ol,
+         f"{p} single-pool oracle dispatches")
+    )
+    return rows
+
+
 def bench_flash_attention() -> list[Row]:
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
@@ -143,6 +209,7 @@ def bench_linrec() -> list[Row]:
 
 ALL_KERNEL_BENCHES = [
     bench_commitment_sweep,
+    bench_pool_portfolio_sweep,
     bench_flash_attention,
     bench_linrec,
 ]

@@ -11,6 +11,7 @@ prices commitments for the fleet.
 from __future__ import annotations
 
 import dataclasses
+from collections import defaultdict
 
 import jax.numpy as jnp
 import numpy as np
@@ -21,13 +22,18 @@ from repro.core import demand as dm
 from repro.core import planner as pl
 from repro.core import portfolio as pf
 from repro.core import timeshift as ts
+from repro.capacity import pricing
 from repro.capacity.pricing import on_demand_premium
 from repro.models.model import build
 
 
 @dataclasses.dataclass(frozen=True)
 class ServingFleet:
-    """A served architecture: replicas autoscale with request demand."""
+    """A served architecture: replicas autoscale with request demand.
+
+    ``pool`` pins the fleet's chips to one (cloud, region, machine-family)
+    pool — the granularity commitments are actually purchased at (§6).
+    None falls back to a deterministic slot in the default pool catalog."""
 
     arch: str
     chips_per_replica: int
@@ -36,6 +42,7 @@ class ServingFleet:
     demand_cfg: dm.DemandConfig = dataclasses.field(
         default_factory=lambda: dm.DemandConfig(base_level=1.0)
     )
+    pool: dm.PoolKey | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,13 +55,33 @@ class TrainingJob:
     duration_hours: int
     deferrable: bool = False
     deadline_slack_hours: int = 0
+    pool: dm.PoolKey | None = None
+
+
+def default_pool_catalog() -> list[dm.PoolKey]:
+    """12 (cloud, region, machine-family) pools drawn from the Table-2 SKUs
+    — the pool granularity the released dataset keys demand by, so fleet
+    plans can answer per-cloud/per-region commitment questions."""
+    regions = ["region_0", "region_1", "region_2", "region_3"]
+    plans = list(pricing.SAVINGS_PLANS)
+    catalog = [
+        (p.cloud, regions[i % len(regions)], p.family)
+        for i, p in enumerate(plans)
+    ]
+    catalog += [
+        (p.cloud, regions[(i + 1) % len(regions)], p.family)
+        for i, p in enumerate(plans[:4])
+    ]
+    return catalog
 
 
 def default_fleet() -> tuple[list[ServingFleet], list[TrainingJob]]:
     """A fleet spanning the assigned architectures: chips-per-replica scales
-    with parameter count (bf16 weights + KV/state under ~12 GB/chip)."""
+    with parameter count (bf16 weights + KV/state under ~12 GB/chip).
+    Every fleet/job is pinned to a pool from the default catalog."""
+    catalog = default_pool_catalog()
     fleets = []
-    for arch in sorted(configs.ARCHS):
+    for i, arch in enumerate(sorted(configs.ARCHS)):
         n = build(configs.get(arch)).num_params()
         chips = max(1, int(np.ceil(n * 2 / (12 * 1024**3))))
         fleets.append(ServingFleet(
@@ -62,16 +89,53 @@ def default_fleet() -> tuple[list[ServingFleet], list[TrainingJob]]:
             chips_per_replica=chips,
             tokens_per_sec_per_replica=5e4 / chips,
             base_requests_per_hour=50.0 * chips,
+            pool=catalog[i % len(catalog)],
         ))
     jobs = [
         TrainingJob("stablelm-1.6b", chips=64, start_hour=24 * 7,
-                    duration_hours=24 * 5),
+                    duration_hours=24 * 5, pool=catalog[10]),
         TrainingJob("internlm2-20b", chips=256, start_hour=24 * 30,
-                    duration_hours=24 * 14),
+                    duration_hours=24 * 14, pool=catalog[11]),
         TrainingJob("jamba-v0.1-52b", chips=512, start_hour=24 * 60,
-                    duration_hours=24 * 21),
+                    duration_hours=24 * 21, pool=catalog[6]),
     ]
     return fleets, jobs
+
+
+def fleet_pool_demand(
+    fleets: list[ServingFleet],
+    jobs: list[TrainingJob],
+    num_hours: int,
+    *,
+    seed: int = 0,
+) -> dm.PoolSet:
+    """Hourly chip demand of the fleet, attributed per pool.
+
+    Each serving fleet / training job lands in its own (cloud, region,
+    machine-family) pool instead of being summed into one series — the
+    native shape for the batched planner.  Unpinned members fall back to a
+    deterministic catalog slot so attribution is reproducible."""
+    import jax
+
+    catalog = default_pool_catalog()
+    per_pool: dict[dm.PoolKey, np.ndarray] = defaultdict(
+        lambda: np.zeros(num_hours, np.float64)
+    )
+    for i, fl in enumerate(fleets):
+        req = np.asarray(dm.synth_demand(
+            num_hours, fl.demand_cfg, key=jax.random.PRNGKey(seed + i)
+        ))
+        req = req / req.mean() * fl.base_requests_per_hour
+        # replicas needed to serve the request rate (ceil'd, autoscaled)
+        replicas = np.ceil(req / 50.0)
+        key = fl.pool if fl.pool is not None else catalog[i % len(catalog)]
+        per_pool[tuple(key)] += replicas * fl.chips_per_replica
+    for j, job in enumerate(jobs):
+        lo = min(job.start_hour, num_hours)
+        hi = min(job.start_hour + job.duration_hours, num_hours)
+        key = job.pool if job.pool is not None else catalog[j % len(catalog)]
+        per_pool[tuple(key)][lo:hi] += job.chips
+    return dm.PoolSet.from_dict(dict(per_pool))
 
 
 def fleet_chip_demand(
@@ -81,23 +145,11 @@ def fleet_chip_demand(
     *,
     seed: int = 0,
 ) -> np.ndarray:
-    """Hourly total chip demand of the fleet."""
-    import jax
-
-    total = np.zeros(num_hours, np.float64)
-    for i, fl in enumerate(fleets):
-        req = np.asarray(dm.synth_demand(
-            num_hours, fl.demand_cfg, key=jax.random.PRNGKey(seed + i)
-        ))
-        req = req / req.mean() * fl.base_requests_per_hour
-        # replicas needed to serve the request rate (ceil'd, autoscaled)
-        replicas = np.ceil(req / 50.0)
-        total += replicas * fl.chips_per_replica
-    for job in jobs:
-        lo = min(job.start_hour, num_hours)
-        hi = min(job.start_hour + job.duration_hours, num_hours)
-        total[lo:hi] += job.chips
-    return total
+    """Hourly total chip demand of the fleet — the aggregate view, i.e. the
+    per-pool demand summed over pools (kept for single-level planning)."""
+    return fleet_pool_demand(
+        fleets, jobs, num_hours, seed=seed
+    ).aggregate().astype(np.float64)
 
 
 @dataclasses.dataclass
@@ -232,4 +284,27 @@ def plan_fleet_portfolio(
         savings_vs_on_demand=spend.savings_vs_on_demand,
         single_level_cost=single.total_cost,
         savings_vs_single_level=1.0 - spend.total / single.total_cost,
+    )
+
+
+def simulate_and_plan_pools(
+    fleets: list[ServingFleet] | None = None,
+    jobs: list[TrainingJob] | None = None,
+    *,
+    num_hours: int = 24 * 7 * 40,
+    horizon_weeks: int = 8,
+    seed: int = 0,
+    **plan_kw,
+) -> tuple[dm.PoolSet, pl.FleetPoolsPlan]:
+    """One-call per-pool pipeline: attribute the (default) fleet's demand to
+    its (cloud, region, machine-family) pools, then run the batched
+    Algorithm-1 portfolio planner over the pool axis.  Returns the PoolSet
+    alongside the plan so callers can inspect the traces that produced it."""
+    if fleets is None or jobs is None:
+        d_fleets, d_jobs = default_fleet()
+        fleets = d_fleets if fleets is None else fleets
+        jobs = d_jobs if jobs is None else jobs
+    pools = fleet_pool_demand(fleets, jobs, num_hours, seed=seed)
+    return pools, pl.plan_fleet_pools(
+        pools, horizon_weeks=horizon_weeks, **plan_kw
     )

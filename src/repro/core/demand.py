@@ -183,3 +183,114 @@ def characterize(x_hourly: np.ndarray) -> dict:
         "total_growth": total_growth,
         "annual_growth": float(total_growth ** (1.0 / max(years, 1e-9)) - 1.0),
     }
+
+
+# ---------------------------------------------------------------------------
+# Multi-pool demand (paper §2, §6)
+# ---------------------------------------------------------------------------
+
+# (cloud, region, machine_family) — the key the released dataset uses.
+PoolKey = tuple[str, str, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSet:
+    """An aligned multi-pool fleet: demand matrix (P, T) with labelled rows.
+
+    The released dataset (§6) keys demand by (cloud, region, machine_type),
+    and commitments are purchased per cloud/SKU — so the native planning
+    shape is *per pool*, not one aggregate series.  Row p of ``demand`` is
+    the hourly trace of pool ``keys[p]``; every row shares one hourly time
+    axis (loaders in ``repro.data.traces`` align ragged sources before
+    construction, so a PoolSet always stacks cleanly into the (P, T) batch
+    the vmapped solvers and the Pallas 2-D sweep consume).
+    """
+
+    keys: tuple[PoolKey, ...]
+    demand: np.ndarray                          # (P, T) float32, hourly
+    configs: tuple[DemandConfig, ...] | None = None   # per-pool synth params
+
+    def __post_init__(self):
+        demand = np.asarray(self.demand, np.float32)
+        if demand.ndim != 2:
+            raise ValueError(f"demand must be (P, T), got {demand.shape}")
+        if len(self.keys) != demand.shape[0]:
+            raise ValueError(
+                f"{len(self.keys)} keys for {demand.shape[0]} demand rows"
+            )
+        if self.configs is not None and len(self.configs) != len(self.keys):
+            raise ValueError(
+                f"{len(self.configs)} configs for {len(self.keys)} pools"
+            )
+        object.__setattr__(self, "keys", tuple(self.keys))
+        object.__setattr__(self, "demand", demand)
+
+    @property
+    def num_pools(self) -> int:
+        return self.demand.shape[0]
+
+    @property
+    def num_hours(self) -> int:
+        return self.demand.shape[1]
+
+    @property
+    def clouds(self) -> tuple[str, ...]:
+        """Per-pool cloud labels, aligned with ``demand`` rows."""
+        return tuple(k[0] for k in self.keys)
+
+    def aggregate(self) -> np.ndarray:
+        """The fleet-total series — what single-pool planning collapses to."""
+        return self.demand.sum(0)
+
+    def pool(self, key: PoolKey) -> np.ndarray:
+        return self.demand[self.keys.index(tuple(key))]
+
+    def select(
+        self,
+        cloud: str | None = None,
+        region: str | None = None,
+        machine_type: str | None = None,
+    ) -> "PoolSet":
+        """Sub-fleet matching the given key components (None = wildcard)."""
+        want = (cloud, region, machine_type)
+        idx = [
+            i for i, k in enumerate(self.keys)
+            if all(w is None or w == part for w, part in zip(want, k))
+        ]
+        return PoolSet(
+            keys=tuple(self.keys[i] for i in idx),
+            demand=self.demand[idx],
+            configs=(
+                tuple(self.configs[i] for i in idx)
+                if self.configs is not None else None
+            ),
+        )
+
+    @classmethod
+    def from_dict(
+        cls,
+        pools: dict[PoolKey, np.ndarray],
+        configs: dict[PoolKey, DemandConfig] | None = None,
+    ) -> "PoolSet":
+        """Stack a {key: trace} mapping into a PoolSet (keys sorted).
+
+        All traces must already share one length — ragged sources go through
+        ``repro.data.traces.load_dataset_csv``, whose union-timestamp
+        alignment produces equal-length series.
+        """
+        keys = tuple(sorted(pools))
+        lengths = {k: len(pools[k]) for k in keys}
+        if len(set(lengths.values())) > 1:
+            raise ValueError(
+                f"ragged pools cannot stack: lengths {lengths}; align them "
+                "first (data.traces.load_dataset_csv aligns on the union "
+                "timestamp grid)"
+            )
+        return cls(
+            keys=keys,
+            demand=np.stack([np.asarray(pools[k], np.float32) for k in keys]),
+            configs=(
+                tuple(configs[k] for k in keys) if configs is not None
+                else None
+            ),
+        )

@@ -148,6 +148,10 @@ def weighted_mape(
 
 # Batched fits across pools: vmap over the leading axis of ``ys``.
 def fit_batched(ys: jnp.ndarray, cfg: ForecastConfig = ForecastConfig()):
+    """``fit`` vmapped over a (P, T) pool batch — same short-history guard
+    on the yearly Fourier terms as the single-series path."""
+    if ys.shape[-1] < 1.2 * HOURS_PER_YEAR and cfg.yearly_order:
+        cfg = dataclasses.replace(cfg, yearly_order=0)
     t_max = float(max(ys.shape[-1] - 1, 1))
     betas = jax.vmap(lambda y: _fit(y, cfg, t_max))(ys)
     return ForecastModel(beta=betas, t_max=t_max, cfg=cfg)

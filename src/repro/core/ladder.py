@@ -139,6 +139,83 @@ def plan_portfolio_purchases(
     return ladder
 
 
+@dataclasses.dataclass(frozen=True)
+class PoolLadderBook:
+    """Per-pool tranche stacks: one :class:`Ladder` per (cloud, region,
+    machine-family) pool, aligned with ``keys``.
+
+    Commitments attach to the pool they were purchased for — a tranche in
+    one cloud/region cannot serve another pool's demand — so the fleet's
+    committed state is a *book* of independent ladders, not one schedule."""
+
+    keys: tuple
+    ladders: tuple[Ladder, ...]
+
+    def __post_init__(self):
+        if len(self.keys) != len(self.ladders):
+            raise ValueError(
+                f"{len(self.keys)} keys for {len(self.ladders)} ladders"
+            )
+        object.__setattr__(self, "keys", tuple(self.keys))
+        object.__setattr__(self, "ladders", tuple(self.ladders))
+
+    def ladder(self, key) -> Ladder:
+        return self.ladders[self.keys.index(tuple(key))]
+
+    def active_level(
+        self, num_hours: int, option: int | None = None
+    ) -> np.ndarray:
+        """(P, T) committed level per pool (optionally one option's band)."""
+        return np.stack([
+            lad.active_level(num_hours, option=option)
+            for lad in self.ladders
+        ])
+
+    def fleet_level(self, num_hours: int) -> np.ndarray:
+        """(T,) fleet-total committed level — the only view the aggregate
+        planner ever saw; kept for comparing against per-pool plans."""
+        return self.active_level(num_hours).sum(0)
+
+
+def plan_pool_portfolio_purchases(
+    pool_targets: np.ndarray,
+    term_hours: np.ndarray,
+    keys,
+    *,
+    period_hours: int = HOURS_PER_WEEK,
+    existing: PoolLadderBook | None = None,
+) -> PoolLadderBook:
+    """Portfolio laddering across a fleet of pools.
+
+    pool_targets (P, W, K): per pool, per period, the target band width of
+    each purchasing option (e.g. the (P, K) widths from
+    ``planner.plan_fleet_pools``, re-planned each week).  Each pool's
+    purchases thread through ``plan_portfolio_purchases`` independently —
+    per-pool increments, per-option terms."""
+    pool_targets = np.asarray(pool_targets)
+    keys = tuple(tuple(k) for k in keys)
+    if pool_targets.shape[0] != len(keys):
+        raise ValueError(
+            f"{len(keys)} keys for {pool_targets.shape[0]} target rows"
+        )
+    if existing is not None and existing.keys != keys:
+        # Positional reuse of another fleet's book would silently attach
+        # tranches to the wrong pool (e.g. a new pool appearing mid-replan).
+        raise ValueError(
+            f"existing book keys {existing.keys} != planned keys {keys}"
+        )
+    return PoolLadderBook(
+        keys=keys,
+        ladders=tuple(
+            plan_portfolio_purchases(
+                pool_targets[p], term_hours, period_hours=period_hours,
+                existing=existing.ladders[p] if existing else None,
+            )
+            for p in range(len(keys))
+        ),
+    )
+
+
 def ladder_vs_flat(
     demand: np.ndarray,
     weekly_targets: np.ndarray,

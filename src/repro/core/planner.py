@@ -16,13 +16,18 @@ under vmap.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.capacity import pricing
 from repro.core import commitment as cm
+from repro.core import demand as dm
 from repro.core import forecast as fc
+from repro.core import ladder as ld
 from repro.core import portfolio as pf
 from repro.core.demand import HOURS_PER_WEEK
 
@@ -132,6 +137,35 @@ def _prefix_weighted_quantiles(
     return jax.vmap(one_horizon)(w_hours)
 
 
+def _monotone_stack(
+    per_horizon: jnp.ndarray,
+    qs: jnp.ndarray,
+    term_weeks: jnp.ndarray,
+    num_horizons: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Step 4 of Algorithm 1 for one pool's option stack.
+
+    per_horizon (W, K) prefix thresholds, qs (K,) critical fractiles ->
+    (widths (K,), levels (K,)).  Takes each option's min over the horizons
+    within its own term, then re-monotonizes the stack (running max in
+    envelope-depth order) since per-option minima over different horizon
+    sets can cross.  Pure array code — vmapped over the P pool axis by
+    ``plan_fleet_pools``."""
+    weeks = jnp.arange(1, num_horizons + 1)[:, None]              # (W, 1)
+    in_term = weeks <= jnp.maximum(term_weeks[None, :], 1)
+    big = jnp.float32(jnp.inf)
+    mins = jnp.where(in_term, per_horizon, big).min(0)            # (K,)
+    on_env = qs > 0
+
+    depth = jnp.argsort(jnp.where(on_env, qs, jnp.inf))
+    inv = jnp.argsort(depth)
+    mins_d = jnp.where(on_env, mins, 0.0)[depth]
+    tops_d = jax.lax.associative_scan(jnp.maximum, mins_d)
+    prev_d = jnp.concatenate([jnp.zeros((1,), tops_d.dtype), tops_d[:-1]])
+    widths_d = jnp.where(on_env[depth], tops_d - prev_d, 0.0)
+    return widths_d[inv], tops_d[inv]
+
+
 def plan_portfolio(
     history: jnp.ndarray,
     options: list[pf.PurchaseOption] | None = None,
@@ -140,6 +174,7 @@ def plan_portfolio(
     od_rate: float = 2.1,
     term_weighting: float = 0.0,
     cfg: fc.ForecastConfig = fc.ForecastConfig(),
+    lines: tuple[jnp.ndarray, jnp.ndarray] | None = None,
 ) -> PortfolioPlanResult:
     """Algorithm 1 with one horizon sweep per purchasing option.
 
@@ -153,9 +188,16 @@ def plan_portfolio(
     renewed) — short-term options therefore clear fewer horizons and may
     commit more aggressively than long-term ones.  Finally the stack is
     re-monotonized (running max in envelope-depth order) since per-option
-    minima over different horizon sets can cross."""
+    minima over different horizon sets can cross.
+
+    ``lines`` overrides the (alphas, betas) cost lines derived from
+    ``options`` — the hook ``plan_fleet_pools`` uses to price one pool's
+    unavailable (wrong-cloud) options at the on-demand rate."""
     options = options if options is not None else pf.options_from_pricing()
-    alphas, betas = pf.option_lines(options, term_weighting=term_weighting)
+    alphas, betas = (
+        lines if lines is not None
+        else pf.option_lines(options, term_weighting=term_weighting)
+    )
     qs = pf.handover_fractiles(alphas, betas, od_rate=od_rate)
 
     model = fc.fit(history, cfg)
@@ -167,26 +209,197 @@ def plan_portfolio(
     per_horizon = _prefix_weighted_quantiles(yhat, w_hours, qs)   # Step 3
 
     term_weeks = jnp.asarray([o.term_weeks for o in options])
-    weeks = jnp.arange(1, num_horizons + 1)[:, None]              # (W, 1)
-    in_term = weeks <= jnp.maximum(term_weeks[None, :], 1)        # Step 4
-    big = jnp.float32(jnp.inf)
-    mins = jnp.where(in_term, per_horizon, big).min(0)            # (K,)
-    on_env = qs > 0
-
-    # Monotone stack in envelope-depth order (ascending fractile).
-    depth = jnp.argsort(jnp.where(on_env, qs, jnp.inf))
-    inv = jnp.argsort(depth)
-    mins_d = jnp.where(on_env, mins, 0.0)[depth]
-    tops_d = jax.lax.associative_scan(jnp.maximum, mins_d)
-    prev_d = jnp.concatenate([jnp.zeros((1,), tops_d.dtype), tops_d[:-1]])
-    widths_d = jnp.where(on_env[depth], tops_d - prev_d, 0.0)
+    widths, levels = _monotone_stack(                             # Step 4
+        per_horizon, qs, term_weeks, num_horizons
+    )
     return PortfolioPlanResult(
         options=options,
-        widths=widths_d[inv],
-        levels=tops_d[inv],
+        widths=widths,
+        levels=levels,
         per_horizon_levels=per_horizon,
         fractiles=qs,
         forecast=yhat,
+    )
+
+
+@dataclasses.dataclass
+class PoolPlanEntry:
+    """One pool's slice of a fleet plan: Algorithm-1 stack + evaluation."""
+
+    key: dm.PoolKey
+    widths: np.ndarray            # (K,) band widths, options-aligned
+    levels: np.ndarray            # (K,) stack tops
+    total_commitment: float       # stack top = on-demand threshold
+    spend: pf.PortfolioSpend      # real-dollar eval on the held-out window
+
+
+@dataclasses.dataclass
+class FleetPoolsPlan:
+    """Per-pool fleet plan: Algorithm 1 batched over the P pool axis.
+
+    ``pooling_premium`` is the diagnostic the paper's per-pool framing
+    implies: sum-of-pool-plan cost over the cost of one plan on the pooled
+    (aggregate) trace, minus 1.  The aggregate plan pretends capacity in any
+    cloud can serve any pool's demand — commitments cannot actually move
+    across clouds/SKUs, so the premium is the pooling benefit an aggregate
+    planner overstates."""
+
+    keys: tuple[dm.PoolKey, ...]
+    options: list[pf.PurchaseOption]
+    available: np.ndarray             # (P, K) purchasable mask (cloud match)
+    widths: np.ndarray                # (P, K) band widths to purchase now
+    levels: np.ndarray                # (P, K) stack tops
+    fractiles: np.ndarray             # (P, K) per-pool critical fractiles
+    per_horizon_levels: np.ndarray    # (P, W, K) prefix thresholds
+    forecasts: np.ndarray             # (P, W*168) hourly forecasts
+    ladders: ld.PoolLadderBook        # per-pool tranche stacks
+    per_pool: list[PoolPlanEntry]
+    committed_cost: float
+    on_demand_cost: float
+    total_cost: float
+    all_on_demand_cost: float
+    savings_vs_on_demand: float
+    aggregate_cost: float             # one plan on the summed fleet trace
+    pooling_premium: float
+
+    def commitment(
+        self,
+        cloud: str | None = None,
+        region: str | None = None,
+        term_weeks: int | None = None,
+    ) -> float:
+        """Answer "how much 3y GCP commitment in us-central1": total width
+        purchased, filtered by pool cloud/region and option term."""
+        total = 0.0
+        for p, key in enumerate(self.keys):
+            if cloud is not None and key[0] != cloud:
+                continue
+            if region is not None and key[1] != region:
+                continue
+            for k, opt in enumerate(self.options):
+                if term_weeks is not None and opt.term_weeks != term_weeks:
+                    continue
+                total += float(self.widths[p, k])
+        return total
+
+
+def plan_fleet_pools(
+    pools: dm.PoolSet,
+    options: list[pf.PurchaseOption] | None = None,
+    *,
+    horizon_weeks: int = 8,
+    od_rate: float | None = None,
+    term_weighting: float = 0.0,
+    cfg: fc.ForecastConfig = fc.ForecastConfig(),
+) -> FleetPoolsPlan:
+    """Algorithm 1 + the portfolio solver over every pool in ONE batched
+    pass: the (P, T) demand matrix rides the vmapped forecaster fit, one
+    shared sort per pool for all horizons x options, and per-pool purchase
+    options masked to each pool's cloud (Table-2 SKUs are per cloud).
+
+    The last ``horizon_weeks`` of the trace are held out: plans are fit on
+    the prefix and evaluated in real dollars on the holdout, per pool and
+    fleet-total, alongside the aggregate-trace plan for the pooling-premium
+    diagnostic.  Mirrors ``capacity.simulator.plan_fleet`` semantics at the
+    pool level."""
+    options = options if options is not None else pf.options_from_pricing()
+    od = od_rate if od_rate is not None else pricing.on_demand_premium()
+    eval_hours = horizon_weeks * HOURS_PER_WEEK
+    if pools.num_hours <= eval_hours:
+        raise ValueError(
+            f"need > {eval_hours} hours of demand for a {horizon_weeks}-week"
+            f" holdout, got {pools.num_hours}"
+        )
+    hist = jnp.asarray(pools.demand[:, :-eval_hours], jnp.float32)
+    actual = pools.demand[:, -eval_hours:]
+
+    # Per-pool cost lines: options off the pool's cloud priced at od_rate
+    # (provably zero width) so one dense (P, K) batch feeds vmap.
+    al_p, be_p, avail = pf.pool_option_lines(
+        options, pools.clouds, term_weighting=term_weighting, od_rate=od
+    )
+    qs = jax.vmap(
+        functools.partial(pf.handover_fractiles, od_rate=od)
+    )(al_p, be_p)                                                 # (P, K)
+
+    # Steps 1-2, batched: one vmapped fit + forecast over the P axis
+    # (fit_batched applies fit's own short-history yearly-term guard).
+    model = fc.fit_batched(hist, cfg)
+    yhat = fc.predict_batched(
+        model, hist.shape[-1] + jnp.arange(eval_hours)
+    )                                                             # (P, H)
+    w_hours = jnp.arange(1, horizon_weeks + 1) * HOURS_PER_WEEK
+
+    # Steps 3-4, vmapped over pools (per-pool fractiles ride along).
+    per_horizon = jax.vmap(
+        lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
+    )(yhat, qs)                                                   # (P, W, K)
+    term_weeks = jnp.asarray([o.term_weeks for o in options])
+    widths, levels = jax.vmap(
+        lambda ph, q: _monotone_stack(ph, q, term_weeks, horizon_weeks)
+    )(per_horizon, qs)                                            # (P, K)
+    widths_np = np.asarray(widths)
+
+    # Per-pool tranche stacks: buy every band now; terms are per-SKU.
+    term_hours = np.asarray([o.term_weeks * HOURS_PER_WEEK for o in options])
+    ladders = ld.plan_pool_portfolio_purchases(
+        widths_np[:, None, :], term_hours, pools.keys
+    )
+
+    per_pool = []
+    for p, key in enumerate(pools.keys):
+        spend = pf.portfolio_spend(
+            jnp.asarray(actual[p], jnp.float32), widths_np[p], options,
+            od_rate=od,
+        )
+        per_pool.append(PoolPlanEntry(
+            key=key,
+            widths=widths_np[p],
+            levels=np.asarray(levels[p]),
+            total_commitment=float(widths_np[p].sum()),
+            spend=spend,
+        ))
+
+    committed = sum(float(e.spend.committed.sum()) for e in per_pool)
+    on_demand = sum(e.spend.on_demand for e in per_pool)
+    total = committed + on_demand
+    all_od = sum(e.spend.all_on_demand for e in per_pool)
+    savings = 1.0 - total / all_od if all_od > 0 else 0.0
+
+    # The aggregate (single-pool) plan the fleet trace used to collapse to:
+    # same pipeline, pooled demand, every option purchasable.
+    agg_hist = jnp.asarray(hist.sum(0))
+    agg_res = plan_portfolio(
+        agg_hist, options, num_horizons=horizon_weeks, od_rate=od,
+        term_weighting=term_weighting, cfg=cfg,
+    )
+    agg_spend = pf.portfolio_spend(
+        jnp.asarray(actual.sum(0), jnp.float32), np.asarray(agg_res.widths),
+        options, od_rate=od,
+    )
+
+    return FleetPoolsPlan(
+        keys=pools.keys,
+        options=options,
+        available=avail,
+        widths=widths_np,
+        levels=np.asarray(levels),
+        fractiles=np.asarray(qs),
+        per_horizon_levels=np.asarray(per_horizon),
+        forecasts=np.asarray(yhat),
+        ladders=ladders,
+        per_pool=per_pool,
+        committed_cost=committed,
+        on_demand_cost=on_demand,
+        total_cost=total,
+        all_on_demand_cost=all_od,
+        savings_vs_on_demand=savings,
+        aggregate_cost=agg_spend.total,
+        # An empty holdout window (every pool retired) has no plan to
+        # compare against: report a neutral premium instead of dividing by 0.
+        pooling_premium=(
+            total / agg_spend.total - 1.0 if agg_spend.total > 0 else 0.0
+        ),
     )
 
 

@@ -119,6 +119,35 @@ def option_lines(
     return rates, rates * load
 
 
+def pool_option_lines(
+    options: Sequence[PurchaseOption],
+    clouds: Sequence[str],
+    *,
+    term_weighting: float = 0.0,
+    od_rate: float = 2.1,
+) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Per-pool cost lines (P, K) for a fleet of pools on ``clouds``.
+
+    Commitments are purchased per cloud/SKU (Table 2), so an option is
+    purchasable in a pool only when their clouds match.  Rather than ragged
+    per-pool option lists (which would break vmap over the P axis),
+    unavailable options are priced *at* the on-demand rate (alpha = beta =
+    od_rate): such a line never undercuts the on-demand line at any
+    utilization u > 0, and the tie at u = 0 resolves to on-demand (listed
+    first in every solver's argmin), so the envelope provably assigns them
+    zero width.  Returns (alphas (P, K), betas (P, K), available (P, K))."""
+    al, be = option_lines(options, term_weighting=term_weighting)
+    avail = np.asarray(
+        [[o.cloud == c for o in options] for c in clouds], bool
+    )
+    mask = jnp.asarray(avail)
+    return (
+        jnp.where(mask, al[None, :], od_rate),
+        jnp.where(mask, be[None, :], od_rate),
+        avail,
+    )
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PortfolioPlan:
@@ -390,5 +419,7 @@ def portfolio_spend(
         on_demand=od,
         total=total,
         all_on_demand=all_od,
-        savings_vs_on_demand=1.0 - total / all_od,
+        # A pool can sit empty over the window (e.g. its training job ended):
+        # no demand means nothing to save on.
+        savings_vs_on_demand=1.0 - total / all_od if all_od > 0 else 0.0,
     )

@@ -7,6 +7,14 @@ normalized hourly VM demand as CSV with columns
 synthesize traces matching every published statistic of the dataset
 (DESIGN.md §9); when the artifact is present on disk the loader reads it
 directly, so all benchmarks/examples run identically against real data.
+
+Two API levels:
+
+  * dict level — ``load_dataset_csv`` / ``synthetic_pools`` return
+    ``{(cloud, region, machine_type): hourly ndarray}``;
+  * :class:`repro.core.demand.PoolSet` level — ``synthetic_pool_set`` /
+    ``load_pool_set`` return the aligned (P, T) matrix the batched planner
+    (``planner.plan_fleet_pools``) and the Pallas 2-D sweep consume.
 """
 
 from __future__ import annotations
@@ -14,6 +22,7 @@ from __future__ import annotations
 import csv
 import os
 from collections import defaultdict
+from datetime import datetime
 
 import jax
 import numpy as np
@@ -23,19 +32,84 @@ from repro.core import demand as dm
 DATASET_ENV = "SHAVEDICE_DATASET"
 
 
+def _time_index(timestamps: set[str]) -> tuple[dict[str, int], int]:
+    """(timestamp -> row index, grid length) for the alignment grid.
+
+    ISO-8601 timestamps on whole hours get a *contiguous* hourly grid from
+    the earliest to the latest observed stamp, so hours missing from every
+    pool at once (a global recording outage) still occupy a slot instead of
+    silently compressing the time axis — downstream code does hour
+    arithmetic (weekly horizon slicing, Fourier phases) on array indices.
+    Unparseable or sub-hourly stamps fall back to the sorted union of
+    observed stamps."""
+    try:
+        parsed = {ts: datetime.fromisoformat(ts) for ts in timestamps}
+        lo = min(parsed.values())
+        offsets = {
+            ts: (dt - lo).total_seconds() / 3600.0
+            for ts, dt in parsed.items()
+        }
+    except (ValueError, TypeError):      # non-ISO stamps / mixed tz-ness
+        grid = sorted(timestamps)
+        return {ts: i for i, ts in enumerate(grid)}, len(grid)
+    index = {ts: int(round(o)) for ts, o in offsets.items()}
+    off_hour = any(abs(o - round(o)) > 1e-9 for o in offsets.values())
+    collides = len(set(index.values())) != len(index)
+    if off_hour or collides:
+        grid = sorted(timestamps)
+        return {ts: i for i, ts in enumerate(grid)}, len(grid)
+    return index, max(index.values()) + 1
+
+
 def load_dataset_csv(path: str) -> dict[tuple[str, str, str], np.ndarray]:
-    """Returns {(cloud, region, machine_type): hourly ndarray}."""
-    series: dict[tuple[str, str, str], list[tuple[str, float]]] = defaultdict(list)
+    """Returns {(cloud, region, machine_type): hourly ndarray}, aligned.
+
+    Alignment rule: real pools come and go (a machine family launches
+    mid-dataset, a region is retired), so per-pool row sets are ragged.
+    All series are placed on one shared grid — the contiguous hourly range
+    spanning the earliest to latest observed timestamp (see
+    ``_time_index``) — and a pool contributes its ``normalized_count`` at
+    the stamps it has rows for and **0.0 demand** at grid hours it is
+    missing: absence of a row means the pool had no recorded demand that
+    hour, not unknown demand.  Duplicate (timestamp, pool) rows are summed.
+    Every returned array therefore has the same length and the mapping
+    stacks directly into a (P, T) matrix (``PoolSet.from_dict``).
+    """
+    series: dict[tuple[str, str, str], dict[str, float]] = defaultdict(
+        lambda: defaultdict(float)
+    )
+    timestamps: set[str] = set()
     with open(path) as f:
         for row in csv.DictReader(f):
             key = (row["cloud"], row["region"], row["machine_type"])
-            series[key].append(
-                (row["timestamp"], float(row["normalized_count"]))
-            )
+            ts = row["timestamp"]
+            series[key][ts] += float(row["normalized_count"])
+            timestamps.add(ts)
+    index, n = _time_index(timestamps)
     out = {}
-    for key, rows in series.items():
-        rows.sort()
-        out[key] = np.asarray([v for _, v in rows], np.float32)
+    for key, by_ts in series.items():
+        arr = np.zeros(n, np.float32)
+        for ts, v in by_ts.items():
+            arr[index[ts]] = v
+        out[key] = arr
+    return out
+
+
+def _pool_configs(num_pools: int) -> dict[tuple[str, str, str], dm.DemandConfig]:
+    """Per-pool synthetic configs keyed like the artifact (12 machine types
+    across 3 clouds / 4 regions), varying scale, growth, and seasonality the
+    way the paper's §2 per-pool statistics do.  Clouds are the paper's real
+    three so pool keys line up with the Table-2 purchase options."""
+    clouds = ["aws", "azure", "gcp"]
+    out = {}
+    for i in range(num_pools):
+        key = (clouds[i % 3], f"region_{i % 4}", f"type_{i:02d}")
+        out[key] = dm.DemandConfig(
+            base_level=40.0 * (1.5 ** (i % 4)),
+            annual_growth=0.35 + 0.1 * (i % 5),
+            diurnal_amplitude=0.10 + 0.02 * (i % 3),
+            weekly_amplitude=0.12 + 0.02 * (i % 4),
+        )
     return out
 
 
@@ -45,20 +119,24 @@ def synthetic_pools(
     """12 machine types x synthetic 3-year traces, mirroring the artifact's
     shape (12 types, 4 regions collapsed per-pool) and the paper's §2
     statistics."""
-    clouds = ["cloud_a", "cloud_b", "cloud_c"]
-    out = {}
-    for i in range(num_pools):
-        cfg = dm.DemandConfig(
-            base_level=40.0 * (1.5 ** (i % 4)),
-            annual_growth=0.35 + 0.1 * (i % 5),
-            diurnal_amplitude=0.10 + 0.02 * (i % 3),
-            weekly_amplitude=0.12 + 0.02 * (i % 4),
-        )
-        key = (clouds[i % 3], f"region_{i % 4}", f"type_{i:02d}")
-        out[key] = np.asarray(
+    cfgs = _pool_configs(num_pools)
+    return {
+        key: np.asarray(
             dm.synth_demand(num_hours, cfg, key=jax.random.PRNGKey(seed + i))
         )
-    return out
+        for i, (key, cfg) in enumerate(cfgs.items())
+    }
+
+
+def synthetic_pool_set(
+    num_pools: int = 12, num_hours: int = 24 * 365 * 3, seed: int = 0
+) -> dm.PoolSet:
+    """The synthetic fleet as an aligned :class:`PoolSet` (keys sorted),
+    carrying each pool's generating ``DemandConfig``."""
+    return dm.PoolSet.from_dict(
+        synthetic_pools(num_pools, num_hours, seed),
+        configs=_pool_configs(num_pools),
+    )
 
 
 def load_pools(**synth_kw) -> dict[tuple[str, str, str], np.ndarray]:
@@ -68,3 +146,14 @@ def load_pools(**synth_kw) -> dict[tuple[str, str, str], np.ndarray]:
     if path and os.path.exists(path):
         return load_dataset_csv(path)
     return synthetic_pools(**synth_kw)
+
+
+def load_pool_set(**synth_kw) -> dm.PoolSet:
+    """PoolSet from the artifact when present, else the synthetic fleet.
+
+    Dataset pools are aligned by ``load_dataset_csv`` (union timestamp
+    grid), so stacking never fails on ragged sources."""
+    path = os.environ.get(DATASET_ENV, "")
+    if path and os.path.exists(path):
+        return dm.PoolSet.from_dict(load_dataset_csv(path))
+    return synthetic_pool_set(**synth_kw)

@@ -1,0 +1,340 @@
+"""Multi-pool fleet planning (paper §6): PoolSet, CSV union-grid alignment,
+batched-vs-loop solver bit-exactness, and the per-pool fleet plan."""
+
+import csv
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import demand as dm
+from repro.core import planner as pl
+from repro.core import portfolio as pf
+from repro.data import traces
+
+OD = 2.1
+
+
+def _pool_batch(p=12, t=1500, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.gamma(2.0, 50.0, (p, t)).astype(np.float32))
+
+
+class TestPoolSet:
+    def test_from_dict_sorts_and_stacks(self):
+        pools = {
+            ("gcp", "r1", "n2"): np.ones(24, np.float32),
+            ("aws", "r0", "c6i"): np.arange(24, dtype=np.float32),
+        }
+        ps = dm.PoolSet.from_dict(pools)
+        assert ps.keys == (("aws", "r0", "c6i"), ("gcp", "r1", "n2"))
+        assert ps.demand.shape == (2, 24)
+        np.testing.assert_array_equal(ps.pool(("gcp", "r1", "n2")), 1.0)
+        np.testing.assert_array_equal(
+            ps.aggregate(), pools[("aws", "r0", "c6i")] + 1.0
+        )
+
+    def test_from_dict_rejects_ragged(self):
+        pools = {
+            ("aws", "r0", "c6i"): np.ones(24),
+            ("gcp", "r1", "n2"): np.ones(20),
+        }
+        with pytest.raises(ValueError, match="ragged"):
+            dm.PoolSet.from_dict(pools)
+
+    def test_select_by_cloud(self):
+        ps = traces.synthetic_pool_set(num_pools=6, num_hours=48)
+        aws = ps.select(cloud="aws")
+        assert aws.num_pools > 0
+        assert all(k[0] == "aws" for k in aws.keys)
+        assert aws.configs is not None and len(aws.configs) == aws.num_pools
+
+    def test_key_and_config_alignment_validated(self):
+        with pytest.raises(ValueError):
+            dm.PoolSet(keys=(("a", "b", "c"),), demand=np.ones((2, 8)))
+
+
+def _write_csv(path, rows):
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=[
+            "timestamp", "cloud", "region", "machine_type",
+            "normalized_count"])
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+class TestCsvLoaderAlignment:
+    def _ts(self, h):
+        return f"2023-01-{1 + h // 24:02d}T{h % 24:02d}:00:00"
+
+    def test_roundtrip_matches_synthetic_pool_set(self, tmp_path):
+        """Write the synthetic fleet out in the dataset schema, load it
+        back, and recover the same keys / shapes / values."""
+        ref = traces.synthetic_pool_set(num_pools=4, num_hours=36)
+        rows = []
+        for key, series in zip(ref.keys, ref.demand):
+            cloud, region, mtype = key
+            for h, v in enumerate(series):
+                rows.append({
+                    "timestamp": self._ts(h), "cloud": cloud,
+                    "region": region, "machine_type": mtype,
+                    "normalized_count": float(v),
+                })
+        path = tmp_path / "shavedice.csv"
+        _write_csv(path, rows)
+        loaded = dm.PoolSet.from_dict(traces.load_dataset_csv(str(path)))
+        assert loaded.keys == ref.keys
+        assert loaded.demand.shape == ref.demand.shape
+        np.testing.assert_allclose(loaded.demand, ref.demand, rtol=1e-6)
+
+    def test_ragged_pools_align_on_union_grid(self, tmp_path):
+        """A pool missing hours (launched late, retired early) must come
+        back on the union timestamp grid with 0.0 at its missing hours —
+        not as a ragged array that cannot stack into (P, T)."""
+        rows = []
+        for h in range(48):          # full-coverage pool
+            rows.append({
+                "timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+                "machine_type": "m1", "normalized_count": 1.0 + h,
+            })
+        for h in range(12, 30):      # pool that exists for a sub-window
+            rows.append({
+                "timestamp": self._ts(h), "cloud": "gcp", "region": "r1",
+                "machine_type": "n2", "normalized_count": 5.0,
+            })
+        path = tmp_path / "ragged.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        a = pools[("aws", "r0", "m1")]
+        b = pools[("gcp", "r1", "n2")]
+        assert a.shape == b.shape == (48,)
+        np.testing.assert_array_equal(b[:12], 0.0)
+        np.testing.assert_array_equal(b[12:30], 5.0)
+        np.testing.assert_array_equal(b[30:], 0.0)
+        ps = dm.PoolSet.from_dict(pools)        # stacks cleanly
+        assert ps.demand.shape == (2, 48)
+
+    def test_global_outage_hours_keep_grid_slots(self, tmp_path):
+        """Hours missing from EVERY pool (a global recording outage) must
+        still occupy grid slots at 0.0 — dropping them would compress the
+        time axis and shift every downstream hour computation."""
+        rows = []
+        for h in list(range(10)) + list(range(13, 20)):   # hours 10-12 gone
+            rows.append({
+                "timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+                "machine_type": "m1", "normalized_count": 1.0,
+            })
+        path = tmp_path / "outage.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        a = pools[("aws", "r0", "m1")]
+        assert a.shape == (20,)
+        np.testing.assert_array_equal(a[10:13], 0.0)
+        np.testing.assert_array_equal(a[:10], 1.0)
+
+    def test_duplicate_rows_are_summed(self, tmp_path):
+        rows = [
+            {"timestamp": self._ts(0), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 2.0},
+            {"timestamp": self._ts(0), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 3.0},
+        ]
+        path = tmp_path / "dup.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        np.testing.assert_array_equal(pools[("aws", "r0", "m1")], [5.0])
+
+
+class TestBatchedSolverVsLoop:
+    """Acceptance: the batched (P, T) solver path must match a python loop
+    over pools bit-for-bit — batching is a layout change, not a numerics
+    change."""
+
+    def test_kernel_sweep_bit_exact(self):
+        from repro.kernels.commitment_sweep.ops import (
+            commitment_sweep_over_under,
+        )
+
+        fs = _pool_batch()
+        lo = fs.min(-1, keepdims=True)
+        hi = fs.max(-1, keepdims=True)
+        cs = lo + (hi - lo) * jnp.linspace(0.0, 1.0, 64)[None, :]
+        over, under = commitment_sweep_over_under(fs, cs, interpret=True)
+        for i in range(fs.shape[0]):
+            o1, u1 = commitment_sweep_over_under(
+                fs[i : i + 1], cs[i : i + 1], interpret=True
+            )
+            np.testing.assert_array_equal(np.asarray(over[i]), np.asarray(o1[0]))
+            np.testing.assert_array_equal(np.asarray(under[i]), np.asarray(u1[0]))
+
+    def test_grid_solver_bit_exact(self):
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        fs = _pool_batch()
+        batch = pf.optimal_portfolio_grid(fs, al, be, od_rate=OD, num_grid=128)
+        for i in range(fs.shape[0]):
+            solo = pf.optimal_portfolio_grid(
+                fs[i], al, be, od_rate=OD, num_grid=128
+            )
+            for field in ("widths", "levels", "total", "cost"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batch, field)[i]),
+                    np.asarray(getattr(solo, field)),
+                    err_msg=f"pool {i} field {field}",
+                )
+
+    def test_exact_solver_decisions_bit_exact(self):
+        """The purchase decision (widths/levels/total) is bit-exact; the
+        reported cost is a T-length float32 reduction whose batched split
+        may differ from the rank-1 split by an ulp, so it gets a 1e-6
+        relative bound instead."""
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        fs = _pool_batch()
+        batch = pf.optimal_portfolio_stack(fs, al, be, od_rate=OD)
+        for i in range(fs.shape[0]):
+            solo = pf.optimal_portfolio_stack(fs[i], al, be, od_rate=OD)
+            for field in ("widths", "levels", "total"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batch, field)[i]),
+                    np.asarray(getattr(solo, field)),
+                    err_msg=f"pool {i} field {field}",
+                )
+            np.testing.assert_allclose(
+                np.asarray(batch.cost[i]), np.asarray(solo.cost), rtol=1e-6
+            )
+
+
+class TestPoolOptionLines:
+    def test_unavailable_options_get_zero_width(self):
+        opts = pf.options_from_pricing()
+        clouds = ("aws", "gcp")
+        al_p, be_p, avail = pf.pool_option_lines(opts, clouds, od_rate=OD)
+        assert al_p.shape == (2, len(opts))
+        fs = _pool_batch(p=2, t=800, seed=3)
+        for p in range(2):
+            plan = pf.optimal_portfolio_stack(
+                fs[p], al_p[p], be_p[p], od_rate=OD
+            )
+            w = np.asarray(plan.widths)
+            assert (w[~avail[p]] == 0.0).all()
+            assert w[avail[p]].sum() > 0.0
+
+
+class TestFleetPoolPlanning:
+    @pytest.fixture(scope="class")
+    def plan(self):
+        pools = traces.synthetic_pool_set(num_pools=12, num_hours=24 * 7 * 16)
+        return pools, pl.plan_fleet_pools(pools, horizon_weeks=4)
+
+    def test_twelve_pool_fleet_acceptance(self, plan):
+        """Acceptance: per-pool tranche stacks + a fleet-total spend."""
+        pools, res = plan
+        assert res.widths.shape == (12, len(res.options))
+        assert len(res.ladders.ladders) == 12
+        assert res.ladders.keys == pools.keys
+        assert res.total_cost > 0
+        assert res.total_cost == pytest.approx(
+            res.committed_cost + res.on_demand_cost
+        )
+        assert 0.0 < res.savings_vs_on_demand < 0.6
+        # every pool with nonzero widths holds tranches tagged per option,
+        # each carrying that option's own term
+        term_hours = {
+            k: o.term_weeks * 168 for k, o in enumerate(res.options)
+        }
+        any_tranche = False
+        for p in range(12):
+            lad = res.ladders.ladders[p]
+            for opt_idx, term in zip(lad.option, lad.term):
+                any_tranche = True
+                assert term == term_hours[int(opt_idx)]
+        assert any_tranche
+
+    def test_cloud_availability_respected(self, plan):
+        _, res = plan
+        assert (res.widths[~res.available] == 0.0).all()
+        for p, key in enumerate(res.keys):
+            for k, opt in enumerate(res.options):
+                if res.widths[p, k] > 0:
+                    assert opt.cloud == key[0]
+
+    def test_commitment_filter_sums_widths(self, plan):
+        _, res = plan
+        total = sum(
+            res.commitment(cloud=c) for c in ("aws", "azure", "gcp")
+        )
+        assert total == pytest.approx(float(res.widths.sum()), rel=1e-6)
+        gcp_3y = res.commitment(cloud="gcp", term_weeks=156)
+        assert 0.0 <= gcp_3y <= res.commitment(cloud="gcp")
+
+    def test_pooling_premium_positive(self, plan):
+        """Per-pool plans cannot share capacity across pools, so their
+        summed cost exceeds the aggregate plan's — the pooling benefit an
+        aggregate trace overstates (the paper's per-pool framing)."""
+        _, res = plan
+        assert np.isfinite(res.pooling_premium)
+        assert res.pooling_premium > 0.0
+        assert res.aggregate_cost < res.total_cost
+
+    def test_matches_per_pool_plan_portfolio_loop(self, plan):
+        """The vmapped fleet pass reproduces a python loop of single-pool
+        ``plan_portfolio`` runs fed the same masked per-pool cost lines
+        (only the batched-vs-solo forecaster fit separates them)."""
+        from repro.capacity.pricing import on_demand_premium
+
+        pools, res = plan
+        od = on_demand_premium()        # plan_fleet_pools' default
+        al_p, be_p, _ = pf.pool_option_lines(
+            res.options, pools.clouds, od_rate=od
+        )
+        hist = pools.demand[:, : -4 * 168]
+        for p in (0, 5, 11):
+            solo = pl.plan_portfolio(
+                jnp.asarray(hist[p]), res.options, num_horizons=4,
+                od_rate=od, lines=(al_p[p], be_p[p]),
+            )
+            np.testing.assert_allclose(
+                res.fractiles[p], np.asarray(solo.fractiles), rtol=1e-6
+            )
+            # Same envelope structure (which options get bands)...
+            np.testing.assert_array_equal(
+                res.widths[p] > 0, np.asarray(solo.widths) > 0
+            )
+            # ...and the same levels up to the one-quantile-index wiggle the
+            # batched-vs-solo forecaster fit can introduce (order-statistic
+            # solvers step between adjacent sorted forecast values).
+            np.testing.assert_allclose(
+                res.widths[p], np.asarray(solo.widths), rtol=0.03, atol=0.05
+            )
+            np.testing.assert_allclose(
+                res.levels[p], np.asarray(solo.levels), rtol=0.03, atol=0.05
+            )
+
+
+class TestSimulatorPools:
+    def test_fleet_pool_demand_partitions_aggregate(self):
+        from repro.capacity.simulator import (
+            default_fleet, fleet_chip_demand, fleet_pool_demand,
+        )
+
+        fleets, jobs = default_fleet()
+        pools = fleet_pool_demand(fleets, jobs, 24 * 7 * 4)
+        agg = fleet_chip_demand(fleets, jobs, 24 * 7 * 4)
+        assert pools.num_pools == 12
+        np.testing.assert_allclose(pools.aggregate(), agg, rtol=1e-6)
+        # training job lands in its pinned pool
+        job = jobs[0]
+        trace = pools.pool(job.pool)
+        assert trace[job.start_hour + 1] >= job.chips
+
+    def test_simulate_and_plan_pools(self):
+        from repro.capacity.simulator import simulate_and_plan_pools
+
+        pools, plan = simulate_and_plan_pools(
+            num_hours=24 * 7 * 12, horizon_weeks=2
+        )
+        assert plan.widths.shape[0] == pools.num_pools
+        assert plan.total_cost > 0
+        assert plan.total_cost < plan.all_on_demand_cost

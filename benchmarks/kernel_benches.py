@@ -4,7 +4,14 @@ jit'd-oracle throughput that the capacity planner actually uses on CPU.
 On-TPU the pallas_call path compiles to MXU/VPU kernels; interpret mode
 timings here only validate plumbing overhead, so the `derived` column
 reports the problem size and the oracle GFLOP/s (the CPU-meaningful
-number)."""
+number).
+
+Every bench that touches a kernel also *checks* it against its reference at
+the benched shapes (the ARCHITECTURE.md tolerance policy); a mismatch
+raises, which `benchmarks/run.py` reports as a failed bench and turns into
+a nonzero exit — this is what the CI `bench-smoke` job gates on.  All
+benches accept ``quick=True`` (tiny shapes, fewer iters) for that job.
+"""
 
 from __future__ import annotations
 
@@ -28,14 +35,15 @@ def _time(fn, *args, iters=3, warmup=1) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_commitment_sweep() -> list[Row]:
+def bench_commitment_sweep(quick: bool = False) -> list[Row]:
     from repro.kernels.commitment_sweep.ops import (
         commitment_sweep,
         commitment_sweep_oracle,
     )
 
     rng = np.random.default_rng(0)
-    p, t, g = 32, 24 * 365, 128  # 32 pools x 1y hourly x 128 candidates
+    # 32 pools x 1y hourly x 128 candidates (quick: 4 x 4wk x 32)
+    p, t, g = (4, 24 * 28, 32) if quick else (32, 24 * 365, 128)
     f = jnp.asarray(rng.gamma(2, 50, (p, t)).astype(np.float32))
     cs = jnp.linspace(float(f.min()), float(f.max()), g)
 
@@ -49,13 +57,19 @@ def bench_commitment_sweep() -> list[Row]:
             f"{p}x{t}x{g} {flops / us_oracle / 1e3:.1f} GFLOP/s",
         )
     ]
+    kf, kc = f[:4], cs
     us_kernel = _time(
         lambda f_, c_: commitment_sweep(f_, c_, interpret=True),
-        f[:4], cs, iters=1, warmup=1,
+        kf, kc, iters=1, warmup=1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(commitment_sweep(kf, kc, interpret=True)),
+        np.asarray(commitment_sweep_oracle(kf, kc)),
+        rtol=2e-4, atol=1e-2,
     )
     rows.append(
         ("kernel_commitment_sweep_interpret", us_kernel,
-         "pallas interpret-mode validation path")
+         "pallas interpret-mode validation path, checked vs oracle")
     )
 
     # 2-D sweep: per-pool candidate grids + dual over/under accumulators
@@ -80,14 +94,20 @@ def bench_commitment_sweep() -> list[Row]:
         lambda f_, c_: commitment_sweep_over_under(f_, c_, interpret=True),
         f[:4], cs2[:4], iters=1, warmup=1,
     )
+    ko, ku = commitment_sweep_over_under(f[:4], cs2[:4], interpret=True)
+    ro, ru = commitment_sweep_over_under_oracle(f[:4], cs2[:4])
+    np.testing.assert_allclose(np.asarray(ko), np.asarray(ro),
+                               rtol=2e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(ku), np.asarray(ru),
+                               rtol=2e-4, atol=1e-2)
     rows.append(
         ("kernel_commitment_sweep_2d_over_under_interpret", us_2d_k,
-         "pallas 2-D per-pool-grid path, interpret mode")
+         "pallas 2-D per-pool-grid path, checked vs oracle")
     )
     return rows
 
 
-def bench_pool_portfolio_sweep() -> list[Row]:
+def bench_pool_portfolio_sweep(quick: bool = False) -> list[Row]:
     """Fleet-scale per-pool planning shape (paper §6): P=12 pools x 3y of
     hourly demand (T=26280) x G=128 per-pool candidate levels — the batch
     the multi-pool planner feeds the commitment_sweep kernel.  Compares ONE
@@ -103,7 +123,7 @@ def bench_pool_portfolio_sweep() -> list[Row]:
     )
 
     rng = np.random.default_rng(3)
-    p, t, g = 12, 24 * 365 * 3, 128
+    p, t, g = (4, 24 * 7 * 8, 32) if quick else (12, 24 * 365 * 3, 128)
     f = jnp.asarray(rng.gamma(2, 50, (p, t)).astype(np.float32))
     lo = f.min(-1, keepdims=True)
     hi = f.max(-1, keepdims=True)
@@ -114,6 +134,12 @@ def bench_pool_portfolio_sweep() -> list[Row]:
         lambda f_, c_: commitment_sweep_over_under(f_, c_, interpret=True),
         f, cs, iters=1, warmup=1,
     )
+    ko, ku = commitment_sweep_over_under(f, cs, interpret=True)
+    ro, ru = commitment_sweep_over_under_oracle(f, cs)
+    np.testing.assert_allclose(np.asarray(ko), np.asarray(ro),
+                               rtol=2e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(ku), np.asarray(ru),
+                               rtol=2e-4, atol=1e-2)
 
     def kernel_loop(f_, c_):
         return [
@@ -126,7 +152,7 @@ def bench_pool_portfolio_sweep() -> list[Row]:
     us_kl = _time(kernel_loop, f, cs, iters=1, warmup=1)
     rows = [
         ("kernel_pool_sweep_batched", us_kb,
-         f"{shape}, one (P,T)x(P,G) kernel pass"),
+         f"{shape}, one (P,T)x(P,G) kernel pass, checked vs oracle"),
         ("kernel_pool_sweep_loop", us_kl,
          f"{p} single-pool kernel calls, {us_kl / us_kb:.1f}x slower "
          "than batched (dispatch + bp=8 pool padding)"),
@@ -153,12 +179,64 @@ def bench_pool_portfolio_sweep() -> list[Row]:
     return rows
 
 
-def bench_flash_attention() -> list[Row]:
+def bench_rolling_replan(quick: bool = False) -> list[Row]:
+    """Rolling weekly re-planning replay (paper Algorithm 1 as operated):
+    ONE scan-compiled program vs the naive python-loop replay that re-fits
+    the forecaster on every week's extended prefix from scratch.  Fleet
+    scale is P=12 pools x 3 years x weekly cadence (~130 re-plans); the
+    scan path turns each weekly refit into a cumulative-normal-equation
+    gather, so the loop's per-week O(T D^2) re-accumulation + host
+    dispatch is the honest cost of not compiling the loop.  Target: scan
+    >= 5x at fleet scale.  Also checks the two replays price the window
+    identically (same step math, different summation order)."""
+    from repro.core import replan
+    from repro.data import traces
+
+    p, weeks, start, cadence = (
+        (3, 16, 6, 2) if quick else (12, 156, 26, 1)
+    )
+    pools = traces.synthetic_pool_set(
+        num_pools=p, num_hours=24 * 7 * weeks
+    )
+    kw = dict(
+        cadence_weeks=cadence, start_weeks=start, horizon_weeks=4 if quick
+        else 8, compare=False,
+    )
+
+    def scan_run():
+        return replan.replan_fleet_pools(pools, backend="scan", **kw)
+
+    def loop_run():
+        return replan.replan_fleet_pools(pools, backend="loop", **kw)
+
+    scan_run()                                     # pay the compile once
+    t0 = time.perf_counter()
+    scan_rep = scan_run()
+    us_scan = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    loop_rep = loop_run()
+    us_loop = (time.perf_counter() - t0) * 1e6
+    np.testing.assert_allclose(
+        scan_rep.total_cost, loop_rep.total_cost, rtol=1e-4
+    )
+    shape = (f"{p} pools x {weeks}w, cadence {cadence}w, "
+             f"{len(scan_rep.weeks)} weeks replayed")
+    return [
+        ("replan_rolling_scan", us_scan,
+         f"{shape}, one lax.scan program"),
+        ("replan_rolling_python_loop", us_loop,
+         f"per-week prefix re-fits, {us_loop / us_scan:.1f}x slower than "
+         "scan (checked equal spend)"),
+    ]
+
+
+def bench_flash_attention(quick: bool = False) -> list[Row]:
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
 
     rng = np.random.default_rng(1)
-    b, hq, hkv, s, d = 1, 8, 2, 1024, 64
+    b, hq, hkv, d = 1, 8, 2, 64
+    s = 256 if quick else 1024
     q = jnp.asarray(rng.normal(size=(b, hq, s, d)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
@@ -170,21 +248,30 @@ def bench_flash_attention() -> list[Row]:
         ("kernel_flash_attention_oracle", us_ref,
          f"b{b} h{hq}/{hkv} s{s} d{d} {flops / us_ref / 1e3:.1f} GFLOP/s"),
     ]
+    sk = 128 if quick else 256
+    qs_, ks_, vs_ = q[:, :, :sk], k[:, :, :sk], v[:, :, :sk]
     us_k = _time(
         lambda q_, k_, v_: flash_attention(q_, k_, v_, causal=True,
                                            interpret=True),
-        q[:, :, :256], k[:, :, :256], v[:, :, :256], iters=1, warmup=1,
+        qs_, ks_, vs_, iters=1, warmup=1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(flash_attention(qs_, ks_, vs_, causal=True,
+                                   interpret=True)),
+        np.asarray(attention_ref(qs_, ks_, vs_, causal=True)),
+        atol=2e-5, rtol=1e-4,
     )
     rows.append(("kernel_flash_attention_interpret", us_k,
-                 "pallas interpret-mode validation path"))
+                 "pallas interpret-mode validation path, checked vs ref"))
     return rows
 
 
-def bench_linrec() -> list[Row]:
+def bench_linrec(quick: bool = False) -> list[Row]:
     from repro.kernels.linrec.ops import rwkv6_linear_attention, rwkv6_oracle
 
     rng = np.random.default_rng(2)
-    b, h, t, d = 2, 8, 512, 64
+    b, h, d = 2, 8, 64
+    t = 128 if quick else 512
     r = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32))
@@ -197,19 +284,26 @@ def bench_linrec() -> list[Row]:
         ("kernel_linrec_oracle_scan", us_o,
          f"b{b} h{h} t{t} d{d} sequential lax.scan"),
     ]
+    sl = (slice(None, 1), slice(None, 2), slice(None, 64))
+    args = (r[sl], k[sl], v[sl], w[sl], u[:2])
     us_k = _time(
         lambda *a: rwkv6_linear_attention(*a, chunk=32, interpret=True)[0],
-        r[:1, :2, :64], k[:1, :2, :64], v[:1, :2, :64], w[:1, :2, :64], u[:2],
-        iters=1, warmup=1,
+        *args, iters=1, warmup=1,
+    )
+    y_k = rwkv6_linear_attention(*args, chunk=32, interpret=True)[0]
+    y_r = rwkv6_oracle(*args)[0]
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_r), atol=2e-3, rtol=2e-3
     )
     rows.append(("kernel_linrec_interpret", us_k,
-                 "pallas interpret-mode validation path"))
+                 "pallas interpret-mode validation path, checked vs ref"))
     return rows
 
 
 ALL_KERNEL_BENCHES = [
     bench_commitment_sweep,
     bench_pool_portfolio_sweep,
+    bench_rolling_replan,
     bench_flash_attention,
     bench_linrec,
 ]

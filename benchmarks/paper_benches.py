@@ -35,9 +35,11 @@ def _time(fn, *args, iters=5, warmup=2) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_demand_characterization() -> list[Row]:
+def bench_demand_characterization(quick: bool = False) -> list[Row]:
     """Paper §2.2 / Figs 2,5,7: dataset statistics of the calibrated trace."""
-    trace = dm.synth_demand(24 * 365 * 3, key=jax.random.PRNGKey(7))
+    trace = dm.synth_demand(
+        24 * 365 if quick else 24 * 365 * 3, key=jax.random.PRNGKey(7)
+    )
     us = _time(lambda t: dm.hourly_to_daily(t), trace)
     stats = dm.characterize(np.asarray(trace))
     return [
@@ -49,7 +51,7 @@ def bench_demand_characterization() -> list[Row]:
     ]
 
 
-def bench_commitment_fig4() -> list[Row]:
+def bench_commitment_fig4(quick: bool = False) -> list[Row]:
     """Paper Fig 4: 9 commitment scenarios over two weeks, A=2.1, B=1."""
     f = dm.synth_demand(
         24 * 14, dm.DemandConfig(annual_growth=0.0, noise_sigma=0.005),
@@ -69,7 +71,7 @@ def bench_commitment_fig4() -> list[Row]:
     ]
 
 
-def bench_sensitivity_table3() -> list[Row]:
+def bench_sensitivity_table3(quick: bool = False) -> list[Row]:
     """Paper Table 3: cost delta per $1M when the commitment is computed
     from a trend-blind forecast instead of actuals, by trend x update freq."""
     rows: list[Row] = []
@@ -77,7 +79,7 @@ def bench_sensitivity_table3() -> list[Row]:
         HOURS_PER_WEEK, dm.DemandConfig(annual_growth=0.0, noise_sigma=0.0)
     )
     t0 = time.perf_counter()
-    for update_weeks in (1, 2, 4, 8):
+    for update_weeks in (1, 2) if quick else (1, 2, 4, 8):
         for trend in (0.10, 0.50, 1.00):
             hours = update_weeks * HOURS_PER_WEEK
             growth = (1.0 + trend) ** (
@@ -99,10 +101,12 @@ def bench_sensitivity_table3() -> list[Row]:
     return [(n, us, d) for n, _, d in rows]
 
 
-def bench_planner_fig8() -> list[Row]:
+def bench_planner_fig8(quick: bool = False) -> list[Row]:
     """Paper Fig 8: 1-week vs 2-week forecast horizon commitment, evaluated
     over the 2-week window containing a holiday dip."""
-    hist = dm.synth_demand(24 * 7 * 20, key=jax.random.PRNGKey(3))
+    hist = dm.synth_demand(
+        24 * 7 * (8 if quick else 20), key=jax.random.PRNGKey(3)
+    )
     res = pl.plan_commitment(hist, num_horizons=4)
     base = dm.synth_demand(
         HOURS_PER_WEEK * 2, dm.DemandConfig(annual_growth=0.0,
@@ -125,7 +129,7 @@ def bench_planner_fig8() -> list[Row]:
     ]
 
 
-def bench_ladder_fig9() -> list[Row]:
+def bench_ladder_fig9(quick: bool = False) -> list[Row]:
     """Paper Fig 9: flat vs perfectly-laddered commitment over a 4-week
     window with a year-end demand drop (paper: ~1.1% savings)."""
     demand = np.asarray(dm.synth_demand(
@@ -147,17 +151,20 @@ def bench_ladder_fig9() -> list[Row]:
     ]
 
 
-def bench_timeshift_sec4() -> list[Row]:
+def bench_timeshift_sec4(quick: bool = False) -> list[Row]:
     """Paper §4: unused-commitment trough supply and shiftable workloads."""
-    f = np.asarray(dm.synth_demand(24 * 7 * 52, key=jax.random.PRNGKey(4)))
+    f = np.asarray(dm.synth_demand(
+        24 * 7 * (12 if quick else 52), key=jax.random.PRNGKey(4)
+    ))
     c = float(cm.optimal_commitment_quantile(jnp.asarray(f)))
     stats = ts.shiftable_supply_stats(f, c)
     # schedule a 5%-of-total deferrable workload into the troughs
     total_work = f.sum() * 0.05
+    n_jobs = 12 if quick else 52
     jobs = [
-        ts.Job(arrival=int(h), work=float(total_work / 52),
+        ts.Job(arrival=int(h), work=float(total_work / n_jobs),
                deadline=int(h) + 24 * 7)
-        for h in np.linspace(0, len(f) - 24 * 7 - 1, 52)
+        for h in np.linspace(0, len(f) - 24 * 7 - 1, n_jobs)
     ]
     t0 = time.perf_counter()
     out = ts.schedule_jobs(f, c, jobs)
@@ -173,7 +180,7 @@ def bench_timeshift_sec4() -> list[Row]:
     ]
 
 
-def bench_freepool_fig12() -> list[Row]:
+def bench_freepool_fig12(quick: bool = False) -> list[Row]:
     """Paper Fig 12: static vs predicted free pool on held-out demand."""
     hist = dm.synth_demand(24 * 7 * 8, key=jax.random.PRNGKey(5))
     fut = dm.synth_demand(24 * 7 * 9, key=jax.random.PRNGKey(5))[-24 * 7:]
@@ -192,10 +199,11 @@ def bench_freepool_fig12() -> list[Row]:
     ]
 
 
-def bench_forecast_quality() -> list[Row]:
+def bench_forecast_quality(quick: bool = False) -> list[Row]:
     """§3.3.3: forecaster asymmetric-error metric on held-out data."""
-    full = dm.synth_demand(24 * 7 * 30, key=jax.random.PRNGKey(6))
-    hist, fut = full[: 24 * 7 * 26], full[24 * 7 * 26:]
+    n = 12 if quick else 30
+    full = dm.synth_demand(24 * 7 * n, key=jax.random.PRNGKey(6))
+    hist, fut = full[: 24 * 7 * (n - 4)], full[24 * 7 * (n - 4):]
     model = fc.fit(hist)
     us = _time(lambda h: fc._fit(h, fc.ForecastConfig(),
                                  float(h.shape[0] - 1)), hist,
@@ -209,15 +217,16 @@ def bench_forecast_quality() -> list[Row]:
     ]
 
 
-def bench_portfolio_table2() -> list[Row]:
+def bench_portfolio_table2(quick: bool = False) -> list[Row]:
     """Beyond-paper: Table-2 SKU portfolio vs the single averaged commitment
     level, batched over a fleet of pools.  The exact stacked-quantile solver
     is one sort + K gathers per pool; the grid solver is timed on its jnp
     reference path (the Pallas 2-D sweep behind ``use_kernel=True`` is
     benchmarked in kernel_benches and validated in tests)."""
+    n_pools, n_weeks = (4, 8) if quick else (16, 52)
     pools = jnp.stack([
-        dm.synth_demand(24 * 7 * 52, key=jax.random.PRNGKey(i))
-        for i in range(16)
+        dm.synth_demand(24 * 7 * n_weeks, key=jax.random.PRNGKey(i))
+        for i in range(n_pools)
     ])
     opts = pt.options_from_pricing()
     al, be = pt.option_lines(opts, term_weighting=1.0)

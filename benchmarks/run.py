@@ -3,27 +3,72 @@
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from the
 dry-run artifacts (see benchmarks/roofline.py and EXPERIMENTS.md §Roofline);
 this harness covers the paper-results reproduction and kernel throughputs.
+
+Flags:
+    --quick        tiny shapes / fewer iters — the CI `bench-smoke` mode.
+                   Kernel benches still run their kernel-vs-reference
+                   tolerance checks, so a kernel regression fails the job.
+    --json PATH    also write rows + failures as JSON (the CI artifact).
+
+Exit status is nonzero if any bench raises (including a failed
+kernel-vs-reference check inside a bench).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main() -> None:
-    sys.path.insert(0, "src")
+
+def main(argv=None) -> None:
+    # Robust to invocation directory: repo root (for `benchmarks.*`) and
+    # src (for `repro.*`) both land on the path.
+    for p in (os.path.join(_ROOT, "src"), _ROOT):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-shape smoke mode (CI bench-smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results JSON (e.g. BENCH_ci.json)")
+    args = ap.parse_args(argv)
+
     from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
     from benchmarks.paper_benches import ALL_PAPER_BENCHES
 
     print("name,us_per_call,derived")
-    failures = []
+    rows, failures = [], []
     for bench in ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES:
         try:
-            for name, us, derived in bench():
+            for name, us, derived in bench(quick=args.quick):
+                rows.append({"name": name, "us_per_call": us,
+                             "derived": derived})
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:  # noqa: BLE001
-            failures.append((bench.__name__, repr(e)))
+            failures.append({"bench": bench.__name__, "error": repr(e)})
             print(f"{bench.__name__},NaN,FAILED: {e!r}")
+
+    if args.json:
+        import jax
+
+        payload = {
+            "quick": args.quick,
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "rows": rows,
+            "failures": failures,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}: {len(rows)} rows, "
+              f"{len(failures)} failures", file=sys.stderr)
+
     if failures:
         raise SystemExit(f"{len(failures)} benches failed: {failures}")
 

@@ -308,3 +308,25 @@ def simulate_and_plan_pools(
     return pools, pl.plan_fleet_pools(
         pools, horizon_weeks=horizon_weeks, **plan_kw
     )
+
+
+def simulate_and_replan_pools(
+    fleets: list[ServingFleet] | None = None,
+    jobs: list[TrainingJob] | None = None,
+    *,
+    num_hours: int = 24 * 7 * 60,
+    cadence_weeks: int = 1,
+    horizon_weeks: int = 8,
+    seed: int = 0,
+    **replan_kw,
+):
+    """The rolling counterpart of :func:`simulate_and_plan_pools`: attribute
+    the fleet's demand to its pools, then *replay* the weekly re-planning
+    loop over the whole simulated window (re-fit, re-solve, buy increments,
+    roll tranches off) instead of fitting once against a holdout.  Returns
+    ``(PoolSet, repro.core.replan.RollingPlanReport)`` — the report carries
+    the one-shot and hindsight baselines for the same window."""
+    return simulate_and_plan_pools(
+        fleets, jobs, num_hours=num_hours, horizon_weeks=horizon_weeks,
+        seed=seed, mode="rolling", cadence_weeks=cadence_weeks, **replan_kw,
+    )

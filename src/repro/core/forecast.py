@@ -146,6 +146,150 @@ def weighted_mape(
     return (w * jnp.abs(err)).mean(-1)
 
 
+def _ridge_solve(gram: jnp.ndarray, rhs: jnp.ndarray, ridge: float):
+    """Solve (gram + ridge I) beta = rhs for one shared gram and a batch of
+    right-hand sides rhs (P, D) -> (P, D)."""
+    g = gram + ridge * jnp.eye(gram.shape[-1], dtype=gram.dtype)
+    return jnp.linalg.solve(g, rhs.T).T
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixFitState:
+    """Precomputed normal-equation state for *rolling* prefix re-fits.
+
+    The rolling planner re-fits the forecaster every week on the extended
+    demand prefix.  Re-running :func:`fit_batched` per week costs a full
+    O(T D^2) design pass per refit; but with one FIXED design matrix (time
+    normalization ``t_max`` and changepoint locations pinned to the full
+    trace so every week solves in the same basis), the week-w normal
+    equations are *prefix sums* of per-week blocks:
+
+        gram_prefix[w] = sum_{t < (w+1) 168} x_t x_t^T     (pool-shared)
+        rhs_prefix[p, w] = sum_{t < (w+1) 168} x_t log y_{p,t}
+
+    so a refit inside ``lax.scan`` is one (D, D) gather + ridge solve —
+    O(D^3) per week instead of O(T D^2) — which is what makes a multi-year
+    replay one compiled program (see ``repro.core.replan``).
+
+    Unweighted (the IRLS asymmetry reweights per-residual and therefore
+    needs a full masked pass; :func:`irls_refine` provides it as an optional
+    exact refinement on top of the prefix solve).
+    """
+
+    x: jnp.ndarray            # (T + H, D) design over history + horizon
+    gram_prefix: jnp.ndarray  # (W, D, D) cumulative X^T X per week prefix
+    rhs_prefix: jnp.ndarray   # (P, W, D) cumulative X^T log y per prefix
+    logy: jnp.ndarray         # (P, T) log-space targets
+    cfg: ForecastConfig
+    t_max: float
+    num_hist_hours: int
+    period_hours: int
+
+    @property
+    def num_weeks(self) -> int:
+        return self.gram_prefix.shape[0]
+
+
+def prefix_fit_state(
+    ys: jnp.ndarray,
+    cfg: ForecastConfig = ForecastConfig(),
+    *,
+    horizon_hours: int,
+    period_hours: int = HOURS_PER_WEEK,
+    min_prefix_hours: int | None = None,
+) -> PrefixFitState:
+    """Build the rolling-refit state for a (P, T) pool batch.
+
+    ``min_prefix_hours`` is the shortest prefix any refit will see: the
+    short-history guard on the yearly Fourier terms keys on it (the one-shot
+    ``fit`` keys the same guard on its single history length).  T is
+    truncated to whole periods."""
+    ys = jnp.asarray(ys, jnp.float32)
+    num_weeks = ys.shape[-1] // period_hours
+    t_hist = num_weeks * period_hours
+    ys = ys[..., :t_hist]
+    guard_hours = t_hist if min_prefix_hours is None else min_prefix_hours
+    if guard_hours < 1.2 * HOURS_PER_YEAR and cfg.yearly_order:
+        cfg = dataclasses.replace(cfg, yearly_order=0)
+    t_max = float(max(t_hist - 1, 1))
+    t_all = jnp.arange(t_hist + horizon_hours, dtype=jnp.float32)
+    x = design_matrix(t_all, cfg, t_max)
+    xh = x[:t_hist]
+    d = xh.shape[-1]
+    xw = xh.reshape(num_weeks, period_hours, d)
+    gram_prefix = jnp.cumsum(
+        jnp.einsum("wtd,wte->wde", xw, xw), axis=0
+    )
+    logy = jnp.log(jnp.maximum(ys, 1e-6))
+    lw = logy.reshape(ys.shape[0], num_weeks, period_hours)
+    rhs_prefix = jnp.cumsum(jnp.einsum("wtd,pwt->pwd", xw, lw), axis=1)
+    return PrefixFitState(
+        x=x, gram_prefix=gram_prefix, rhs_prefix=rhs_prefix, logy=logy,
+        cfg=cfg, t_max=t_max, num_hist_hours=t_hist,
+        period_hours=period_hours,
+    )
+
+
+def solve_prefix(state: PrefixFitState, week) -> jnp.ndarray:
+    """beta (P, D) fit on the prefix of ``week`` whole periods — one gather
+    into the cumulative normal equations + a ridge solve.  ``week`` may be a
+    traced integer (scan-safe); must be >= 1."""
+    g = jax.lax.dynamic_index_in_dim(
+        state.gram_prefix, week - 1, axis=0, keepdims=False
+    )
+    r = jax.lax.dynamic_index_in_dim(
+        state.rhs_prefix, week - 1, axis=1, keepdims=False
+    )
+    return _ridge_solve(g, r, state.cfg.ridge)
+
+
+def solve_prefix_direct(state: PrefixFitState, week) -> jnp.ndarray:
+    """The same prefix fit computed the naive way: mask the full design and
+    re-accumulate the normal equations from scratch, O(T D^2) per call.
+    This is the python-loop replay baseline the scan path is benched
+    against; it differs from :func:`solve_prefix` only in float summation
+    order."""
+    xh = state.x[: state.num_hist_hours]
+    t = jnp.arange(state.num_hist_hours)
+    mask = (t < week * state.period_hours).astype(xh.dtype)
+    xm = xh * mask[:, None]
+    g = xm.T @ xh
+    r = jnp.einsum("td,pt->pd", xm, state.logy)
+    return _ridge_solve(g, r, state.cfg.ridge)
+
+
+def irls_refine(
+    state: PrefixFitState, beta: jnp.ndarray, week, iters: int
+) -> jnp.ndarray:
+    """Optional asymmetric-error refinement of a prefix fit: ``iters`` IRLS
+    passes over the masked prefix (under-forecast residuals weighted
+    ``cfg.asym_weight``).  Each pass is a full O(P T D^2) masked
+    accumulation — exact but W-times more expensive inside a replay, hence
+    opt-in (``iters=0`` keeps the pure prefix-sum path)."""
+    if iters == 0:
+        return beta
+    xh = state.x[: state.num_hist_hours]
+    t = jnp.arange(state.num_hist_hours)
+    mask = (t < week * state.period_hours).astype(xh.dtype)
+    eye = state.cfg.ridge * jnp.eye(xh.shape[-1], dtype=xh.dtype)
+    for _ in range(iters):
+        resid = state.logy - beta @ xh.T                     # (P, T)
+        w = jnp.where(resid > 0, state.cfg.asym_weight, 1.0) * mask
+        g = jnp.einsum("pt,td,te->pde", w, xh, xh)           # (P, D, D)
+        r = jnp.einsum("pt,td->pd", w * state.logy, xh)
+        beta = jax.vmap(lambda gi, ri: jnp.linalg.solve(gi + eye, ri))(g, r)
+    return beta
+
+
+def predict_from_beta(
+    state: PrefixFitState, beta: jnp.ndarray, t_start, num_hours: int
+) -> jnp.ndarray:
+    """(P, num_hours) forecast from prefix-fit betas starting at absolute
+    hour ``t_start`` (traced-safe dynamic slice into the shared design)."""
+    xf = jax.lax.dynamic_slice_in_dim(state.x, t_start, num_hours, axis=0)
+    return jnp.exp(beta @ xf.T)
+
+
 # Batched fits across pools: vmap over the leading axis of ``ys``.
 def fit_batched(ys: jnp.ndarray, cfg: ForecastConfig = ForecastConfig()):
     """``fit`` vmapped over a (P, T) pool batch — same short-history guard

@@ -24,6 +24,11 @@ import numpy as np
 from repro.core import commitment as cm
 from repro.core.demand import HOURS_PER_WEEK
 
+# Increments below this are numerical dust, not purchases: both the host
+# ladder planners and the scan-compiled rolling replay apply the same
+# threshold so their tranche books agree.
+PURCHASE_EPS = 1e-9
+
 
 @dataclasses.dataclass(frozen=True)
 class Ladder:
@@ -63,6 +68,27 @@ class Ladder:
             active = active & (self.option[None, :] == option)
         return (active * self.amount[None, :]).sum(-1)
 
+    def active_width(self, hour: int, option: int | None = None) -> float:
+        """Committed width active at one hour — O(tranches), no activity
+        matrix.  A tranche (start, term) is live for hours [start,
+        start+term): bought in week w with term k weeks it contributes
+        through week w+k-1 and has rolled off by week w+k."""
+        live = (hour >= self.start) & (hour < self.start + self.term)
+        if option is not None:
+            live = live & (self.option == option)
+        return float((live * self.amount).sum())
+
+    def option_widths(self, hour: int, num_options: int) -> np.ndarray:
+        """(K,) active width per purchasing option at ``hour`` (untagged
+        option=-1 tranches are excluded)."""
+        live = (
+            (hour >= self.start) & (hour < self.start + self.term)
+            & (self.option >= 0)
+        )
+        out = np.zeros(num_options)
+        np.add.at(out, self.option[live], self.amount[live])
+        return out
+
     def extended(
         self, start: int, term: int, amount: float, option: int = -1
     ) -> "Ladder":
@@ -96,9 +122,8 @@ def plan_purchases(
     num_periods = len(target_levels)
     for p in range(num_periods):
         t0 = p * period_hours
-        active_now = float(ladder.active_level(t0 + 1)[t0]) if t0 >= 0 else 0.0
-        gap = float(target_levels[p]) - active_now
-        if gap > 1e-9:
+        gap = float(target_levels[p]) - ladder.active_width(t0)
+        if gap > PURCHASE_EPS:
             ladder = ladder.extended(t0, term_hours, gap)
     return ladder
 
@@ -122,19 +147,14 @@ def plan_portfolio_purchases(
     target_levels = np.asarray(target_levels)
     num_periods, num_options = target_levels.shape
 
-    def active_at(lad: Ladder, t0: int, k: int) -> float:
-        # Single-hour sample, O(tranches) — not the full activity matrix.
-        live = (
-            (t0 >= lad.start) & (t0 < lad.start + lad.term)
-            & (lad.option == k)
-        )
-        return float((live * lad.amount).sum())
-
     for p in range(num_periods):
         t0 = p * period_hours
         for k in range(num_options):
-            gap = float(target_levels[p, k]) - active_at(ladder, t0, k)
-            if gap > 1e-9:
+            # Single-hour active sample, O(tranches) — an increment tops up
+            # exactly the live width, so an active tranche is never
+            # double-counted into a new purchase.
+            gap = float(target_levels[p, k]) - ladder.active_width(t0, k)
+            if gap > PURCHASE_EPS:
                 ladder = ladder.extended(t0, int(term_hours[k]), gap, k)
     return ladder
 
@@ -175,6 +195,14 @@ class PoolLadderBook:
         """(T,) fleet-total committed level — the only view the aggregate
         planner ever saw; kept for comparing against per-pool plans."""
         return self.active_level(num_hours).sum(0)
+
+    def option_widths(self, hour: int, num_options: int) -> np.ndarray:
+        """(P, K) active width per pool per option at ``hour`` — the
+        committed-stack snapshot the rolling replay carries through its
+        scan; the two views must agree at every decision hour."""
+        return np.stack([
+            lad.option_widths(hour, num_options) for lad in self.ladders
+        ])
 
 
 def plan_pool_portfolio_purchases(

@@ -291,17 +291,39 @@ def plan_fleet_pools(
     od_rate: float | None = None,
     term_weighting: float = 0.0,
     cfg: fc.ForecastConfig = fc.ForecastConfig(),
-) -> FleetPoolsPlan:
+    mode: Literal["one_shot", "rolling"] = "one_shot",
+    **rolling_kw,
+):
     """Algorithm 1 + the portfolio solver over every pool in ONE batched
     pass: the (P, T) demand matrix rides the vmapped forecaster fit, one
     shared sort per pool for all horizons x options, and per-pool purchase
     options masked to each pool's cloud (Table-2 SKUs are per cloud).
 
-    The last ``horizon_weeks`` of the trace are held out: plans are fit on
-    the prefix and evaluated in real dollars on the holdout, per pool and
+    ``mode="one_shot"`` (default, returns :class:`FleetPoolsPlan`): the
+    last ``horizon_weeks`` of the trace are held out; plans are fit on the
+    prefix and evaluated in real dollars on the holdout, per pool and
     fleet-total, alongside the aggregate-trace plan for the pooling-premium
     diagnostic.  Mirrors ``capacity.simulator.plan_fleet`` semantics at the
-    pool level."""
+    pool level.
+
+    ``mode="rolling"`` (returns :class:`repro.core.replan.RollingPlanReport`)
+    replays the paper's actual operating loop instead: week by week, re-fit
+    the forecaster on the extended prefix, re-run the solver, and buy only
+    incremental tranches while expiring ones roll off — with one-shot and
+    hindsight baselines on the same window.  Extra keyword arguments
+    (``cadence_weeks``, ``start_weeks``, ``backend``, ``solver``, ...) are
+    forwarded to :func:`repro.core.replan.replan_fleet_pools`."""
+    if mode == "rolling":
+        from repro.core import replan
+
+        return replan.replan_fleet_pools(
+            pools, options, horizon_weeks=horizon_weeks, od_rate=od_rate,
+            term_weighting=term_weighting, cfg=cfg, **rolling_kw,
+        )
+    if rolling_kw:
+        raise TypeError(
+            f"unexpected arguments for mode='one_shot': {sorted(rolling_kw)}"
+        )
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
     eval_hours = horizon_weeks * HOURS_PER_WEEK

@@ -294,6 +294,7 @@ def optimal_portfolio_grid(
     od_rate: float = 2.1,
     num_grid: int = 256,
     use_kernel: bool = False,
+    weights: jnp.ndarray | None = None,
 ) -> PortfolioPlan:
     """Grid solver on the over/under sweep — the batched jit oracle.
 
@@ -301,12 +302,24 @@ def optimal_portfolio_grid(
     used/idle integrals (d/dc of the over/under hinge sums), the envelope
     picks the best option per cell, thresholds land on cell edges
     (resolution span/num_grid).  With ``use_kernel`` the sweep runs through
-    the Pallas 2-D kernel: P pools x G candidates in one HBM pass."""
+    the Pallas 2-D kernel: P pools x G candidates in one HBM pass.
+
+    ``alphas``/``betas`` may be (K,) shared lines or (P, K) per-pool lines
+    (the ``pool_option_lines`` fleet shape).  ``weights`` (P, T) masks or
+    reweights hours — a 0/1 prefix mask turns the sweep into Algorithm 1's
+    per-horizon prefix solve (the rolling replanner batches its horizon
+    prefixes through here; the idle integral of a masked-out hour is 0, so
+    masked hours price nothing)."""
     squeeze = f.ndim == 1
     if squeeze:
         f = f[None, :]
+        if weights is not None and weights.ndim == 1:
+            weights = weights[None, :]
     p, t = f.shape
-    k = alphas.shape[0]
+    k = alphas.shape[-1]
+    al = jnp.broadcast_to(jnp.atleast_2d(alphas), (p, k))
+    be = jnp.broadcast_to(jnp.atleast_2d(betas), (p, k))
+    w = jnp.ones_like(f) if weights is None else weights.astype(f.dtype)
 
     grid = jnp.linspace(0.0, 1.0, num_grid, dtype=jnp.float32)
     cs = f.max(-1, keepdims=True) * grid[None, :]        # (P, G) per-pool
@@ -314,22 +327,20 @@ def optimal_portfolio_grid(
         from repro.kernels.commitment_sweep.ops import (
             commitment_sweep_over_under,
         )
-        over, under = commitment_sweep_over_under(f, cs)
+        over, under = commitment_sweep_over_under(f, cs, w)
     else:
         from repro.kernels.commitment_sweep.ref import (
             commitment_sweep_over_under_ref,
         )
-        over, under = commitment_sweep_over_under_ref(
-            f, jnp.ones_like(f), cs
-        )
+        over, under = commitment_sweep_over_under_ref(f, w, cs)
 
     used = over[:, :-1] - over[:, 1:]                    # (P, G-1) cell ints
     idle = under[:, 1:] - under[:, :-1]
     cell_cost = jnp.concatenate(
         [
             (od_rate * used)[:, None, :],
-            alphas[None, :, None] * used[:, None, :]
-            + betas[None, :, None] * idle[:, None, :],
+            al[:, :, None] * used[:, None, :]
+            + be[:, :, None] * idle[:, None, :],
         ],
         axis=1,
     )  # (P, K+1, G-1); index 0 = on-demand (first wins ties)

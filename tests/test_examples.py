@@ -28,6 +28,12 @@ class TestExamples:
         assert "commitment plan" in out
         assert "savings" in out
 
+    def test_rolling_replan(self, capsys):
+        run_example("examples/rolling_replan.py")
+        out = capsys.readouterr().out
+        assert "rolling vs one-shot vs hindsight" in out
+        assert "regret" in out
+
     def test_train_lm_small(self, tmp_path, capsys):
         run_example(
             "examples/train_lm.py",

@@ -1,0 +1,363 @@
+"""Rolling weekly re-planning (paper Algorithm 1 as operated): ladder
+roll-off semantics, scan-vs-loop replay agreement, the tranche book as the
+scan's committed stack, and the rolling/one-shot/hindsight acceptance."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forecast as fc
+from repro.core import ladder as ld
+from repro.core import planner as pl
+from repro.core import portfolio as pf
+from repro.core import replan
+from repro.core.demand import HOURS_PER_WEEK
+from repro.data import traces
+
+WK = HOURS_PER_WEEK
+
+
+def _small_options():
+    """Short-term per-cloud SKUs so a 20-week replay exercises several
+    roll-offs (the Table-2 1y/3y terms never expire inside cheap tests)."""
+    out = []
+    for cloud in ("aws", "azure", "gcp"):
+        out.append(pf.PurchaseOption(f"{cloud}/short/4w", cloud, 0.9, 4))
+        out.append(pf.PurchaseOption(f"{cloud}/long/12w", cloud, 0.75, 12))
+    return out
+
+
+class TestLadderRollOff:
+    """Satellite: a tranche purchased in week w with term_weeks=k must stop
+    contributing at week w+k, and increments must never double-count an
+    active tranche."""
+
+    def test_tranche_stops_contributing_at_term_end(self):
+        lad = ld.empty_ladder().extended(3 * WK, 4 * WK, 7.0, option=0)
+        for week, want in [(2, 0.0), (3, 7.0), (6, 7.0), (7, 0.0), (8, 0.0)]:
+            assert lad.active_width(week * WK, option=0) == want
+        level = lad.active_level(8 * WK)
+        assert (level[3 * WK: 7 * WK] == 7.0).all()
+        assert (level[7 * WK:] == 0.0).all()
+
+    def test_constant_target_rebuys_only_after_expiry(self):
+        """Holding a width-10 target: one tranche at week 0, nothing while
+        it is active (no double-count), a fresh tranche the week the first
+        expires."""
+        targets = np.full((9, 1), 10.0)
+        lad = ld.plan_portfolio_purchases(targets, np.array([4 * WK]))
+        np.testing.assert_array_equal(np.asarray(lad.start) // WK, [0, 4, 8])
+        np.testing.assert_allclose(np.asarray(lad.amount), 10.0)
+        # the active width never exceeds the target: no double-counting
+        for w in range(9):
+            assert lad.active_width(w * WK, option=0) == pytest.approx(10.0)
+
+    def test_increments_top_up_not_restate(self):
+        """Target 10 -> 15 -> 15 buys tranches of 10 and 5, not 10 and 15."""
+        targets = np.array([[10.0], [15.0], [15.0]])
+        lad = ld.plan_portfolio_purchases(targets, np.array([52 * WK]))
+        np.testing.assert_allclose(np.asarray(lad.amount), [10.0, 5.0])
+
+    def test_option_widths_split_by_option(self):
+        lad = (
+            ld.empty_ladder()
+            .extended(0, 4 * WK, 3.0, option=0)
+            .extended(0, 12 * WK, 2.0, option=1)
+            .extended(2 * WK, 4 * WK, 1.0, option=0)
+        )
+        np.testing.assert_allclose(lad.option_widths(2 * WK, 2), [4.0, 2.0])
+        np.testing.assert_allclose(lad.option_widths(5 * WK, 2), [1.0, 2.0])
+        np.testing.assert_allclose(lad.option_widths(6 * WK, 2), [0.0, 2.0])
+
+    def test_pool_book_option_widths(self):
+        targets = np.zeros((2, 3, 2), np.float32)
+        targets[0, 0] = [5.0, 2.0]
+        targets[1, 1] = [0.0, 9.0]
+        book = ld.plan_pool_portfolio_purchases(
+            targets, np.array([4 * WK, 12 * WK]),
+            [("aws", "r0", "a"), ("gcp", "r1", "b")],
+        )
+        np.testing.assert_allclose(
+            book.option_widths(1 * WK, 2), [[5.0, 2.0], [0.0, 9.0]]
+        )
+        np.testing.assert_allclose(
+            book.option_widths(4 * WK, 2), [[0.0, 2.0], [0.0, 9.0]]
+        )
+
+
+class TestPrefixFit:
+    def test_solve_prefix_matches_direct(self):
+        """The cumulative-normal-equation gather and the naive masked
+        re-accumulation are the same fit up to summation order."""
+        rng = np.random.default_rng(0)
+        ys = jnp.asarray(rng.gamma(2.0, 50.0, (3, 6 * WK)).astype(np.float32))
+        state = fc.prefix_fit_state(
+            ys, fc.ForecastConfig(), horizon_hours=WK, min_prefix_hours=2 * WK
+        )
+        for week in (2, 4, 6):
+            fast = fc.solve_prefix(state, week)
+            slow = fc.solve_prefix_direct(state, week)
+            # Individual coefficients are solve-conditioning sensitive in
+            # float32; the two fits must agree where it matters — in
+            # forecast space over the horizon.
+            yf = np.asarray(fc.predict_from_beta(state, fast, week * WK, WK))
+            ys_ = np.asarray(fc.predict_from_beta(state, slow, week * WK, WK))
+            np.testing.assert_allclose(yf, ys_, rtol=5e-3)
+
+    def test_irls_refine_reweights(self):
+        rng = np.random.default_rng(1)
+        ys = jnp.asarray(rng.gamma(2.0, 50.0, (2, 4 * WK)).astype(np.float32))
+        state = fc.prefix_fit_state(
+            ys, fc.ForecastConfig(), horizon_hours=WK, min_prefix_hours=2 * WK
+        )
+        beta = fc.solve_prefix(state, 4)
+        refined = fc.irls_refine(state, beta, 4, iters=2)
+        assert np.isfinite(np.asarray(refined)).all()
+        assert np.abs(np.asarray(refined) - np.asarray(beta)).max() > 0
+
+
+class TestGridSolverExtensions:
+    def test_per_pool_lines_match_shared_when_equal(self):
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        rng = np.random.default_rng(2)
+        fs = jnp.asarray(rng.gamma(2.0, 50.0, (4, 900)).astype(np.float32))
+        shared = pf.optimal_portfolio_grid(fs, al, be, num_grid=64)
+        tiled = pf.optimal_portfolio_grid(
+            fs, jnp.tile(al, (4, 1)), jnp.tile(be, (4, 1)), num_grid=64
+        )
+        for field in ("widths", "levels", "total", "cost"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(shared, field)),
+                np.asarray(getattr(tiled, field)),
+            )
+
+    def test_prefix_weights_match_truncated_series(self):
+        """A 0/1 prefix mask must price exactly like the truncated series
+        (same per-pool candidate grids passed via the same full-series
+        max, so the two solves see identical cells)."""
+        opts = pf.options_from_pricing()
+        al, be = pf.option_lines(opts, term_weighting=1.0)
+        rng = np.random.default_rng(3)
+        f = jnp.asarray(
+            np.sort(rng.gamma(2.0, 50.0, (2, 800)))[:, ::-1].copy()
+            .astype(np.float32)
+        )  # descending so the prefix contains the max -> identical grids
+        h = 500
+        mask = (jnp.arange(800) < h).astype(jnp.float32)
+        masked = pf.optimal_portfolio_grid(
+            f, al, be, num_grid=64,
+            weights=jnp.broadcast_to(mask, f.shape),
+        )
+        trunc = pf.optimal_portfolio_grid(f[:, :h], al, be, num_grid=64)
+        np.testing.assert_allclose(
+            np.asarray(masked.widths), np.asarray(trunc.widths),
+            rtol=1e-5, atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(masked.cost), np.asarray(trunc.cost), rtol=1e-5
+        )
+
+
+class TestRollingReplay:
+    @pytest.fixture(scope="class")
+    def small(self):
+        pools = traces.synthetic_pool_set(num_pools=3, num_hours=24 * 7 * 20)
+        rep = replan.replan_fleet_pools(
+            pools, _small_options(), cadence_weeks=2, start_weeks=6,
+            horizon_weeks=4, compare=False,
+        )
+        return pools, rep
+
+    def test_report_shapes_and_accounting(self, small):
+        pools, rep = small
+        s, p, k = len(rep.weeks), pools.num_pools, len(rep.options)
+        assert rep.targets.shape == rep.increments.shape == (s, p, k)
+        assert rep.active.shape == (s, p, k)
+        assert rep.committed_cost.shape == rep.on_demand_cost.shape == (s, p)
+        assert rep.total_cost == pytest.approx(
+            float(rep.committed_cost.sum() + rep.on_demand_cost.sum()),
+            rel=1e-6,
+        )
+        assert (rep.increments >= 0).all()
+        assert (rep.active >= -1e-5).all()
+        assert (rep.utilization >= 0).all()
+        assert (rep.utilization <= 1 + 1e-6).all()
+        assert 0 < rep.savings_vs_on_demand < 1
+
+    def test_non_decision_weeks_buy_nothing(self, small):
+        _, rep = small
+        off = (rep.weeks - rep.start_weeks) % rep.cadence_weeks != 0
+        assert off.any()
+        assert (rep.increments[off] == 0).all()
+
+    def test_book_matches_scan_committed_stack(self, small):
+        """The scan's carried (P, K) committed stack must equal the tranche
+        book's active option widths at every evaluated week — increments
+        never double-count, expiries match term ends."""
+        _, rep = small
+        k = len(rep.options)
+        for i, w in enumerate(rep.weeks):
+            np.testing.assert_allclose(
+                rep.ladders.option_widths(int(w) * WK, k), rep.active[i],
+                rtol=1e-4, atol=1e-4,
+            )
+
+    def test_tranche_terms_taken_from_option(self, small):
+        _, rep = small
+        term_hours = {k: o.term_weeks * WK for k, o in enumerate(rep.options)}
+        seen = 0
+        for lad in rep.ladders.ladders:
+            for opt_idx, term in zip(lad.option, lad.term):
+                seen += 1
+                assert term == term_hours[int(opt_idx)]
+        assert seen > 0
+
+    def test_shortfall_bills_at_on_demand(self, small):
+        """Recompute one week's bill from the reported stack: demand above
+        the stack top pays the on-demand rate, nothing else does."""
+        pools, rep = small
+        from repro.capacity.pricing import on_demand_premium
+
+        od = on_demand_premium()
+        rates = np.asarray([o.rate for o in rep.options])
+        i = len(rep.weeks) // 2
+        w = int(rep.weeks[i])
+        d = pools.demand[:, w * WK: (w + 1) * WK]
+        level = rep.active[i].sum(-1)
+        want_committed = (rates * rep.active[i]).sum(-1) * WK
+        want_od = od * np.maximum(d - level[:, None], 0.0).sum(-1)
+        np.testing.assert_allclose(
+            rep.committed_cost[i], want_committed, rtol=1e-5
+        )
+        np.testing.assert_allclose(rep.on_demand_cost[i], want_od, rtol=1e-4)
+
+    def test_expired_tranches_roll_off_in_replay(self):
+        """With a single decision week (cadence > window) the 4-week SKU's
+        band must drop off the carried stack exactly 4 weeks after the
+        purchase — and with weekly re-planning it is re-bought instead."""
+        pools = traces.synthetic_pool_set(num_pools=3, num_hours=24 * 7 * 16)
+        opts = _small_options()
+        short = [k for k, o in enumerate(opts) if o.term_weeks == 4]
+        # term-weighted lines put the 4-week SKU on the envelope as the
+        # idle-band hedge (with tw=0 the cheapest rate wins everything)
+        one = replan.replan_fleet_pools(
+            pools, opts, cadence_weeks=99, start_weeks=4, horizon_weeks=3,
+            term_weighting=1.0, compare=False,
+        )
+        assert one.increments[0][:, short].sum() > 0
+        assert one.increments[1:].sum() == 0  # single decision week
+        np.testing.assert_array_equal(one.active[4:][:, :, short], 0.0)
+        rolling = replan.replan_fleet_pools(
+            pools, opts, cadence_weeks=1, start_weeks=4, horizon_weeks=3,
+            term_weighting=1.0, compare=False,
+        )
+        assert rolling.active[4][:, short].sum() > 0  # re-bought
+        assert rolling.increments[4][:, short].sum() > 0
+
+    def test_scan_matches_python_loop_replay(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 14)
+        kw = dict(
+            options=_small_options(), cadence_weeks=2, start_weeks=5,
+            horizon_weeks=3, compare=False,
+        )
+        scan = replan.replan_fleet_pools(pools, backend="scan", **kw)
+        loop = replan.replan_fleet_pools(pools, backend="loop", **kw)
+        assert scan.total_cost == pytest.approx(loop.total_cost, rel=1e-4)
+        np.testing.assert_allclose(
+            scan.active, loop.active, rtol=1e-3, atol=1e-2
+        )
+        np.testing.assert_allclose(
+            scan.committed_cost, loop.committed_cost, rtol=1e-3
+        )
+
+    def test_grid_solver_close_to_quantile(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 14)
+        kw = dict(
+            options=_small_options(), cadence_weeks=2, start_weeks=5,
+            horizon_weeks=3, compare=False,
+        )
+        q = replan.replan_fleet_pools(pools, solver="quantile", **kw)
+        g = replan.replan_fleet_pools(
+            pools, solver="grid", num_grid=256, **kw
+        )
+        assert g.total_cost == pytest.approx(q.total_cost, rel=0.02)
+
+    def test_irls_refit_path_runs(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        rep = replan.replan_fleet_pools(
+            pools, _small_options(), cadence_weeks=2, start_weeks=4,
+            horizon_weeks=3, irls_iters=1, compare=False,
+        )
+        assert np.isfinite(rep.total_cost)
+        assert rep.total_cost > 0
+
+    def test_validation(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 8)
+        with pytest.raises(ValueError, match="cadence"):
+            replan.replan_fleet_pools(pools, cadence_weeks=0)
+        with pytest.raises(ValueError, match="start_weeks"):
+            replan.replan_fleet_pools(pools, start_weeks=8)
+
+
+class TestRollingAcceptance:
+    """Acceptance: on a 3-year drifting synthetic fleet the rolling replay
+    beats the one-shot plan and lands within 10% of hindsight-optimal."""
+
+    @pytest.fixture(scope="class")
+    def report(self):
+        pools = traces.synthetic_pool_set(
+            num_pools=4, num_hours=24 * 7 * 156
+        )
+        return replan.replan_fleet_pools(
+            pools, cadence_weeks=4, start_weeks=26, horizon_weeks=8,
+        )
+
+    def test_rolling_beats_one_shot(self, report):
+        assert report.total_cost < report.one_shot_cost
+        assert report.savings_vs_one_shot > 0.05
+
+    def test_rolling_within_10pct_of_hindsight(self, report):
+        assert report.total_cost <= 1.10 * report.hindsight_cost
+
+    def test_baseline_weekly_curves_account(self, report):
+        assert report.one_shot_cost == pytest.approx(
+            float(report.one_shot_weekly_cost.sum()), rel=1e-6
+        )
+        assert report.hindsight_cost == pytest.approx(
+            float(report.hindsight_weekly_cost.sum()), rel=1e-6
+        )
+        # the one-shot plan bleeds on a drifting fleet: its late-window
+        # weekly spend exceeds the rolling plan's
+        last = slice(-8, None)
+        assert (
+            report.one_shot_weekly_cost[last].sum()
+            > report.weekly_cost[last].sum()
+        )
+
+
+class TestPlannerAndSimulatorPlumbing:
+    def test_plan_fleet_pools_mode_rolling(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        rep = pl.plan_fleet_pools(
+            pools, _small_options(), mode="rolling", cadence_weeks=2,
+            start_weeks=4, horizon_weeks=3, compare=False,
+        )
+        assert isinstance(rep, replan.RollingPlanReport)
+        assert rep.cadence_weeks == 2
+
+    def test_one_shot_rejects_rolling_kwargs(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        with pytest.raises(TypeError, match="one_shot"):
+            pl.plan_fleet_pools(pools, cadence_weeks=2, horizon_weeks=3)
+
+    def test_simulate_and_replan_pools(self):
+        from repro.capacity.simulator import simulate_and_replan_pools
+
+        pools, rep = simulate_and_replan_pools(
+            num_hours=24 * 7 * 16, cadence_weeks=4, horizon_weeks=4,
+            start_weeks=8, compare=False,
+        )
+        assert isinstance(rep, replan.RollingPlanReport)
+        assert len(rep.keys) == pools.num_pools
+        assert rep.total_cost > 0

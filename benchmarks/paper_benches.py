@@ -35,10 +35,10 @@ def _time(fn, *args, iters=5, warmup=2) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_demand_characterization(quick: bool = False) -> list[Row]:
+def bench_demand_characterization(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper §2.2 / Figs 2,5,7: dataset statistics of the calibrated trace."""
     trace = dm.synth_demand(
-        24 * 365 if quick else 24 * 365 * 3, key=jax.random.PRNGKey(7)
+        24 * 365 if quick else 24 * 365 * 3, key=jax.random.PRNGKey(seed + 7)
     )
     us = _time(lambda t: dm.hourly_to_daily(t), trace)
     stats = dm.characterize(np.asarray(trace))
@@ -51,11 +51,11 @@ def bench_demand_characterization(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_commitment_fig4(quick: bool = False) -> list[Row]:
+def bench_commitment_fig4(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper Fig 4: 9 commitment scenarios over two weeks, A=2.1, B=1."""
     f = dm.synth_demand(
         24 * 14, dm.DemandConfig(annual_growth=0.0, noise_sigma=0.005),
-        key=jax.random.PRNGKey(1),
+        key=jax.random.PRNGKey(seed + 1),
     )
     levels, costs, best = cm.scenario_costs(f, 9)
     us = _time(lambda x: cm.scenario_costs(x, 9)[1], f)
@@ -71,7 +71,7 @@ def bench_commitment_fig4(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_sensitivity_table3(quick: bool = False) -> list[Row]:
+def bench_sensitivity_table3(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper Table 3: cost delta per $1M when the commitment is computed
     from a trend-blind forecast instead of actuals, by trend x update freq."""
     rows: list[Row] = []
@@ -101,11 +101,11 @@ def bench_sensitivity_table3(quick: bool = False) -> list[Row]:
     return [(n, us, d) for n, _, d in rows]
 
 
-def bench_planner_fig8(quick: bool = False) -> list[Row]:
+def bench_planner_fig8(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper Fig 8: 1-week vs 2-week forecast horizon commitment, evaluated
     over the 2-week window containing a holiday dip."""
     hist = dm.synth_demand(
-        24 * 7 * (8 if quick else 20), key=jax.random.PRNGKey(3)
+        24 * 7 * (8 if quick else 20), key=jax.random.PRNGKey(seed + 3)
     )
     res = pl.plan_commitment(hist, num_horizons=4)
     base = dm.synth_demand(
@@ -129,7 +129,7 @@ def bench_planner_fig8(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_ladder_fig9(quick: bool = False) -> list[Row]:
+def bench_ladder_fig9(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper Fig 9: flat vs perfectly-laddered commitment over a 4-week
     window with a year-end demand drop (paper: ~1.1% savings)."""
     demand = np.asarray(dm.synth_demand(
@@ -151,10 +151,10 @@ def bench_ladder_fig9(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_timeshift_sec4(quick: bool = False) -> list[Row]:
+def bench_timeshift_sec4(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper §4: unused-commitment trough supply and shiftable workloads."""
     f = np.asarray(dm.synth_demand(
-        24 * 7 * (12 if quick else 52), key=jax.random.PRNGKey(4)
+        24 * 7 * (12 if quick else 52), key=jax.random.PRNGKey(seed + 4)
     ))
     c = float(cm.optimal_commitment_quantile(jnp.asarray(f)))
     stats = ts.shiftable_supply_stats(f, c)
@@ -180,10 +180,10 @@ def bench_timeshift_sec4(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_freepool_fig12(quick: bool = False) -> list[Row]:
+def bench_freepool_fig12(quick: bool = False, seed: int = 0) -> list[Row]:
     """Paper Fig 12: static vs predicted free pool on held-out demand."""
-    hist = dm.synth_demand(24 * 7 * 8, key=jax.random.PRNGKey(5))
-    fut = dm.synth_demand(24 * 7 * 9, key=jax.random.PRNGKey(5))[-24 * 7:]
+    hist = dm.synth_demand(24 * 7 * 8, key=jax.random.PRNGKey(seed + 5))
+    fut = dm.synth_demand(24 * 7 * 9, key=jax.random.PRNGKey(seed + 5))[-24 * 7:]
     cfg = fp.FreePoolConfig(p_over=1.0, p_under=10.0, lead_time=1)
     us = _time(
         lambda h: fp.predicted_pool(h, 24 * 7, cfg), hist, iters=3, warmup=1
@@ -199,10 +199,10 @@ def bench_freepool_fig12(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_forecast_quality(quick: bool = False) -> list[Row]:
+def bench_forecast_quality(quick: bool = False, seed: int = 0) -> list[Row]:
     """§3.3.3: forecaster asymmetric-error metric on held-out data."""
     n = 12 if quick else 30
-    full = dm.synth_demand(24 * 7 * n, key=jax.random.PRNGKey(6))
+    full = dm.synth_demand(24 * 7 * n, key=jax.random.PRNGKey(seed + 6))
     hist, fut = full[: 24 * 7 * (n - 4)], full[24 * 7 * (n - 4):]
     model = fc.fit(hist)
     us = _time(lambda h: fc._fit(h, fc.ForecastConfig(),
@@ -217,7 +217,7 @@ def bench_forecast_quality(quick: bool = False) -> list[Row]:
     ]
 
 
-def bench_portfolio_table2(quick: bool = False) -> list[Row]:
+def bench_portfolio_table2(quick: bool = False, seed: int = 0) -> list[Row]:
     """Beyond-paper: Table-2 SKU portfolio vs the single averaged commitment
     level, batched over a fleet of pools.  The exact stacked-quantile solver
     is one sort + K gathers per pool; the grid solver is timed on its jnp
@@ -225,7 +225,7 @@ def bench_portfolio_table2(quick: bool = False) -> list[Row]:
     benchmarked in kernel_benches and validated in tests)."""
     n_pools, n_weeks = (4, 8) if quick else (16, 52)
     pools = jnp.stack([
-        dm.synth_demand(24 * 7 * n_weeks, key=jax.random.PRNGKey(i))
+        dm.synth_demand(24 * 7 * n_weeks, key=jax.random.PRNGKey(seed + i))
         for i in range(n_pools)
     ])
     opts = pt.options_from_pricing()

@@ -9,6 +9,10 @@ Flags:
                    Kernel benches still run their kernel-vs-reference
                    tolerance checks, so a kernel regression fails the job.
     --json PATH    also write rows + failures as JSON (the CI artifact).
+    --seed N       PRNG seed threaded to every bench (default 0), so two
+                   runs at the same seed produce identical `derived`
+                   columns — the CI BENCH_ci.json artifact is stable run
+                   to run (timing columns aside).
 
 Exit status is nonzero if any bench raises (including a failed
 kernel-vs-reference check inside a bench).
@@ -36,6 +40,8 @@ def main(argv=None) -> None:
                     help="tiny-shape smoke mode (CI bench-smoke job)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results JSON (e.g. BENCH_ci.json)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for every bench (stable derived values)")
     args = ap.parse_args(argv)
 
     from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
@@ -45,7 +51,7 @@ def main(argv=None) -> None:
     rows, failures = [], []
     for bench in ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES:
         try:
-            for name, us, derived in bench(quick=args.quick):
+            for name, us, derived in bench(quick=args.quick, seed=args.seed):
                 rows.append({"name": name, "us_per_call": us,
                              "derived": derived})
                 print(f"{name},{us:.1f},{derived}")
@@ -58,6 +64,7 @@ def main(argv=None) -> None:
 
         payload = {
             "quick": args.quick,
+            "seed": args.seed,
             "python": platform.python_version(),
             "jax": jax.__version__,
             "backend": jax.default_backend(),

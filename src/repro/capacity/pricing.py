@@ -38,6 +38,46 @@ def on_demand_premium() -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpotMarket:
+    """Per-cloud spot/preemptible capacity terms (Table-2-style data row).
+
+    ``discount`` is the mean spot price discount vs on-demand for the
+    compute families in Table 2; ``hazard_per_hour`` / ``recovery_per_hour``
+    are the two-state revocation-process rates (probability per hour of an
+    available slice being revoked, and of a revoked slice coming back).
+    ``price_band`` is the +/- fractional band hourly spot prices wander in
+    around the mean (spot prices float with market pressure; committed and
+    on-demand rates do not).  Stationary availability of the process is
+    recovery / (hazard + recovery)."""
+
+    cloud: str
+    discount: float           # spot rate = (1 - discount) * on-demand rate
+    hazard_per_hour: float    # P(available -> revoked) per hour
+    recovery_per_hour: float  # P(revoked -> available) per hour
+    price_band: float         # hourly spot price in mean * (1 +/- band)
+
+
+# Spot market terms per cloud: deeper discounts ride with higher revocation
+# hazard (AWS spot reclaims most aggressively; GCP spot VMs discount hardest
+# with moderate churn; Azure sits between).  Rates are per hour on the same
+# normalized price axis as SAVINGS_PLANS.
+SPOT_MARKETS = [
+    SpotMarket("aws", 0.68, 0.050, 0.50, 0.15),
+    SpotMarket("azure", 0.62, 0.035, 0.45, 0.12),
+    SpotMarket("gcp", 0.70, 0.060, 0.60, 0.10),
+]
+
+
+def spot_market(cloud: str) -> SpotMarket:
+    """The spot terms for one cloud (KeyError on unknown clouds, so a typo'd
+    pool key fails loudly instead of silently pricing at a default)."""
+    for m in SPOT_MARKETS:
+        if m.cloud == cloud:
+            return m
+    raise KeyError(f"no spot market data for cloud {cloud!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class HardwareTransition:
     date: str
     cloud: str

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,6 +23,7 @@ from repro.core import demand as dm
 from repro.core import planner as pl
 from repro.core import portfolio as pf
 from repro.core import timeshift as ts
+from repro.capacity import preemption as pe
 from repro.capacity import pricing
 from repro.capacity.pricing import on_demand_premium
 from repro.models.model import build
@@ -310,6 +312,106 @@ def simulate_and_plan_pools(
     )
 
 
+@dataclasses.dataclass
+class SpotReplayReport:
+    """A spot-enabled plan replayed against sampled revocation paths.
+
+    The planner prices the spot band at an *expected* effective rate; this
+    report is the realized counterpart: for ``num_draws`` Monte-Carlo
+    revocation paths, demand routed above the spot floor is billed at the
+    market spot price while the slice is up, falls back to on-demand while
+    it is revoked, and pays the requeue/recompute penalty on every
+    revocation of a serving slice.  ``availability`` is demand-weighted —
+    1 - (spot demand-hours caught by a revoked slice) / (all demand-hours)
+    — the quantity the chance constraint promises stays >= the target."""
+
+    num_draws: int
+    availability_target: float
+    availability: np.ndarray        # (N, P) realized per draw per pool
+    mean_availability: np.ndarray   # (P,) mean over draws
+    fleet_availability: float       # demand-weighted, mean over draws
+    meets_target: bool              # min over pools of mean availability
+    shortfall_chip_hours: float     # mean over draws, fleet total
+    planned_cost: float             # the plan's expected-rate bill
+    realized_cost: float            # mean over draws
+    realized_spot_cost: float       # market-price spot bill, mean
+    fallback_on_demand_cost: float  # revoked-hours od fallback, mean
+    requeue_cost: float             # recompute penalty, mean
+
+
+def replay_spot_plan(
+    pools: dm.PoolSet,
+    report,
+    *,
+    num_draws: int = 32,
+    seed: int = 0,
+) -> SpotReplayReport:
+    """Replay a spot-enabled rolling plan against sampled revocation paths.
+
+    ``report`` is a :class:`repro.core.replan.RollingPlanReport` produced
+    with ``spot=...`` on the same ``pools``.  Weekly committed levels and
+    spot floors are broadcast back to hours, ``num_draws`` revocation paths
+    are sampled from the per-cloud two-state process, and the realized
+    three-way bill (committed / on-demand / spot + fallback + requeue) is
+    accounted per draw."""
+    if report.spot_floor is None:
+        raise ValueError("report has no spot band; re-plan with spot=...")
+    cfg, lines = report.spot_config, report.spot_lines
+    s, p = report.spot_floor.shape
+    wk = dm.HOURS_PER_WEEK
+    t0 = report.start_weeks * wk
+    demand = np.asarray(pools.demand[:, t0: t0 + s * wk], np.float32)
+    floor = np.repeat(np.asarray(report.spot_floor).T, wk, axis=1)
+    spot_dem = np.maximum(demand - floor, 0.0)            # (P, T)
+
+    paths = pe.simulate_revocations(
+        lines.params, s * wk, num_draws=num_draws,
+        key=jax.random.PRNGKey(seed),
+    )
+    up = np.asarray(paths.available)                      # (N, P, T)
+    price = np.asarray(paths.price)
+
+    served = spot_dem[None] * up
+    fallback = spot_dem[None] * (1.0 - up)
+    od = on_demand_premium()
+    market = np.asarray(lines.market_rate)[None, :, None]
+    spot_bill = (market * price * served).sum(-1)         # (N, P)
+    fallback_bill = od * fallback.sum(-1)
+    requeue_bill = od * np.asarray(
+        pe.requeue_cost_hours(paths, spot_dem, cfg.requeue_hours)
+    )
+
+    total_dem = np.maximum(demand.sum(-1), 1e-9)          # (P,)
+    avail = 1.0 - fallback.sum(-1) / total_dem            # (N, P)
+    fleet_avail = float(
+        1.0 - fallback.sum((-1, -2)).mean() / total_dem.sum()
+    )
+    # The committed + mid-band on-demand bill is path independent — read it
+    # off the report rather than re-deriving the replanner's billing here.
+    base = float(
+        np.asarray(report.committed_cost).sum()
+        + np.asarray(report.on_demand_cost).sum()
+    )
+    realized = base + float(
+        (spot_bill + fallback_bill + requeue_bill).sum(-1).mean()
+    )
+    mean_avail = avail.mean(0)
+    return SpotReplayReport(
+        num_draws=num_draws,
+        availability_target=cfg.availability_target,
+        availability=avail,
+        mean_availability=mean_avail,
+        fleet_availability=fleet_avail,
+        meets_target=bool(mean_avail.min() >= cfg.availability_target),
+        shortfall_chip_hours=float(fallback.sum((-1, -2)).mean()),
+        planned_cost=report.total_cost,
+        realized_cost=realized,
+        realized_spot_cost=float(spot_bill.sum(-1).mean()),
+        fallback_on_demand_cost=float(fallback_bill.sum(-1).mean()),
+        requeue_cost=float(requeue_bill.sum(-1).mean()),
+    )
+
+
 def simulate_and_replan_pools(
     fleets: list[ServingFleet] | None = None,
     jobs: list[TrainingJob] | None = None,
@@ -325,7 +427,10 @@ def simulate_and_replan_pools(
     loop over the whole simulated window (re-fit, re-solve, buy increments,
     roll tranches off) instead of fitting once against a holdout.  Returns
     ``(PoolSet, repro.core.replan.RollingPlanReport)`` — the report carries
-    the one-shot and hindsight baselines for the same window."""
+    the one-shot and hindsight baselines for the same window.  Pass
+    ``spot=...`` to add the preemptible band, then hand the report to
+    :func:`replay_spot_plan` to price it against sampled revocation
+    paths."""
     return simulate_and_plan_pools(
         fleets, jobs, num_hours=num_hours, horizon_weeks=horizon_weeks,
         seed=seed, mode="rolling", cadence_weeks=cadence_weeks, **replan_kw,

@@ -8,6 +8,9 @@
   timeshift   — §4 deferrable-workload scheduling into troughs
   freepool    — §5 predictive pre-provisioning (newsvendor pools)
   portfolio   — §3 generalized to Table-2 purchase-option stacks
+  replan      — §3.3.3-3.3.4 rolling weekly re-planning (one lax.scan)
+  spot        — preemptible capacity: effective spot line + chance
+                constraint over capacity.preemption's revocation process
 """
 
 from repro.core import (  # noqa: F401
@@ -18,5 +21,7 @@ from repro.core import (  # noqa: F401
     ladder,
     planner,
     portfolio,
+    replan,
+    spot,
     timeshift,
 )

@@ -29,6 +29,7 @@ from repro.core import demand as dm
 from repro.core import forecast as fc
 from repro.core import ladder as ld
 from repro.core import portfolio as pf
+from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
 
 
@@ -133,6 +134,33 @@ def _prefix_weighted_quantiles(
         frac = cum / jnp.maximum(cum[-1], 1.0)
         idx = jnp.argmax(frac[None, :] >= qs[:, None], axis=-1)  # (K,)
         return sorted_y[idx]
+
+    return jax.vmap(one_horizon)(w_hours)
+
+
+def _prefix_spot_floors(
+    yhat: jnp.ndarray, w_hours: jnp.ndarray, cap: jnp.ndarray
+) -> jnp.ndarray:
+    """(W,) per-horizon spot floor levels: on each prefix yhat[:w], the
+    smallest demand level whose above-floor volume fits the chance-
+    constraint cap — sum_t max(yhat_t - floor, 0) <= cap * sum_t yhat_t.
+    The volume analogue of the weighted-quantile thresholds (same shared
+    sort + masked-prefix trick; the floor snaps up to an observed level so
+    the cap is never exceeded).  Vmap over pools for per-pool caps."""
+    order = jnp.argsort(yhat)
+    sorted_y = yhat[order]
+    t = jnp.arange(yhat.shape[0])
+    sorted_t = t[order]
+
+    def one_horizon(w):
+        valid = (sorted_t < w).astype(yhat.dtype)
+        v = sorted_y * valid
+        suf = jnp.flip(jnp.cumsum(jnp.flip(v)))          # sum_{j >= i} v_j
+        cnt = jnp.flip(jnp.cumsum(jnp.flip(valid)))
+        # volume above level sorted_y[i], prefix hours only — nonincreasing
+        # in i, so the first index inside the cap is the lowest floor.
+        va = (suf - v) - sorted_y * (cnt - valid)
+        return sorted_y[jnp.argmax(va <= cap * suf[0])]
 
     return jax.vmap(one_horizon)(w_hours)
 
@@ -261,6 +289,12 @@ class FleetPoolsPlan:
     savings_vs_on_demand: float
     aggregate_cost: float             # one plan on the summed fleet trace
     pooling_premium: float
+    # Spot band (None / 0.0 on spot-free plans): the per-pool demand level
+    # above which the plan routes demand to preemptible capacity, priced at
+    # the risk-adjusted effective rate in ``spot_lines``.
+    spot_lines: "spot_mod.SpotLines | None" = None
+    spot_floor: np.ndarray | None = None    # (P,) spot band bottoms
+    spot_cost: float = 0.0
 
     def commitment(
         self,
@@ -292,6 +326,7 @@ def plan_fleet_pools(
     term_weighting: float = 0.0,
     cfg: fc.ForecastConfig = fc.ForecastConfig(),
     mode: Literal["one_shot", "rolling"] = "one_shot",
+    spot: "spot_mod.SpotConfig | bool | None" = None,
     **rolling_kw,
 ):
     """Algorithm 1 + the portfolio solver over every pool in ONE batched
@@ -312,13 +347,20 @@ def plan_fleet_pools(
     incremental tranches while expiring ones roll off — with one-shot and
     hindsight baselines on the same window.  Extra keyword arguments
     (``cadence_weeks``, ``start_weeks``, ``backend``, ``solver``, ...) are
-    forwarded to :func:`repro.core.replan.replan_fleet_pools`."""
+    forwarded to :func:`repro.core.replan.replan_fleet_pools`.
+
+    ``spot`` enables the preemptible third purchasing option (``core.spot``;
+    True = default :class:`repro.core.spot.SpotConfig`): each pool gains a
+    risk-priced spot band above its commitment stack, chance-constrained so
+    expected demand-weighted availability stays >= the configured target.
+    ``spot=None`` (default) leaves every code path bit-identical to the
+    spot-free planner."""
     if mode == "rolling":
         from repro.core import replan
 
         return replan.replan_fleet_pools(
             pools, options, horizon_weeks=horizon_weeks, od_rate=od_rate,
-            term_weighting=term_weighting, cfg=cfg, **rolling_kw,
+            term_weighting=term_weighting, cfg=cfg, spot=spot, **rolling_kw,
         )
     if rolling_kw:
         raise TypeError(
@@ -356,6 +398,31 @@ def plan_fleet_pools(
     per_horizon = jax.vmap(
         lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
     )(yhat, qs)                                                   # (P, W, K)
+
+    # Spot band: per-horizon floors (envelope entry <-> chance-constraint
+    # volume cap) truncate the committed stack — capacity above the floor
+    # is cheaper to serve from risk-priced preemptible supply than to
+    # commit to or buy on demand.
+    sp_res = spot_mod.resolve_spot(spot, pools.clouds, od_rate=od)
+    spot_floor = None
+    if sp_res is not None:
+        _, s_lines = sp_res
+        u_env = jax.vmap(
+            lambda a_, b_, r_: spot_mod.spot_entry_fractile(
+                a_, b_, r_, od_rate=od
+            )
+        )(al_p, be_p, s_lines.rate)                               # (P,)
+        env_fl = jax.vmap(
+            lambda y, q: _prefix_weighted_quantiles(y, w_hours, q[None])[:, 0]
+        )(yhat, u_env)                                            # (P, W)
+        vol_fl = jax.vmap(_prefix_spot_floors, in_axes=(0, None, 0))(
+            yhat, w_hours, s_lines.cap
+        )                                                         # (P, W)
+        floors = jnp.maximum(env_fl, vol_fl)
+        floors = jnp.where(s_lines.cap[:, None] > 0, floors, jnp.inf)
+        per_horizon = jnp.minimum(per_horizon, floors[..., None])
+        spot_floor = np.asarray(floors[:, -1])    # full-window floor
+
     term_weeks = jnp.asarray([o.term_weeks for o in options])
     widths, levels = jax.vmap(
         lambda ph, q: _monotone_stack(ph, q, term_weeks, horizon_weeks)
@@ -373,6 +440,12 @@ def plan_fleet_pools(
         spend = pf.portfolio_spend(
             jnp.asarray(actual[p], jnp.float32), widths_np[p], options,
             od_rate=od,
+            spot_rate=(
+                float(sp_res[1].rate[p]) if sp_res is not None else None
+            ),
+            spot_floor=(
+                float(spot_floor[p]) if spot_floor is not None else None
+            ),
         )
         per_pool.append(PoolPlanEntry(
             key=key,
@@ -384,7 +457,8 @@ def plan_fleet_pools(
 
     committed = sum(float(e.spend.committed.sum()) for e in per_pool)
     on_demand = sum(e.spend.on_demand for e in per_pool)
-    total = committed + on_demand
+    spot_cost = sum(e.spend.spot for e in per_pool)
+    total = committed + on_demand + spot_cost
     all_od = sum(e.spend.all_on_demand for e in per_pool)
     savings = 1.0 - total / all_od if all_od > 0 else 0.0
 
@@ -395,9 +469,41 @@ def plan_fleet_pools(
         agg_hist, options, num_horizons=horizon_weeks, od_rate=od,
         term_weighting=term_weighting, cfg=cfg,
     )
+    agg_widths = np.asarray(agg_res.widths)
+    agg_spot_rate = agg_spot_floor = None
+    if sp_res is not None:
+        # The premium must isolate the pooling effect, so the aggregate
+        # baseline gets the same spot option: the demand-weighted mean of
+        # the per-pool lines (pooled capacity has no single cloud), floors
+        # from its own forecast, committed stack truncated identically.
+        share = np.asarray(hist.sum(-1))
+        share = share / max(share.sum(), 1e-9)
+        rate_a = jnp.float32((np.asarray(s_lines.rate) * share).sum())
+        cap_a = jnp.float32((np.asarray(s_lines.cap) * share).sum())
+        al_a, be_a = pf.option_lines(options, term_weighting=term_weighting)
+        u_env_a = spot_mod.spot_entry_fractile(
+            al_a, be_a, rate_a, od_rate=od
+        )
+        ayhat = jnp.asarray(agg_res.forecast)
+        env_a = _prefix_weighted_quantiles(ayhat, w_hours, u_env_a[None])
+        vol_a = _prefix_spot_floors(ayhat, w_hours, cap_a)
+        floors_a = jnp.maximum(env_a[:, 0], vol_a)
+        if float(cap_a) > 0:
+            per_h_a = jnp.minimum(
+                jnp.asarray(agg_res.per_horizon_levels), floors_a[:, None]
+            )
+            agg_w, _ = _monotone_stack(
+                per_h_a, agg_res.fractiles, term_weeks, horizon_weeks
+            )
+            agg_widths = np.asarray(agg_w)
+            agg_spot_floor = float(floors_a[-1])
+        else:
+            agg_spot_floor = np.inf
+        agg_spot_rate = float(rate_a)
     agg_spend = pf.portfolio_spend(
-        jnp.asarray(actual.sum(0), jnp.float32), np.asarray(agg_res.widths),
+        jnp.asarray(actual.sum(0), jnp.float32), agg_widths,
         options, od_rate=od,
+        spot_rate=agg_spot_rate, spot_floor=agg_spot_floor,
     )
 
     return FleetPoolsPlan(
@@ -422,6 +528,9 @@ def plan_fleet_pools(
         pooling_premium=(
             total / agg_spend.total - 1.0 if agg_spend.total > 0 else 0.0
         ),
+        spot_lines=sp_res[1] if sp_res is not None else None,
+        spot_floor=spot_floor,
+        spot_cost=spot_cost,
     )
 
 

@@ -155,12 +155,21 @@ class PortfolioPlan:
 
     Arrays are aligned with the input option list; options off the envelope
     get zero width.  ``levels[k]`` is the stack top of option k's band (==
-    the bottom of the band when the width is zero)."""
+    the bottom of the band when the width is zero).
+
+    With a spot line (``spot_rate``/``spot_cap`` on the solvers) the plan
+    additionally carries ``spot_floor`` — the demand level above which spot
+    serves (on-demand covers (total, spot_floor], spot everything higher) —
+    and ``spot_frac``, the demand-volume fraction routed to spot (<= the
+    chance-constraint cap).  Both are None on spot-free plans, keeping the
+    legacy pytree shape."""
 
     levels: jnp.ndarray       # (..., K) band tops
     widths: jnp.ndarray       # (..., K) band widths, >= 0
     total: jnp.ndarray        # (...,)   stack top = on-demand threshold
     cost: jnp.ndarray         # (...,)   objective value (cost-line dollars)
+    spot_floor: jnp.ndarray | None = None   # (...,) spot band bottom
+    spot_frac: jnp.ndarray | None = None    # (...,) demand volume on spot
 
 
 def _stack_heights(
@@ -211,12 +220,27 @@ def optimal_portfolio_stack(
     betas: jnp.ndarray,
     *,
     od_rate: float = 2.1,
+    spot_rate: jnp.ndarray | float | None = None,
+    spot_cap: jnp.ndarray | float | None = None,
 ) -> PortfolioPlan:
     """Exact minimizer of the stacked cost-line objective. f (..., T).
 
     The lower-envelope intervals are computed once (demand independent);
     per-pool thresholds are gathers into sorted demand — vmap/jit friendly,
-    O(T log T) per pool like the single-level quantile solver."""
+    O(T log T) per pool like the single-level quantile solver.
+
+    ``spot_rate``/``spot_cap`` (scalars; vmap for per-pool values) add the
+    spot line alpha = spot_rate, beta = 0 under the chance-constraint cap on
+    the demand-volume fraction routed to spot (``core.spot``).  The capped
+    optimum keeps the envelope shape: marginal spot saving per unit volume,
+    l_best(u)/(1-u) - spot_rate, is nondecreasing in u, so spot takes the
+    TOP of the demand distribution down to a floor — the larger of the
+    envelope entry (where spot stops beating committed lines) and the
+    volume cap (smallest floor whose above-volume fits the cap, snapped up
+    to a band edge so the cap is never exceeded).  Committed bands above
+    the floor are truncated; on-demand covers (stack top, floor].  With
+    ``spot_rate=None`` (default) the computation is the legacy spot-free
+    program, bit for bit."""
     t = f.shape[-1]
     k = alphas.shape[0]
     best = _band_assignment(t, alphas, betas, od_rate)  # (T,)
@@ -232,14 +256,6 @@ def optimal_portfolio_stack(
     def gather(idx):  # sorted_f[..., idx] with idx (K,) >= 0
         return jnp.take(sorted_f, idx, axis=-1)
 
-    tops = gather(jnp.maximum(hi, 0))
-    bottoms = jnp.where(lo > 0, gather(jnp.maximum(lo - 1, 0)), 0.0)
-    widths = jnp.where(has, tops - bottoms, 0.0)
-    # The committed bands tile a prefix of the capacity axis, so cumulative
-    # widths in envelope depth order ARE the geometric tops.  The (has, lo)
-    # assignment is demand independent — one permutation for every pool.
-    heights = _stack_heights(has, lo, widths, t + 1)
-
     # Exact objective: integrate the winning line over every band.
     jf = bands.astype(jnp.float32)
     alph_all = jnp.concatenate([jnp.asarray([od_rate], jnp.float32), alphas])
@@ -247,10 +263,84 @@ def optimal_portfolio_stack(
     line_best = alph_all[best] * (t - jf) + beta_all[best] * jf     # (T,)
     h = jnp.diff(sorted_f, axis=-1, prepend=jnp.zeros_like(sorted_f[..., :1]))
     covered = (opt >= 0)
-    cost_committed = (h * line_best * covered).sum(-1)
-    total = widths.sum(-1) + jnp.zeros_like(f[..., 0])
+
+    if spot_rate is None:
+        tops = gather(jnp.maximum(hi, 0))
+        bottoms = jnp.where(lo > 0, gather(jnp.maximum(lo - 1, 0)), 0.0)
+        widths = jnp.where(has, tops - bottoms, 0.0)
+        # The committed bands tile a prefix of the capacity axis, so
+        # cumulative widths in envelope depth order ARE the geometric tops.
+        # The (has, lo) assignment is demand independent — one permutation
+        # for every pool.
+        heights = _stack_heights(has, lo, widths, t + 1)
+        cost_committed = (h * line_best * covered).sum(-1)
+        total = widths.sum(-1) + jnp.zeros_like(f[..., 0])
+        over = jnp.maximum(f - total[..., None], 0.0).sum(-1)
+        cost = cost_committed + od_rate * over
+
+        shape = f.shape[:-1] + (k,)
+        return PortfolioPlan(
+            levels=jnp.broadcast_to(heights, shape),
+            widths=jnp.broadcast_to(widths, shape),
+            total=total,
+            cost=cost,
+        )
+
+    sr = jnp.asarray(spot_rate, jnp.float32)
+    sc = jnp.asarray(
+        1.0 if spot_cap is None else spot_cap, jnp.float32
+    )
+    # Envelope bound: spot wins the top-contiguous region where its line
+    # undercuts the base winner (strictly, so rate ties keep zero spot).
+    spot_line = sr * (t - jf)                                       # (T,)
+    spot_better = (spot_line < line_best).astype(jnp.int32)
+    all_above = jnp.flip(jnp.cumprod(jnp.flip(spot_better)))
+    j_env = jnp.where(all_above.any(), jnp.argmax(all_above), t)
+
+    # Volume bound, per pool: vb[j] = spot volume if the floor sits at band
+    # j's bottom (level sorted_f[j-1]); nonincreasing in j, so the first
+    # band index inside the cap is the lowest admissible floor.
+    total_vol = sorted_f.sum(-1)                                    # (...,)
+    suffix = jnp.flip(jnp.cumsum(jnp.flip(sorted_f, -1), -1), -1)
+    above_cnt = (t - 1 - bands).astype(f.dtype)
+    va = (suffix - sorted_f) - above_cnt * sorted_f                 # (..., T)
+    vb = jnp.concatenate([total_vol[..., None], va[..., :-1]], -1)
+    feasible = vb <= sc * total_vol[..., None]
+    j_vol = jnp.where(feasible.any(-1), jnp.argmax(feasible, -1), t)
+    j_floor = jnp.maximum(j_env, j_vol)                             # (...,)
+
+    floor_idx = jnp.clip(j_floor - 1, 0, t - 1)[..., None]
+    floor = jnp.where(
+        j_floor[..., None] > 0,
+        jnp.take_along_axis(sorted_f, floor_idx, -1),
+        0.0,
+    )[..., 0]
+    spot_vol = jnp.where(
+        j_floor >= t,
+        0.0,
+        jnp.take_along_axis(
+            vb, jnp.clip(j_floor, 0, t - 1)[..., None], -1
+        )[..., 0],
+    )
+
+    # Committed bands truncate at the floor (their tops gather per pool
+    # now — the floor is demand dependent even though the assignment isn't).
+    hi2 = jnp.minimum(hi, j_floor[..., None] - 1)                 # (..., K)
+    has2 = has & (lo <= hi2)
+    tops = jnp.take_along_axis(
+        jnp.broadcast_to(sorted_f, f.shape[:-1] + (t,)),
+        jnp.clip(hi2, 0, t - 1), -1,
+    )
+    bottoms = jnp.where(lo > 0, gather(jnp.maximum(lo - 1, 0)), 0.0)
+    widths = jnp.where(has2, tops - bottoms, 0.0)
+    heights = _stack_heights(has2, lo, widths, t + 1)
+
+    below = bands < j_floor[..., None]                            # (..., T)
+    cost_committed = (h * line_best * covered * below).sum(-1)
+    total = widths.sum(-1)
     over = jnp.maximum(f - total[..., None], 0.0).sum(-1)
-    cost = cost_committed + od_rate * over
+    od_vol = jnp.maximum(over - spot_vol, 0.0)
+    cost = cost_committed + od_rate * od_vol + sr * spot_vol
 
     shape = f.shape[:-1] + (k,)
     return PortfolioPlan(
@@ -258,6 +348,8 @@ def optimal_portfolio_stack(
         widths=jnp.broadcast_to(widths, shape),
         total=total,
         cost=cost,
+        spot_floor=jnp.maximum(floor, total),
+        spot_frac=spot_vol / jnp.maximum(total_vol, 1e-9),
     )
 
 
@@ -295,6 +387,8 @@ def optimal_portfolio_grid(
     num_grid: int = 256,
     use_kernel: bool = False,
     weights: jnp.ndarray | None = None,
+    spot_rate: jnp.ndarray | float | None = None,
+    spot_cap: jnp.ndarray | float | None = None,
 ) -> PortfolioPlan:
     """Grid solver on the over/under sweep — the batched jit oracle.
 
@@ -309,7 +403,13 @@ def optimal_portfolio_grid(
     reweights hours — a 0/1 prefix mask turns the sweep into Algorithm 1's
     per-horizon prefix solve (the rolling replanner batches its horizon
     prefixes through here; the idle integral of a masked-out hour is 0, so
-    masked hours price nothing)."""
+    masked hours price nothing).
+
+    ``spot_rate``/``spot_cap`` (scalars or (P,)) add the chance-constrained
+    spot line (see ``optimal_portfolio_stack``): cells where spot undercuts
+    the base winner flip to spot from the top down while their cumulative
+    used-volume stays inside cap * total volume; the floor lands on a cell
+    edge (same resolution as every other threshold)."""
     squeeze = f.ndim == 1
     if squeeze:
         f = f[None, :]
@@ -346,8 +446,25 @@ def optimal_portfolio_grid(
     )  # (P, K+1, G-1); index 0 = on-demand (first wins ties)
     best = jnp.argmin(cell_cost, axis=1) - 1             # (P, G-1)
 
+    spot_win = None
+    if spot_rate is not None:
+        sr = jnp.broadcast_to(jnp.asarray(spot_rate, jnp.float32), (p,))
+        sc = jnp.broadcast_to(jnp.asarray(
+            1.0 if spot_cap is None else spot_cap, jnp.float32
+        ), (p,))
+        base_cost = jnp.min(cell_cost, axis=1)           # (P, G-1)
+        spot_cell = sr[:, None] * used
+        elig = spot_cell < base_cost
+        # Cumulative eligible volume at-or-above each cell; spot takes the
+        # top cells whose running volume fits the chance-constraint cap.
+        rev_cum = jnp.flip(jnp.cumsum(jnp.flip(elig * used, -1), -1), -1)
+        total_vol = over[:, :1]                          # level 0 = all f
+        spot_win = elig & (rev_cum <= sc[:, None] * total_vol)
+
     cells = jnp.arange(num_grid - 1)
     mask = best[:, None, :] == jnp.arange(k)[None, :, None]   # (P, K, G-1)
+    if spot_win is not None:
+        mask = mask & ~spot_win[:, None, :]
     has = mask.any(-1)
     hi = jnp.where(mask, cells[None, None, :], -1).max(-1)    # (P, K)
     lo = jnp.where(mask, cells[None, None, :], num_grid).min(-1)
@@ -355,15 +472,30 @@ def optimal_portfolio_grid(
     bottoms = jnp.take_along_axis(cs, jnp.clip(lo, 0, num_grid - 1), axis=-1)
     widths = jnp.where(has, tops - bottoms, 0.0)
     heights = _stack_heights(has, lo, widths, num_grid)
-    cost = jnp.min(cell_cost, axis=1).sum(-1)
+
+    spot_floor = spot_frac = None
+    if spot_win is not None:
+        cost = jnp.where(spot_win, spot_cell, base_cost).sum(-1)
+        spot_vol = (spot_win * used).sum(-1)
+        lo_spot = jnp.where(
+            spot_win, cells[None, :], num_grid - 1
+        ).min(-1, keepdims=True)
+        spot_floor = jnp.take_along_axis(cs, lo_spot, axis=-1)[:, 0]
+        spot_floor = jnp.maximum(spot_floor, widths.sum(-1))
+        spot_frac = spot_vol / jnp.maximum(total_vol[:, 0], 1e-9)
+    else:
+        cost = jnp.min(cell_cost, axis=1).sum(-1)
 
     plan = PortfolioPlan(
-        levels=heights, widths=widths, total=widths.sum(-1), cost=cost
+        levels=heights, widths=widths, total=widths.sum(-1), cost=cost,
+        spot_floor=spot_floor, spot_frac=spot_frac,
     )
     if squeeze:
         plan = PortfolioPlan(
             levels=plan.levels[0], widths=plan.widths[0],
             total=plan.total[0], cost=plan.cost[0],
+            spot_floor=None if spot_floor is None else plan.spot_floor[0],
+            spot_frac=None if spot_frac is None else plan.spot_frac[0],
         )
     return plan
 
@@ -398,13 +530,19 @@ def handover_fractiles(
 
 @dataclasses.dataclass
 class PortfolioSpend:
-    """Real-dollar accounting of a stack over an evaluation window."""
+    """Real-dollar accounting of a stack over an evaluation window.
+
+    ``spot`` is the expected-rate bill of the demand above the spot floor
+    (0.0 on spot-free plans); ``spot_chip_hours`` the volume that rode
+    spot."""
 
     committed: np.ndarray         # (K,) committed spend per option
     on_demand: float
     total: float
     all_on_demand: float
     savings_vs_on_demand: float
+    spot: float = 0.0
+    spot_chip_hours: float = 0.0
 
 
 def portfolio_spend(
@@ -413,18 +551,29 @@ def portfolio_spend(
     options: Sequence[PurchaseOption],
     *,
     od_rate: float = 2.1,
+    spot_rate: float | None = None,
+    spot_floor: float | None = None,
 ) -> PortfolioSpend:
     """In-window dollars: every active tranche bills its committed rate for
-    all hours; demand above the stack pays on-demand."""
+    all hours; demand above the stack pays on-demand — except, with a spot
+    band (``spot_rate``/``spot_floor``), demand above the floor bills at
+    the effective spot rate instead."""
     t = f.shape[-1]
     rates = np.asarray([o.rate for o in options])
     w = np.asarray(widths)
     committed = rates * w * t
     total_level = float(w.sum())
     over = float(jnp.maximum(f - total_level, 0.0).sum())
+    spot_vol = 0.0
+    spot_cost = 0.0
+    if spot_rate is not None:
+        floor = max(float(spot_floor), total_level)
+        spot_vol = float(jnp.maximum(f - floor, 0.0).sum())
+        spot_cost = float(spot_rate) * spot_vol
+        over = max(over - spot_vol, 0.0)
     od = od_rate * over
     all_od = od_rate * float(f.sum())
-    total = float(committed.sum()) + od
+    total = float(committed.sum()) + od + spot_cost
     return PortfolioSpend(
         committed=committed,
         on_demand=od,
@@ -433,4 +582,6 @@ def portfolio_spend(
         # A pool can sit empty over the window (e.g. its training job ended):
         # no demand means nothing to save on.
         savings_vs_on_demand=1.0 - total / all_od if all_od > 0 else 0.0,
+        spot=spot_cost,
+        spot_chip_hours=spot_vol,
     )

@@ -61,8 +61,13 @@ from repro.core import demand as dm
 from repro.core import forecast as fc
 from repro.core import ladder as ld
 from repro.core import portfolio as pf
+from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
-from repro.core.planner import _monotone_stack, _prefix_weighted_quantiles
+from repro.core.planner import (
+    _monotone_stack,
+    _prefix_spot_floors,
+    _prefix_weighted_quantiles,
+)
 
 
 @dataclasses.dataclass
@@ -98,11 +103,25 @@ class RollingPlanReport:
     hindsight_weekly_cost: np.ndarray | None = None   # (S,)
     hindsight_cost: float | None = None
     regret_vs_hindsight: float | None = None
+    # Spot band (None on spot-free replays): the fast half of the capacity
+    # split — re-decided every week from that week's forecast, no tranche,
+    # no term.  ``spot_floor`` is clamped to the committed stack top;
+    # demand above it bills at the effective spot rate, between stack top
+    # and floor at on-demand.
+    spot_config: "spot_mod.SpotConfig | None" = None
+    spot_lines: "spot_mod.SpotLines | None" = None
+    spot_floor: np.ndarray | None = None              # (S, P) weekly floors
+    spot_cost: np.ndarray | None = None               # (S, P) weekly spend
+    spot_volume: np.ndarray | None = None             # (S, P) chip-hours
+    spot_ladders: ld.PoolLadderBook | None = None     # 1-week audit tranches
 
     @property
     def weekly_cost(self) -> np.ndarray:
         """(S,) fleet-total spend per week."""
-        return (self.committed_cost + self.on_demand_cost).sum(-1)
+        total = self.committed_cost + self.on_demand_cost
+        if self.spot_cost is not None:
+            total = total + self.spot_cost
+        return total.sum(-1)
 
     def summary(self) -> dict:
         out = {
@@ -111,6 +130,9 @@ class RollingPlanReport:
             "total_cost": self.total_cost,
             "savings_vs_on_demand": self.savings_vs_on_demand,
         }
+        if self.spot_cost is not None:
+            out["spot_cost"] = float(self.spot_cost.sum())
+            out["spot_chip_hours"] = float(self.spot_volume.sum())
         if self.one_shot_cost is not None:
             out["one_shot_cost"] = self.one_shot_cost
             out["savings_vs_one_shot"] = self.savings_vs_one_shot
@@ -146,6 +168,7 @@ def replan_fleet_pools(
     irls_iters: int = 0,
     backend: Literal["scan", "loop"] = "scan",
     compare: bool = True,
+    spot: "spot_mod.SpotConfig | bool | None" = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
 
@@ -158,6 +181,16 @@ def replan_fleet_pools(
     must survive unrevised for months; a weekly refit corrects drift
     faster than the reweighting does).  With ``compare`` the one-shot and
     hindsight baselines are replayed on the same window.
+
+    ``spot`` adds the preemptible band (``core.spot``): committed tranches
+    are the *slow* capacity the scan carries (bought incrementally, rolled
+    off at term), while the spot floor is *fast* — re-derived every week
+    from that week's forecast with no carry at all, since spot holds no
+    term.  Weekly billing then splits three ways: committed rates below
+    the stack top, on-demand between stack top and floor, the risk-priced
+    effective spot rate above the floor.  The one-shot baseline replays
+    with the same spot band; hindsight stays commitments-only.  With
+    ``spot=None`` (default) the scan program is unchanged bit for bit.
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -178,6 +211,14 @@ def replan_fleet_pools(
     qs = jax.vmap(
         functools.partial(pf.handover_fractiles, od_rate=od)
     )(al_p, be_p)                                              # (P, K)
+    sp_res = spot_mod.resolve_spot(spot, pools.clouds, od_rate=od)
+    if sp_res is not None:
+        s_cfg, s_lines = sp_res
+        u_env = jax.vmap(
+            lambda a_, b_, r_: spot_mod.spot_entry_fractile(
+                a_, b_, r_, od_rate=od
+            )
+        )(al_p, be_p, s_lines.rate)                            # (P,)
     rates = jnp.asarray([o.rate for o in options], jnp.float32)
     term_weeks = jnp.asarray([o.term_weeks for o in options], jnp.int32)
     sched_len = total_weeks + int(term_weeks.max()) + 1
@@ -206,20 +247,42 @@ def replan_fleet_pools(
         )
         return plan.levels.reshape(num_pools, horizon_weeks, num_opts)
 
+    def spot_floors_for(yhat):
+        """(P, W) per-horizon spot floors on one week's forecast: the
+        envelope entry (below it a commitment prices better than spot) vs
+        the chance-constraint volume cap, whichever is higher; +inf where
+        the cap is 0 so an uneconomic spot market is never routed to."""
+        env_fl = jax.vmap(
+            lambda y, q: _prefix_weighted_quantiles(y, w_hours, q[None])[:, 0]
+        )(yhat, u_env)
+        vol_fl = jax.vmap(_prefix_spot_floors, in_axes=(0, None, 0))(
+            yhat, w_hours, s_lines.cap
+        )
+        floors = jnp.maximum(env_fl, vol_fl)
+        return jnp.where(s_lines.cap[:, None] > 0, floors, jnp.inf)
+
     def targets_for(yhat):
         """Algorithm 1 steps 2-4 on one week's forecast: per-horizon
         prefix thresholds -> min within each option's term -> monotone
-        stack widths (P, K)."""
+        stack widths (P, K).  With spot, the per-horizon committed levels
+        truncate at the spot floors first and the coming week's floor
+        (horizon 1 — spot is re-decided weekly, so only the nearest
+        horizon binds it) rides along as the fast-capacity decision."""
         if solver == "grid":
             per_h = grid_prefix_levels(yhat)
         else:
             per_h = jax.vmap(
                 lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
             )(yhat, qs)
+        floor = None
+        if sp_res is not None:
+            floors = spot_floors_for(yhat)                 # (P, W)
+            per_h = jnp.minimum(per_h, floors[..., None])
+            floor = floors[:, 0]
         widths, _ = jax.vmap(
             lambda ph, q: _monotone_stack(ph, q, term_weeks, horizon_weeks)
         )(per_h, qs)
-        return widths
+        return widths, floor
 
     def make_step(cadence: int, solve_fn):
         def step(carry, w):
@@ -236,8 +299,10 @@ def replan_fleet_pools(
                 state, beta, w * HOURS_PER_WEEK, horizon_hours
             )
             # 3-4. solver targets; buy only increments, only on decision
-            # weeks — surpluses persist until their tranches expire
-            widths = targets_for(yhat)
+            # weeks — surpluses persist until their tranches expire.  The
+            # spot floor is NOT carried: it is this week's fast-capacity
+            # decision, re-derived from scratch on every step.
+            widths, floor = targets_for(yhat)
             if cadence > 0:
                 is_dec = (w - start_weeks) % cadence == 0
             else:
@@ -250,21 +315,38 @@ def replan_fleet_pools(
             )                                              # (K, sched)
             rolloff = rolloff + inc[:, :, None] * expiry[None, :, :]
             # 5. bill the week: committed rates regardless of use,
-            # shortfall above the stack top at the on-demand rate
+            # shortfall above the stack top at the on-demand rate — or,
+            # with a spot band, on-demand only up to the floor and the
+            # effective spot rate above it
             d = jax.lax.dynamic_index_in_dim(
                 demand_wk, w, axis=1, keepdims=False
             )                                              # (P, 168)
             level = active.sum(-1)
             committed = (rates * active).sum(-1) * HOURS_PER_WEEK
-            over = jnp.maximum(d - level[:, None], 0.0).sum(-1)
             used = jnp.minimum(d, level[:, None]).sum(-1)
             util = jnp.where(
                 level > 0, used / (level * HOURS_PER_WEEK), 0.0
             )
-            out = {
-                "target": widths, "inc": inc, "active": active,
-                "committed": committed, "od": od * over, "util": util,
-            }
+            if sp_res is None:
+                over = jnp.maximum(d - level[:, None], 0.0).sum(-1)
+                out = {
+                    "target": widths, "inc": inc, "active": active,
+                    "committed": committed, "od": od * over, "util": util,
+                }
+            else:
+                fl = jnp.maximum(floor, level)
+                over = jnp.maximum(
+                    jnp.minimum(d, fl[:, None]) - level[:, None], 0.0
+                ).sum(-1)
+                spot_over = jnp.maximum(d - fl[:, None], 0.0)
+                out = {
+                    "target": widths, "inc": inc, "active": active,
+                    "committed": committed, "od": od * over, "util": util,
+                    "floor": fl,
+                    "spot_vol": spot_over.sum(-1),
+                    "spot": s_lines.rate * spot_over.sum(-1),
+                    "spot_peak": spot_over.max(-1),
+                }
             return (active, rolloff), out
         return step
 
@@ -305,6 +387,8 @@ def replan_fleet_pools(
     )
 
     total = float(ys["committed"].sum() + ys["od"].sum())
+    if sp_res is not None:
+        total += float(ys["spot"].sum())
     eval_demand = demand[:, start_weeks * HOURS_PER_WEEK:]
     all_od = od * float(eval_demand.sum())
     report = RollingPlanReport(
@@ -325,12 +409,28 @@ def replan_fleet_pools(
         all_on_demand_cost=all_od,
         savings_vs_on_demand=1.0 - total / all_od if all_od > 0 else 0.0,
     )
+    if sp_res is not None:
+        report.spot_config = s_cfg
+        report.spot_lines = s_lines
+        report.spot_floor = ys["floor"]
+        report.spot_cost = ys["spot"]
+        report.spot_volume = ys["spot_vol"]
+        # The fast half of the split as a tranche book: spot is a ladder
+        # whose every tranche lasts exactly one period (re-decided, never
+        # carried), sized at the week's peak spot usage.
+        report.spot_ladders = ld.spot_ladder_book(
+            ys["spot_peak"], pools.keys, start_week=start_weeks
+        )
     if not compare:
         return report
 
-    # One-shot baseline: identical replay, single decision week.
+    # One-shot baseline: identical replay, single decision week (with the
+    # same spot band when enabled — the baselines differ in commitment
+    # cadence, not in which purchasing options exist).
     one = replay(0, "scan")
     one_weekly = np.asarray(one["committed"] + one["od"]).sum(-1)
+    if sp_res is not None:
+        one_weekly = one_weekly + np.asarray(one["spot"]).sum(-1)
     report.one_shot_weekly_cost = one_weekly
     report.one_shot_cost = float(one_weekly.sum())
     report.savings_vs_one_shot = (

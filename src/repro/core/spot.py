@@ -1,0 +1,244 @@
+"""Spot capacity as a portfolio line: effective cost + chance constraint.
+
+Spot capacity bills like on-demand (pay only while used) at a deep discount,
+but the slice can be revoked at any hour (``capacity.preemption``).  Pricing
+it into the §3 cost-line model means folding the revocation risk into the
+*used* rate: per chip-hour of demand routed to the spot band,
+
+    eff = a * (spot_rate * price + hazard * requeue_hours * od_rate)
+          + (1 - a) * od_rate
+
+      a            stationary availability  recovery / (hazard + recovery)
+      spot_rate    (1 - discount) * od_rate      (pricing.SPOT_MARKETS)
+      price        mean hourly spot-price multiplier (1.0 analytically;
+                   empirical mean of the in-band price walk when estimated
+                   from simulated draws)
+      hazard * requeue_hours * od_rate
+                   expected recompute: each revocation of a serving slice
+                   loses ``requeue_hours`` of work, redone at on-demand
+      (1 - a) * od_rate
+                   fallback: while revoked, the demand the band was serving
+                   runs on-demand instead
+
+so the spot option is one more cost line l(u) = eff * (1 - u) — alpha = eff,
+beta = 0, exactly like on-demand but cheaper — an extra K-line next to
+``portfolio.pool_option_lines``'s committed lines.  Because beta = 0 and
+eff < od_rate, the uncapped envelope would hand spot the *entire*
+above-commitment band; what keeps the portfolio honest is the
+
+**chance constraint** (Cohen et al.'s overcommitment shape): demand served
+from spot is unavailable a (1 - a) fraction of hours, so if a fraction x of
+the pool's demand volume rides spot, expected demand-weighted availability
+is 1 - x * (1 - a).  Requiring it >= ``availability_target`` caps
+
+    x <= (1 - availability_target) / (1 - a)      (* (1 - risk_buffer))
+
+per pool (``spot_cap_fraction``).  The capped optimum keeps the envelope
+shape: the marginal saving of routing one more unit of volume to spot,
+l_best(u) / (1 - u) - eff, is nondecreasing in utilization fractile u, so
+the best capped spot band is the TOP of the demand distribution truncated
+at the volume cap — the solvers (``portfolio.optimal_portfolio_stack``,
+``optimal_portfolio_grid``, and the rolling prefix solver) implement
+exactly that truncation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.capacity import preemption as pe
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotConfig:
+    """Knobs of the spot subsystem.
+
+    ``availability_target`` is the chance-constraint floor on demand-
+    weighted availability; ``risk_buffer`` backs the resulting volume cap
+    off (the cap binds exactly at the target in expectation, so planning
+    *at* it leaves no room for sampling noise in realized paths).
+    ``num_draws`` > 0 estimates the effective rate from simulated
+    revocation paths instead of the analytic stationary distribution
+    (``sim_hours`` hours, seeded by ``seed``)."""
+
+    availability_target: float = 0.95
+    requeue_hours: float = 2.0
+    risk_buffer: float = 0.2
+    num_draws: int = 0            # 0 = analytic stationary distribution
+    sim_hours: int = 24 * 7 * 8
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SpotLines:
+    """The spot line per pool: the extra K-line the solvers price.
+
+    ``rate`` is alpha of the cost line (beta = 0); ``cap`` the chance-
+    constrained demand-volume fraction; ``market_rate`` the raw (1 -
+    discount) * od rate actually billed per served spot chip-hour (the
+    difference between ``rate`` and ``market_rate`` is the priced-in
+    preemption risk).  All arrays (P,), aligned with the pool axis."""
+
+    rate: jnp.ndarray          # (P,) effective cost-line alpha
+    cap: jnp.ndarray           # (P,) max demand-volume fraction on spot
+    market_rate: jnp.ndarray   # (P,) raw spot $/used chip-hour
+    availability: jnp.ndarray  # (P,) availability the cap was derived from
+    params: pe.PreemptionParams
+
+
+def spot_cap_fraction(
+    availability: jnp.ndarray,
+    target: float,
+    *,
+    risk_buffer: float = 0.0,
+) -> jnp.ndarray:
+    """Chance-constrained cap on the demand fraction a pool may serve from
+    spot: routing fraction x to capacity that is up ``availability`` of the
+    time leaves demand-weighted availability 1 - x(1 - availability), so
+    x <= (1 - target) / (1 - availability), backed off by ``risk_buffer``
+    and clipped to [0, 1] (fully reliable capacity is uncapped)."""
+    if not 0.0 < target <= 1.0:
+        raise ValueError(f"availability_target must be in (0, 1], {target}")
+    short = jnp.maximum(1.0 - availability, 1e-9)
+    return jnp.clip((1.0 - target) / short * (1.0 - risk_buffer), 0.0, 1.0)
+
+
+def effective_spot_rate(
+    params: pe.PreemptionParams,
+    *,
+    od_rate: float,
+    requeue_hours: float,
+    availability: jnp.ndarray | None = None,
+    hazard: jnp.ndarray | None = None,
+    price: jnp.ndarray | float = 1.0,
+) -> jnp.ndarray:
+    """(P,) effective $/demanded-chip-hour of the spot band (module
+    docstring formula).  ``availability``/``hazard``/``price`` default to
+    the analytic process constants and can be overridden with empirical
+    estimates from simulated draws."""
+    a = (
+        availability if availability is not None
+        else pe.stationary_availability(params)
+    )
+    lam = hazard if hazard is not None else params.hazard
+    spot_rate = (1.0 - params.discount) * od_rate
+    serving = spot_rate * price + lam * requeue_hours * od_rate
+    return a * serving + (1.0 - a) * od_rate
+
+
+def pool_spot_lines(
+    clouds,
+    *,
+    od_rate: float,
+    cfg: SpotConfig = SpotConfig(),
+    markets=None,
+) -> SpotLines:
+    """Build the per-pool spot line for a fleet on ``clouds``.
+
+    Analytic by default; with ``cfg.num_draws`` > 0 the availability,
+    interruption rate, and mean price multiplier are estimated from
+    ``num_draws`` simulated revocation paths instead (the two agree as
+    draws x hours grow — tested).  Pools whose effective rate is not below
+    on-demand get cap 0: spot that prices worse than on-demand after risk
+    is simply not purchased."""
+    params = pe.params_for_clouds(clouds, markets)
+    if cfg.num_draws > 0:
+        paths = pe.simulate_revocations(
+            params, cfg.sim_hours, num_draws=cfg.num_draws,
+            key=jax.random.PRNGKey(cfg.seed),
+        )
+        avail = jnp.asarray(paths.availability())
+        up_hours = jnp.maximum(paths.available.sum((0, 2)), 1.0)
+        hazard = paths.interrupted.sum((0, 2)) / up_hours
+        price = (paths.price * paths.available).sum((0, 2)) / up_hours
+    else:
+        avail = pe.stationary_availability(params)
+        hazard = params.hazard
+        price = 1.0
+    rate = effective_spot_rate(
+        params, od_rate=od_rate, requeue_hours=cfg.requeue_hours,
+        availability=avail, hazard=hazard, price=price,
+    )
+    cap = spot_cap_fraction(
+        avail, cfg.availability_target, risk_buffer=cfg.risk_buffer
+    )
+    cap = jnp.where(rate < od_rate, cap, 0.0)
+    return SpotLines(
+        rate=rate,
+        cap=cap,
+        market_rate=(1.0 - params.discount) * od_rate,
+        availability=avail,
+        params=params,
+    )
+
+
+def spot_entry_fractile(
+    alphas: jnp.ndarray,
+    betas: jnp.ndarray,
+    spot_rate: jnp.ndarray,
+    *,
+    od_rate: float,
+    resolution: int = 4096,
+) -> jnp.ndarray:
+    """Utilization fractile where the spot line enters the lower envelope of
+    [on-demand, committed options, spot] — below it some committed line is
+    cheaper, above it spot wins.  The envelope bound on the spot band: even
+    a loose chance-constraint cap must not push spot below this fractile
+    into territory a commitment prices better.  Scalar per (K,) line set;
+    vmap for a (P, K) fleet."""
+    u = jnp.linspace(0.0, 1.0, resolution)
+    lines = jnp.concatenate(
+        [
+            (od_rate * (1.0 - u))[:, None],
+            alphas[None, :] * (1.0 - u)[:, None]
+            + betas[None, :] * u[:, None],
+            (spot_rate * (1.0 - u))[:, None],
+        ],
+        axis=1,
+    )
+    spot_idx = lines.shape[1] - 1
+    wins = jnp.argmin(lines, axis=1) == spot_idx
+    return jnp.where(wins.any(), jnp.where(wins, u, 2.0).min(), 1.0)
+
+
+def resolve_spot(
+    spot,
+    clouds,
+    *,
+    od_rate: float,
+) -> tuple[SpotConfig, SpotLines] | None:
+    """Normalize the planner-facing ``spot=`` argument: None/False disables
+    (the legacy bit-identical path), True takes the default
+    :class:`SpotConfig`, a SpotConfig is used as-is, and a prebuilt
+    (SpotConfig, SpotLines) pair passes through (so a replay can reuse the
+    exact lines a plan was made with)."""
+    if spot is None or spot is False:
+        return None
+    if spot is True:
+        spot = SpotConfig()
+    if isinstance(spot, SpotConfig):
+        return spot, pool_spot_lines(clouds, od_rate=od_rate, cfg=spot)
+    if (
+        not isinstance(spot, tuple)
+        or len(spot) != 2
+        or not isinstance(spot[0], SpotConfig)
+        or not isinstance(spot[1], SpotLines)
+    ):
+        raise TypeError(
+            "spot must be None/bool/SpotConfig/(SpotConfig, SpotLines), "
+            f"got {spot!r}"
+        )
+    return spot
+
+
+def expected_availability(
+    spot_frac: jnp.ndarray, availability: jnp.ndarray
+) -> jnp.ndarray:
+    """Demand-weighted availability when ``spot_frac`` of a pool's demand
+    volume rides capacity that is up ``availability`` of the time — the
+    quantity the chance constraint bounds from below."""
+    return 1.0 - spot_frac * (1.0 - availability)

@@ -34,6 +34,13 @@ class TestExamples:
         assert "rolling vs one-shot vs hindsight" in out
         assert "regret" in out
 
+    def test_spot_portfolio(self, capsys):
+        run_example("examples/spot_portfolio.py")
+        out = capsys.readouterr().out
+        assert "commitments-only vs spot-enabled" in out
+        assert "Monte-Carlo replay" in out
+        assert "MET" in out
+
     def test_train_lm_small(self, tmp_path, capsys):
         run_example(
             "examples/train_lm.py",

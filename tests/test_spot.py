@@ -1,0 +1,584 @@
+"""Spot-capacity subsystem: revocation process, effective spot line,
+chance-constrained solvers, rolling fast/slow split, Monte-Carlo replay —
+plus the no-regression guarantee that every spot-disabled path is
+bit-identical to the pre-spot planner (hardcoded golden outputs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.capacity import preemption as pe
+from repro.capacity import pricing
+from repro.capacity import simulator as sim
+from repro.core import ladder as ld
+from repro.core import planner as pl
+from repro.core import portfolio as pf
+from repro.core import spot as sp
+from repro.core.demand import HOURS_PER_WEEK
+from repro.data import traces
+
+WK = HOURS_PER_WEEK
+
+
+class TestPreemptionProcess:
+    def test_params_from_pricing_table(self):
+        params = pe.params_for_clouds(["aws", "gcp", "aws"])
+        m = pricing.spot_market("aws")
+        np.testing.assert_allclose(
+            np.asarray(params.hazard)[[0, 2]], m.hazard_per_hour
+        )
+        assert float(params.discount[1]) == pytest.approx(
+            pricing.spot_market("gcp").discount
+        )
+
+    def test_unknown_cloud_fails_loudly(self):
+        with pytest.raises(KeyError, match="oraclecloud"):
+            pe.params_for_clouds(["aws", "oraclecloud"])
+        with pytest.raises(KeyError):
+            pricing.spot_market("nope")
+
+    def test_stationary_availability(self):
+        params = pe.PreemptionParams(
+            hazard=jnp.asarray([0.1]), recovery=jnp.asarray([0.4]),
+            discount=jnp.asarray([0.6]), price_band=jnp.asarray([0.1]),
+        )
+        assert float(pe.stationary_availability(params)[0]) == pytest.approx(
+            0.8
+        )
+        assert float(pe.interruption_rate(params)[0]) == pytest.approx(0.08)
+
+    def test_scan_matches_python_loop_bitwise(self):
+        """The compiled scan and the per-hour eager replay walk identical
+        paths from identical noise (price to float tolerance: the scan
+        contracts the AR(1) multiply-add into an fma)."""
+        params = pe.params_for_clouds(["aws", "azure", "gcp"])
+        noise = pe.draw_noise(params, 24 * 7 * 2, 4, jax.random.PRNGKey(3))
+        s = pe.revocation_walk(params, *noise)
+        l = pe.revocation_walk_loop(params, *noise)
+        np.testing.assert_array_equal(
+            np.asarray(s.available), np.asarray(l.available)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s.interrupted), np.asarray(l.interrupted)
+        )
+        np.testing.assert_allclose(
+            np.asarray(s.price), np.asarray(l.price), atol=1e-5
+        )
+
+    def test_empirical_matches_stationary(self):
+        params = pe.params_for_clouds(["aws", "azure", "gcp"])
+        paths = pe.simulate_revocations(
+            params, 24 * 7 * 8, num_draws=48, key=jax.random.PRNGKey(0)
+        )
+        np.testing.assert_allclose(
+            paths.availability(),
+            np.asarray(pe.stationary_availability(params)),
+            atol=0.02,
+        )
+        np.testing.assert_allclose(
+            paths.interruptions_per_hour(),
+            np.asarray(pe.interruption_rate(params)),
+            atol=0.01,
+        )
+
+    def test_price_stays_in_band_mean_one(self):
+        params = pe.params_for_clouds(["aws", "gcp"])
+        paths = pe.simulate_revocations(
+            params, 24 * 7 * 4, num_draws=16, key=jax.random.PRNGKey(1)
+        )
+        price = np.asarray(paths.price)
+        band = np.asarray(params.price_band)[None, :, None]
+        assert (price >= 1.0 - band - 1e-6).all()
+        assert (price <= 1.0 + band + 1e-6).all()
+        np.testing.assert_allclose(price.mean((0, 2)), 1.0, atol=0.05)
+
+    def test_interruptions_are_up_down_edges(self):
+        params = pe.params_for_clouds(["aws"])
+        paths = pe.simulate_revocations(
+            params, 24 * 7, num_draws=8, key=jax.random.PRNGKey(2)
+        )
+        up = np.asarray(paths.available)
+        itr = np.asarray(paths.interrupted)
+        # an interruption at t means the slice was up at t-1 and down at t
+        assert (itr[..., 1:] == np.maximum(up[..., :-1] - up[..., 1:], 0.0)
+                ).all()
+
+    def test_requeue_cost_counts_serving_interruptions(self):
+        paths = pe.RevocationPaths(
+            available=jnp.zeros((1, 1, 4)),
+            interrupted=jnp.asarray([[[0.0, 1.0, 0.0, 1.0]]]),
+            price=jnp.ones((1, 1, 4)),
+        )
+        usage = jnp.asarray([[3.0, 2.0, 1.0, 0.0]])
+        got = pe.requeue_cost_hours(paths, usage, 2.0)
+        assert float(got[0, 0]) == pytest.approx(2.0 * 2.0)  # only hour 1
+
+
+class TestSpotLines:
+    def test_effective_rate_decomposition(self):
+        params = pe.PreemptionParams(
+            hazard=jnp.asarray([0.05]), recovery=jnp.asarray([0.45]),
+            discount=jnp.asarray([0.7]), price_band=jnp.asarray([0.1]),
+        )
+        od = 2.0
+        a = 0.45 / 0.5
+        want = a * (0.3 * od + 0.05 * 2.0 * od) + (1 - a) * od
+        got = sp.effective_spot_rate(params, od_rate=od, requeue_hours=2.0)
+        assert float(got[0]) == pytest.approx(want)
+
+    def test_cap_formula_and_clipping(self):
+        a = jnp.asarray([0.9, 0.99, 1.0, 0.5])
+        cap = sp.spot_cap_fraction(a, 0.95)
+        np.testing.assert_allclose(
+            np.asarray(cap), [0.5, 1.0, 1.0, 0.1], atol=1e-5
+        )
+        buffered = sp.spot_cap_fraction(a, 0.95, risk_buffer=0.2)
+        np.testing.assert_allclose(np.asarray(buffered)[0], 0.4, atol=1e-5)
+        with pytest.raises(ValueError, match="availability_target"):
+            sp.spot_cap_fraction(a, 1.5)
+
+    def test_uneconomic_spot_gets_zero_cap(self):
+        """A market whose risk-adjusted rate lands at/above on-demand is
+        never routed to, whatever its availability."""
+        bad = [pricing.SpotMarket("aws", 0.01, 0.5, 0.01, 0.0)]
+        lines = sp.pool_spot_lines(
+            ["aws"], od_rate=2.1,
+            cfg=sp.SpotConfig(availability_target=0.5), markets=bad,
+        )
+        assert float(lines.cap[0]) == 0.0
+
+    def test_simulated_rate_close_to_analytic(self):
+        an = sp.pool_spot_lines(["aws", "gcp"], od_rate=2.1)
+        mc = sp.pool_spot_lines(
+            ["aws", "gcp"], od_rate=2.1,
+            cfg=sp.SpotConfig(num_draws=48, sim_hours=24 * 7 * 8),
+        )
+        np.testing.assert_allclose(
+            np.asarray(mc.rate), np.asarray(an.rate), rtol=0.05
+        )
+        np.testing.assert_allclose(
+            np.asarray(mc.cap), np.asarray(an.cap), rtol=0.25
+        )
+
+    def test_resolve_spot_variants(self):
+        assert sp.resolve_spot(None, ["aws"], od_rate=2.1) is None
+        assert sp.resolve_spot(False, ["aws"], od_rate=2.1) is None
+        cfg, lines = sp.resolve_spot(True, ["aws"], od_rate=2.1)
+        assert isinstance(cfg, sp.SpotConfig)
+        again = sp.resolve_spot((cfg, lines), ["aws"], od_rate=2.1)
+        assert again[1] is lines
+        with pytest.raises(TypeError, match="spot"):
+            sp.resolve_spot(("x", "y"), ["aws"], od_rate=2.1)
+
+    def test_expected_availability(self):
+        got = sp.expected_availability(jnp.asarray(0.5), jnp.asarray(0.9))
+        assert float(got) == pytest.approx(0.95)
+
+
+def _fleet_lines():
+    opts = pf.options_from_pricing()
+    al, be = pf.option_lines(opts, term_weighting=1.0)
+    return opts, al, be
+
+
+class TestStackSolverSpot:
+    def setup_method(self):
+        rng = np.random.default_rng(7)
+        self.f = jnp.asarray(rng.gamma(2.0, 50.0, (4, 600)).astype(np.float32))
+        _, self.al, self.be = _fleet_lines()
+
+    def test_cap_zero_is_bit_identical_to_base(self):
+        base = pf.optimal_portfolio_stack(self.f, self.al, self.be)
+        capped = jax.vmap(
+            lambda fi: pf.optimal_portfolio_stack(
+                fi, self.al, self.be, spot_rate=1.0, spot_cap=0.0
+            )
+        )(self.f)
+        np.testing.assert_array_equal(
+            np.asarray(capped.cost), np.asarray(base.cost)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(capped.widths), np.asarray(base.widths)
+        )
+        np.testing.assert_allclose(np.asarray(capped.spot_frac), 0.0)
+
+    def test_spot_lowers_cost_within_cap(self):
+        base = pf.optimal_portfolio_stack(self.f, self.al, self.be)
+        plan = jax.vmap(
+            lambda fi: pf.optimal_portfolio_stack(
+                fi, self.al, self.be, spot_rate=1.0, spot_cap=0.3
+            )
+        )(self.f)
+        assert (np.asarray(plan.cost) < np.asarray(base.cost)).all()
+        assert (np.asarray(plan.spot_frac) <= 0.3 + 1e-6).all()
+        assert (np.asarray(plan.spot_floor)
+                >= np.asarray(plan.total) - 1e-4).all()
+
+    def test_cost_accounting_identity(self):
+        """Recompute the reported cost from the reported plan: committed
+        bands via the brute-force oracle (options re-paired in stack
+        order), on-demand between stack top and floor, spot above the
+        floor."""
+        plan = jax.vmap(
+            lambda fi: pf.optimal_portfolio_stack(
+                fi, self.al, self.be, spot_rate=1.0, spot_cap=0.3
+            )
+        )(self.f)
+        for i in range(self.f.shape[0]):
+            fi = np.asarray(self.f[i], np.float64)
+            levels = np.asarray(plan.levels[i])
+            widths = np.asarray(plan.widths[i])
+            # stack order: by level, zero-width options after the band
+            # whose top they share
+            order = np.lexsort((widths == 0, levels))
+            top = float(np.asarray(plan.total[i]))
+            floor = float(np.asarray(plan.spot_floor[i]))
+            spot_vol = np.maximum(fi - floor, 0.0).sum()
+            od_vol = np.maximum(fi - top, 0.0).sum() - spot_vol
+            committed = float(pf.portfolio_cost(
+                jnp.asarray(np.minimum(fi, top), jnp.float32),
+                jnp.asarray(levels[order]),
+                self.al[order], self.be[order], od_rate=2.1,
+            ))
+            want = committed + 2.1 * od_vol + 1.0 * spot_vol
+            assert float(plan.cost[i]) == pytest.approx(want, rel=1e-3)
+
+    def test_spot_at_on_demand_rate_never_enters(self):
+        """A spot rate at or above on-demand never enters the envelope
+        (ties resolve away from spot): the plan must equal the base plan
+        with zero spot volume — even with an uncapped budget."""
+        base = pf.optimal_portfolio_stack(self.f, self.al, self.be)
+        for rate in (2.1, 2.5):
+            plan = jax.vmap(
+                lambda fi: pf.optimal_portfolio_stack(
+                    fi, self.al, self.be, spot_rate=rate, spot_cap=1.0
+                )
+            )(self.f)
+            np.testing.assert_allclose(
+                np.asarray(plan.widths), np.asarray(base.widths), atol=1e-4
+            )
+            np.testing.assert_array_equal(
+                np.asarray(plan.cost), np.asarray(base.cost)
+            )
+            np.testing.assert_allclose(np.asarray(plan.spot_frac), 0.0)
+
+    def test_spot_can_displace_idle_heavy_commit_bands(self):
+        """Spot pays nothing while idle, so even a used-rate worse than a
+        committed rate can undercut that commitment on rarely-used slices
+        — the envelope crossing, not the rate, decides the handover."""
+        base = pf.optimal_portfolio_stack(self.f, self.al, self.be)
+        rate = float(jnp.max(self.al)) * 1.3   # worse than all commits
+        plan = jax.vmap(
+            lambda fi: pf.optimal_portfolio_stack(
+                fi, self.al, self.be, spot_rate=rate, spot_cap=1.0
+            )
+        )(self.f)
+        assert (np.asarray(plan.total)
+                <= np.asarray(base.total) + 1e-4).all()
+        assert (np.asarray(plan.cost) <= np.asarray(base.cost) + 1e-3).all()
+
+    def test_grid_solver_matches_stack(self):
+        lines = sp.pool_spot_lines(
+            ("aws", "azure", "gcp", "aws"), od_rate=2.1
+        )
+        stack = jax.vmap(
+            lambda fi, r, c: pf.optimal_portfolio_stack(
+                fi, self.al, self.be, spot_rate=r, spot_cap=c
+            )
+        )(self.f, lines.rate, lines.cap)
+        grid = pf.optimal_portfolio_grid(
+            self.f, self.al, self.be, num_grid=512,
+            spot_rate=lines.rate, spot_cap=lines.cap,
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.cost), np.asarray(stack.cost), rtol=0.02
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.spot_frac), np.asarray(stack.spot_frac),
+            atol=0.05,
+        )
+        assert (np.asarray(grid.spot_frac)
+                <= np.asarray(lines.cap) + 1e-6).all()
+
+    def test_grid_spot_none_unchanged(self):
+        a = pf.optimal_portfolio_grid(self.f, self.al, self.be, num_grid=64)
+        b = pf.optimal_portfolio_grid(
+            self.f, self.al, self.be, num_grid=64, spot_rate=None
+        )
+        np.testing.assert_array_equal(np.asarray(a.cost), np.asarray(b.cost))
+        assert a.spot_floor is None and b.spot_floor is None
+
+    def test_portfolio_spend_spot_split(self):
+        opts, _, _ = _fleet_lines()
+        f = jnp.asarray(np.full(100, 10.0, np.float32))
+        widths = np.zeros(len(opts)); widths[0] = 4.0
+        spend = pf.portfolio_spend(
+            f, widths, opts, od_rate=2.0, spot_rate=1.0, spot_floor=7.0
+        )
+        # demand 10: 4 committed, 3 on-demand (4..7), 3 spot (above 7)
+        assert spend.spot_chip_hours == pytest.approx(300.0)
+        assert spend.spot == pytest.approx(300.0)
+        assert spend.on_demand == pytest.approx(2.0 * 300.0)
+        assert spend.total == pytest.approx(
+            float(spend.committed.sum()) + 600.0 + 300.0
+        )
+
+
+GOLDEN_POOLS = dict(num_pools=3, num_hours=24 * 7 * 20)
+# Outputs of the pre-spot planner (PR 3 HEAD) on the scenario above —
+# the spot=None paths must keep reproducing them bit for bit (allclose
+# guards only against BLAS last-ulp drift across platforms).
+GOLDEN_ONE_SHOT_TOTAL = 159075.11906270776
+GOLDEN_ONE_SHOT_POOL_WIDTHS = [
+    44.797203063964844, 65.88134002685547, 106.45818328857422,
+]
+GOLDEN_ROLLING = dict(
+    cadence_weeks=2, start_weeks=6, horizon_weeks=4,
+)
+GOLDEN_ROLLING_TOTAL = 538633.8125
+GOLDEN_ROLLING_TARGETS_SUM = 2829.31884765625
+GOLDEN_ROLLING_INC_SUM = 225.93618774414062
+GOLDEN_STACK_F = dict(seed=11, shape=(3, 800))
+GOLDEN_STACK_COST = [122921.3984375, 125555.015625, 117788.3125]
+GOLDEN_GRID_COST = [122933.90625, 125636.4296875, 117816.28125]
+
+
+class TestSpotDisabledBitIdentical:
+    """Satellite: plan_fleet_pools(spot=None/False) and mode="rolling"
+    without spot reproduce the pre-PR outputs exactly — the new K-line
+    plumbing is provably dormant when disabled."""
+
+    @pytest.fixture(scope="class")
+    def pools(self):
+        return traces.synthetic_pool_set(**GOLDEN_POOLS)
+
+    @pytest.mark.parametrize("spot", [None, False])
+    def test_one_shot_golden(self, pools, spot):
+        plan = pl.plan_fleet_pools(pools, horizon_weeks=4, spot=spot)
+        np.testing.assert_allclose(
+            plan.total_cost, GOLDEN_ONE_SHOT_TOTAL, rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            plan.widths.astype(np.float64).sum(1),
+            GOLDEN_ONE_SHOT_POOL_WIDTHS, rtol=1e-6,
+        )
+        assert plan.spot_lines is None
+        assert plan.spot_floor is None
+        assert plan.spot_cost == 0.0
+        assert all(e.spend.spot == 0.0 for e in plan.per_pool)
+
+    @pytest.mark.parametrize("spot", [None, False])
+    def test_rolling_golden(self, pools, spot):
+        rep = pl.plan_fleet_pools(
+            pools, mode="rolling", compare=False, spot=spot,
+            **GOLDEN_ROLLING,
+        )
+        np.testing.assert_allclose(
+            rep.total_cost, GOLDEN_ROLLING_TOTAL, rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(rep.targets.sum()), GOLDEN_ROLLING_TARGETS_SUM, rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(rep.increments.sum()), GOLDEN_ROLLING_INC_SUM, rtol=1e-6
+        )
+        assert rep.spot_cost is None
+        assert rep.spot_floor is None
+        assert rep.spot_ladders is None
+
+    def test_solver_goldens(self):
+        rng = np.random.default_rng(GOLDEN_STACK_F["seed"])
+        f = jnp.asarray(
+            rng.gamma(2.0, 50.0, GOLDEN_STACK_F["shape"]).astype(np.float32)
+        )
+        _, al, be = _fleet_lines()
+        stack = pf.optimal_portfolio_stack(f, al, be, od_rate=2.1)
+        np.testing.assert_allclose(
+            np.asarray(stack.cost, np.float64), GOLDEN_STACK_COST, rtol=1e-6
+        )
+        assert stack.spot_floor is None
+        grid = pf.optimal_portfolio_grid(f, al, be, od_rate=2.1, num_grid=64)
+        np.testing.assert_allclose(
+            np.asarray(grid.cost, np.float64), GOLDEN_GRID_COST, rtol=1e-6
+        )
+
+
+class TestRollingSpot:
+    @pytest.fixture(scope="class")
+    def pools(self):
+        return traces.synthetic_pool_set(num_pools=3, num_hours=24 * 7 * 30)
+
+    @pytest.fixture(scope="class")
+    def reports(self, pools):
+        kw = dict(
+            mode="rolling", cadence_weeks=2, start_weeks=8,
+            horizon_weeks=4, compare=False,
+        )
+        base = pl.plan_fleet_pools(pools, **kw)
+        rep = pl.plan_fleet_pools(pools, spot=True, **kw)
+        return base, rep
+
+    def test_spot_reduces_rolling_cost(self, reports):
+        base, rep = reports
+        assert rep.total_cost < base.total_cost
+
+    def test_report_accounting(self, reports):
+        _, rep = reports
+        s, p = rep.spot_floor.shape
+        assert (s, p) == rep.committed_cost.shape
+        want = float(
+            rep.committed_cost.sum() + rep.on_demand_cost.sum()
+            + rep.spot_cost.sum()
+        )
+        assert rep.total_cost == pytest.approx(want, rel=1e-6)
+        assert rep.weekly_cost.sum() == pytest.approx(want, rel=1e-6)
+        # floors sit at or above the committed stack top every week
+        level = rep.active.sum(-1)
+        assert (rep.spot_floor >= level - 1e-4).all()
+
+    def test_spot_billing_recomputed(self, pools, reports):
+        """Re-derive one week's three-way bill from the reported floor."""
+        _, rep = reports
+        i = len(rep.weeks) // 2
+        w = int(rep.weeks[i])
+        d = pools.demand[:, w * WK: (w + 1) * WK]
+        level = rep.active[i].sum(-1)[:, None]
+        fl = rep.spot_floor[i][:, None]
+        od = pricing.on_demand_premium()
+        want_od = od * np.maximum(np.minimum(d, fl) - level, 0.0).sum(-1)
+        want_spot = (
+            np.asarray(rep.spot_lines.rate)
+            * np.maximum(d - fl, 0.0).sum(-1)
+        )
+        np.testing.assert_allclose(rep.on_demand_cost[i], want_od, rtol=1e-4)
+        np.testing.assert_allclose(rep.spot_cost[i], want_spot, rtol=1e-4)
+
+    def test_spot_ladder_is_one_week_tranches(self, pools, reports):
+        """The fast-capacity audit book: every spot tranche lasts exactly
+        one week and is sized at that week's realized peak spot usage
+        (demand above the week's floor)."""
+        _, rep = reports
+        total = 0
+        for p_idx, lad in enumerate(rep.spot_ladders.ladders):
+            total += len(lad.amount)
+            assert (lad.term == WK).all()
+            for start, amt in zip(lad.start, lad.amount):
+                w = start // WK
+                i = int(w - rep.start_weeks)
+                d = pools.demand[p_idx, w * WK: (w + 1) * WK]
+                peak = np.maximum(d - rep.spot_floor[i, p_idx], 0.0).max()
+                assert amt == pytest.approx(float(peak), rel=1e-5)
+        assert total > 0
+
+    def test_scan_matches_loop_with_spot(self, pools):
+        kw = dict(
+            mode="rolling", cadence_weeks=2, start_weeks=8,
+            horizon_weeks=3, compare=False, spot=True,
+        )
+        scan = pl.plan_fleet_pools(pools, backend="scan", **kw)
+        loop = pl.plan_fleet_pools(pools, backend="loop", **kw)
+        assert scan.total_cost == pytest.approx(loop.total_cost, rel=1e-4)
+        np.testing.assert_allclose(
+            scan.spot_floor, loop.spot_floor, rtol=1e-3, atol=1e-2
+        )
+
+    def test_grid_solver_spot_close_to_quantile(self, pools):
+        kw = dict(
+            mode="rolling", cadence_weeks=2, start_weeks=8,
+            horizon_weeks=3, compare=False, spot=True,
+        )
+        q = pl.plan_fleet_pools(pools, solver="quantile", **kw)
+        g = pl.plan_fleet_pools(pools, solver="grid", num_grid=256, **kw)
+        assert g.total_cost == pytest.approx(q.total_cost, rel=0.05)
+
+
+class TestOneShotSpot:
+    def test_plan_fields_and_accounting(self):
+        pools = traces.synthetic_pool_set(num_pools=3, num_hours=24 * 7 * 20)
+        plan = pl.plan_fleet_pools(pools, horizon_weeks=4, spot=True)
+        assert plan.spot_lines is not None
+        assert plan.spot_floor.shape == (pools.num_pools,)
+        assert plan.spot_cost > 0
+        want = (
+            sum(float(e.spend.committed.sum()) for e in plan.per_pool)
+            + sum(e.spend.on_demand for e in plan.per_pool)
+            + plan.spot_cost
+        )
+        assert plan.total_cost == pytest.approx(want, rel=1e-6)
+        # commit stacks never grow when a cheaper top-band option appears
+        base = pl.plan_fleet_pools(pools, horizon_weeks=4)
+        assert plan.widths.sum() <= base.widths.sum() + 1e-4
+
+
+class TestSpotReplayAcceptance:
+    """Acceptance: on the default 3-year drifting fleet, spot-enabled
+    rolling planning cuts cost vs commitments-only rolling while the
+    simulated availability (mean over >= 32 revocation draws) stays >= the
+    configured target."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        pools = traces.synthetic_pool_set(num_pools=4, num_hours=24 * 7 * 156)
+        kw = dict(
+            mode="rolling", cadence_weeks=4, start_weeks=26,
+            horizon_weeks=8, compare=False,
+        )
+        cfg = sp.SpotConfig(availability_target=0.95)
+        base = pl.plan_fleet_pools(pools, **kw)
+        rep = pl.plan_fleet_pools(pools, spot=cfg, **kw)
+        replay = sim.replay_spot_plan(pools, rep, num_draws=32, seed=0)
+        return base, rep, replay
+
+    def test_spot_cuts_cost_vs_commitments_only(self, setup):
+        base, rep, _ = setup
+        assert rep.total_cost < base.total_cost
+        assert 1.0 - rep.total_cost / base.total_cost > 0.02
+
+    def test_simulated_availability_meets_target(self, setup):
+        _, rep, replay = setup
+        assert replay.num_draws >= 32
+        assert replay.meets_target
+        assert (replay.mean_availability
+                >= rep.spot_config.availability_target).all()
+        assert replay.fleet_availability >= rep.spot_config.availability_target
+
+    def test_realized_cost_tracks_planned(self, setup):
+        """The effective-rate planning bill is an unbiased-ish estimate of
+        the realized Monte-Carlo bill (within 10%)."""
+        _, rep, replay = setup
+        assert replay.realized_cost == pytest.approx(
+            replay.planned_cost, rel=0.10
+        )
+        assert replay.realized_spot_cost > 0
+        assert replay.fallback_on_demand_cost > 0
+
+    def test_replay_requires_spot_plan(self, setup):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        rep = pl.plan_fleet_pools(
+            pools, mode="rolling", cadence_weeks=2, start_weeks=4,
+            horizon_weeks=3, compare=False,
+        )
+        with pytest.raises(ValueError, match="spot"):
+            sim.replay_spot_plan(pools, rep)
+
+
+class TestLadderSpotHelpers:
+    def test_weekly_spot_ladder(self):
+        lad = ld.weekly_spot_ladder(
+            np.array([5.0, 0.0, 3.0]), start_week=10
+        )
+        np.testing.assert_array_equal(lad.start // WK, [10, 12])
+        assert (lad.term == WK).all()
+        np.testing.assert_allclose(lad.amount, [5.0, 3.0])
+        # active exactly within its own week
+        assert lad.active_width(10 * WK) == 5.0
+        assert lad.active_width(11 * WK) == 0.0
+        assert lad.active_width(12 * WK + 167) == 3.0
+        assert lad.active_width(13 * WK) == 0.0
+
+    def test_spot_ladder_book_shape_check(self):
+        with pytest.raises(ValueError, match="keys"):
+            ld.spot_ladder_book(
+                np.zeros((4, 3)), [("aws", "r", "m")], start_week=0
+            )

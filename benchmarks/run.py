@@ -13,6 +13,11 @@ Flags:
                    runs at the same seed produce identical `derived`
                    columns — the CI BENCH_ci.json artifact is stable run
                    to run (timing columns aside).
+    --filter S     run only benches whose function name contains S
+                   (case-insensitive substring, e.g. `--filter migration`
+                   runs just bench_migration_scan) — lets CI or a dev
+                   iterate on one bench without rerunning everything.
+                   Unknown filters (zero matches) exit nonzero.
 
 Exit status is nonzero if any bench raises (including a failed
 kernel-vs-reference check inside a bench).
@@ -42,14 +47,28 @@ def main(argv=None) -> None:
                     help="write results JSON (e.g. BENCH_ci.json)")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for every bench (stable derived values)")
+    ap.add_argument("--filter", default=None, metavar="SUBSTR",
+                    help="only run benches whose name contains SUBSTR")
     args = ap.parse_args(argv)
 
     from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
     from benchmarks.paper_benches import ALL_PAPER_BENCHES
 
+    benches = ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES
+    if args.filter is not None:
+        want = args.filter.lower()
+        benches = [b for b in benches if want in b.__name__.lower()]
+        if not benches:
+            names = [b.__name__ for b in
+                     ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES]
+            raise SystemExit(
+                f"--filter {args.filter!r} matches no bench; "
+                f"available: {names}"
+            )
+
     print("name,us_per_call,derived")
     rows, failures = [], []
-    for bench in ALL_PAPER_BENCHES + ALL_KERNEL_BENCHES:
+    for bench in benches:
         try:
             for name, us, derived in bench(quick=args.quick, seed=args.seed):
                 rows.append({"name": name, "us_per_call": us,
@@ -65,6 +84,7 @@ def main(argv=None) -> None:
         payload = {
             "quick": args.quick,
             "seed": args.seed,
+            "filter": args.filter,
             "python": platform.python_version(),
             "jax": jax.__version__,
             "backend": jax.default_backend(),

@@ -1,0 +1,93 @@
+"""Hardware-generation turnover: the fourth pillar next to commitments,
+pools, and spot.
+
+    PYTHONPATH=src python examples/generation_turnover.py
+
+Fleet demand is the product of three drivers (paper §2.3): user workload
+growth x hardware generational turnover x software efficiency.  A family
+launch moves demand volume from old-family pools to successor pools along
+a logistic S-curve — which a per-pool forecaster reads as organic decay,
+so a migration-blind planner keeps buying tranches on a dying family and
+strands them.  This walkthrough runs the whole subsystem:
+
+  1. synthesize a 3-year fleet with two planted family turnovers
+     (`pricing.GENERATIONS` successor pairs, `capacity.generations`
+     logistic transfer + software-efficiency deflator);
+  2. fit the drivers back out of the realized fleet
+     (`migration.decompose_drivers`): logistic midpoints/spans per edge,
+     hardware index, efficiency drift vs the planted user volume;
+  3. re-plan the fleet weekly, migration-blind vs migration-aware with
+     cloud-level *convertible* commitments that re-pin to the successor
+     family each week — the unstranding lever.
+"""
+
+import numpy as np
+
+from repro.capacity import generations as gn
+from repro.capacity import pricing
+from repro.core import migration as mg
+from repro.core import planner as pl
+from repro.data import traces
+
+
+def main():
+    # Two family turnovers inside a 2-year window (quick enough for CI;
+    # the acceptance-scale 3-year run lives in tests/test_generations.py).
+    plant = gn.MigrationConfig(generations=(
+        pricing.Generation("aws", "C6i", "C7i", 20, 28.0, 0.25),
+        pricing.Generation("gcp", "N2-Standard", "N4-Standard", 55, 24.0,
+                           0.50),
+    ))
+    num_hours = 24 * 7 * 104
+    base = traces.synthetic_base_pool_set(
+        num_pools=4, num_hours=num_hours, migration=plant
+    )
+    pools = gn.migrate_pool_set(base, plant)
+
+    print("== turnover fleet (volume moves old family -> successor) ==")
+    for key, row in zip(pools.keys, pools.demand):
+        name = "/".join(key)
+        print(f"  {name:28s} first-month {row[:720].mean():7.1f}  "
+              f"last-month {row[-720:].mean():7.1f} chips")
+
+    print("\n== driver decomposition (fitted back from realized demand) ==")
+    dec = mg.decompose_drivers(
+        pools, migration=plant, user_volume=base.demand.sum(0)
+    )
+    for ef in dec.edge_fits:
+        print(f"  {ef.cloud}: {ef.old_family} -> {ef.new_family}  "
+              f"midpoint wk {ef.midpoint_weeks:5.1f}  "
+              f"span wk {ef.span_weeks:5.1f}  "
+              f"adopted {ef.final_share * 100:5.1f}%")
+    print(f"  software efficiency drift: "
+          f"{dec.efficiency_per_year * 100:.1f}%/yr "
+          f"(planted {plant.software_efficiency_per_year * 100:.0f}%/yr)")
+    print(f"  hardware index at end: {dec.hardware_index[-1]:.3f} "
+          "(VMs per old-equivalent VM after turnover)")
+
+    print("\n== rolling re-plan: migration-blind vs aware + convertible ==")
+    kw = dict(
+        mode="rolling", cadence_weeks=2, start_weeks=20, horizon_weeks=26,
+        compare=False,
+    )
+    blind = pl.plan_fleet_pools(pools, **kw)
+    aware = pl.plan_fleet_pools(
+        pools, migration=plant, convertible=True, **kw
+    )
+    print(f"  migration-blind rolling:      {blind.total_cost:14.0f}")
+    print(f"  aware + convertible rolling:  {aware.total_cost:14.0f}  "
+          f"({(1 - aware.total_cost / blind.total_cost) * 100:.1f}% "
+          "cheaper)")
+    s = aware.summary()
+    print(f"  convertible spend {s['convertible_cost']:.0f}, final "
+          f"cloud-level width {s['convertible_final_width']:.1f} chips")
+    conv_tranches = sum(
+        len(lad.amount) for lad in aware.conv_ladders.ladders
+    )
+    print(f"  convertible tranches: {conv_tranches} across clouds "
+          f"{', '.join(aware.conv_clouds)} (re-pinned to the successor "
+          "family each week)")
+
+
+if __name__ == "__main__":
+    main()

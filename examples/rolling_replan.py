@@ -16,7 +16,15 @@ synthetic fleet and compares three operating points on the same window:
 
 The replay is one `lax.scan` program (see `repro.core.replan`), so the
 whole multi-year loop runs in seconds on CPU.
+
+With `--migration` the fleet undergoes hardware-generation turnover
+(`capacity.generations`) and the planner re-plans with the share-based
+migration-aware forecaster plus cloud-level convertible commitments
+(`migration=True, convertible=True`) — the subsystem that keeps dying-
+family tranches from stranding.
 """
+
+import argparse
 
 import numpy as np
 
@@ -25,17 +33,26 @@ from repro.data import traces
 
 
 def main():
-    pools = traces.synthetic_pool_set(num_pools=4, num_hours=24 * 7 * 104)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--migration", action="store_true",
+                    help="turnover fleet + migration-aware re-planning "
+                         "with convertible commitments")
+    args = ap.parse_args()
+
+    pools = traces.synthetic_pool_set(
+        num_pools=4, num_hours=24 * 7 * 104, migration=args.migration,
+    )
     print("== fleet ==")
     for key, row in zip(pools.keys, pools.demand):
         cloud, region, family = key
-        print(f"  {cloud:5s} {region:9s} {family:8s} "
+        print(f"  {cloud:5s} {region:9s} {family:12s} "
               f"mean {row.mean():7.1f} peak {row.max():7.1f} chips")
 
     rep = pl.plan_fleet_pools(
         pools, mode="rolling",
         cadence_weeks=2, start_weeks=26, horizon_weeks=6,
         term_weighting=1.0,
+        migration=args.migration, convertible=args.migration or None,
     )
 
     print(f"\n== rolling replay (weeks {rep.weeks[0]}..{rep.weeks[-1]}, "
@@ -59,6 +76,10 @@ def main():
         for k in np.flatnonzero((rep.increments > 0).any((0, 1)))
     }
     print(f"  SKUs on the stack:  {', '.join(sorted(skus))}")
+    if rep.conv_options is not None:
+        print(f"  convertible stack:  {rep.conv_active[-1].sum():.1f} chips "
+              f"across {len(rep.conv_clouds)} clouds "
+              f"(re-pinned weekly; spend {rep.conv_committed_cost.sum():.0f})")
 
     print("\n== rolling vs one-shot vs hindsight ==")
     print(f"  rolling total:    {rep.total_cost:14.0f}")

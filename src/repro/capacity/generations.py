@@ -1,0 +1,331 @@
+"""Hardware-generation turnover: the demand driver the paper says breaks
+per-pool planning (§2.3).
+
+Fleet demand is not one curve: it is user workload growth x hardware
+generational turnover x software efficiency.  A generation launch moves
+demand *volume* between pools — the old family's trace decays and the
+successor's grows along a logistic S-curve, scaled by the generational
+perf-per-dollar uplift (the same user work needs fewer successor VMs) — so
+to a per-pool forecaster a migration is indistinguishable from organic
+decay, and commitments pinned to the dying family strand.
+
+This module is the **generative** side of the subsystem (the inference side
+— fitting the drivers back out of a realized fleet — is
+``repro.core.migration``):
+
+  * per-cloud successor edges from ``pricing.GENERATIONS`` matched onto a
+    fleet's (cloud, region, machine-family) pool keys;
+  * cumulative adoption as a logistic S-curve, walked as the exact
+    discrete-time hazard recurrence m_{t+1} = m_t + (1 - m_t) h_t inside
+    ONE ``lax.scan`` over the hour axis carrying the per-edge migrated
+    shares (``migrate_demand``); a python-loop replay of the identical
+    step is kept as the benchmark floor and bit-for-bit test oracle
+    (``migrate_demand_loop``, ``bench_migration_scan``);
+  * a multiplicative software-efficiency deflator
+    (1 + rate)^(-t/year) applied to every pool (§2.4, SPI);
+  * :func:`migrate_pool_set` — the PoolSet-level transform
+    ``data.traces.synthetic_pool_set(migration=...)`` and
+    ``capacity.simulator.fleet_pool_demand(migration=...)`` route through.
+
+The scan formulation mirrors ``capacity.preemption``: tiny per-hour state
+updates are exactly what python-level replay cannot afford at fleet scale
+(P=12+ pools x 26k hours), and the hazard-recurrence form generalizes to
+state-dependent adoption (gated rollouts, paused migrations) where the
+closed form does not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.capacity import pricing
+from repro.core import demand as dm
+from repro.core.demand import HOURS_PER_DAY, HOURS_PER_WEEK, DAYS_PER_YEAR
+
+pricing.validate_tables()
+
+HOURS_PER_YEAR = HOURS_PER_DAY * DAYS_PER_YEAR
+
+# Logistic 10%->90% span in units of 1/rate: s(mid +/- ln(9)/k) = 0.9/0.1.
+_LOGISTIC_1090 = 2.0 * float(np.log(9.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    """Knobs of the generation-turnover model.
+
+    ``generations`` is the successor table (default: the
+    ``pricing.GENERATIONS`` data rows); ``software_efficiency_per_year``
+    the multiplicative deflator rate (§2.4).  Pass custom ``Generation``
+    rows to plant specific midpoints/uplifts on synthetic fleets — the
+    recovery tests in ``core.migration`` do exactly that."""
+
+    generations: tuple[pricing.Generation, ...] = tuple(pricing.GENERATIONS)
+    software_efficiency_per_year: float = pricing.SOFTWARE_EFFICIENCY_PER_YEAR
+    # Weight of the successor table's announced launch epochs as a prior on
+    # the rolling logit-share fits (``core.migration``): generation
+    # launches are public roadmap events, so a planner may lean on the
+    # announced S-curve before adoption shows up in its own demand data —
+    # the realized data overrides the prior as observations accumulate
+    # (share weights sum over thousands of hours; the prior is worth
+    # ``share_prior_weight`` observations).  0 disables (pure data fits,
+    # what ``decompose_drivers`` uses for recovery).
+    share_prior_weight: float = 100.0
+
+    def __post_init__(self):
+        # Custom planted rows must satisfy the same structural invariants
+        # validate_tables() enforces on the static table: a duplicate
+        # source would scatter more than 100% of a pool's volume away
+        # (negative demand), a chained edge is unmodelled, and
+        # non-positive spans/uplifts make the logistic degenerate.
+        seen_src: set[tuple[str, str]] = set()
+        for g in self.generations:
+            if g.span_weeks <= 0 or g.perf_uplift <= 0 or g.launch_week < 0:
+                raise ValueError(
+                    f"generation epochs/uplift must be positive: {g}"
+                )
+            if g.old_family == g.new_family:
+                raise ValueError(f"generation must change family: {g}")
+            src = (g.cloud, g.old_family)
+            if src in seen_src:
+                raise ValueError(
+                    f"duplicate generation source {src}: two edges would "
+                    "migrate more than 100% of the pool's volume"
+                )
+            seen_src.add(src)
+        seen_dst: set[tuple[str, str]] = set()
+        for g in self.generations:
+            dst = (g.cloud, g.new_family)
+            if dst in seen_dst:
+                raise ValueError(
+                    f"duplicate generation successor {dst}: the share "
+                    "decomposition attributes a successor pool to exactly "
+                    "one pair"
+                )
+            seen_dst.add(dst)
+        new_fams = {(g.cloud, g.new_family) for g in self.generations}
+        for g in self.generations:
+            if (g.cloud, g.old_family) in new_fams:
+                raise ValueError(
+                    "chained generations are not modelled (a source is "
+                    f"another edge's successor): {g}"
+                )
+        if self.share_prior_weight < 0:
+            raise ValueError(
+                f"share_prior_weight must be >= 0: {self.share_prior_weight}"
+            )
+        if not 0.0 <= self.software_efficiency_per_year < 1.0:
+            raise ValueError(
+                "software_efficiency_per_year must be in [0, 1): "
+                f"{self.software_efficiency_per_year}"
+            )
+
+
+def resolve_migration(migration) -> MigrationConfig | None:
+    """Normalize the planner-facing ``migration=`` argument: None/False
+    disables (the legacy bit-identical path), True takes the default
+    :class:`MigrationConfig`, a MigrationConfig passes through."""
+    if migration is None or migration is False:
+        return None
+    if migration is True:
+        return MigrationConfig()
+    if isinstance(migration, MigrationConfig):
+        return migration
+    raise TypeError(
+        f"migration must be None/bool/MigrationConfig, got {migration!r}"
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MigrationEdges:
+    """Generation edges matched onto one fleet's pool axis.
+
+    Arrays are (G,): edge g transfers demand from pool ``src[g]`` to pool
+    ``dst[g]`` (same cloud and region, old family -> successor family)
+    along a logistic with midpoint ``midpoint_hours[g]`` and per-hour rate
+    ``rate_per_hour[g]``; one unit of old-family demand becomes
+    1 / (1 + ``uplift[g]``) units on the successor."""
+
+    src: jnp.ndarray             # (G,) int32 pool index of the old family
+    dst: jnp.ndarray             # (G,) int32 pool index of the successor
+    uplift: jnp.ndarray          # (G,) perf-per-dollar uplift
+    inv_gain: jnp.ndarray        # (G,) 1 / (1 + uplift), precomputed: a
+    #   multiply is bitwise deterministic across compilations where a
+    #   divide-by-constant may lower to reciprocal-multiply in one fusion
+    #   and real division in another (breaks the scan==loop guarantee)
+    midpoint_hours: jnp.ndarray  # (G,) logistic midpoint, hours
+    rate_per_hour: jnp.ndarray   # (G,) logistic rate, 1/hours
+
+    @property
+    def num_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def _empty_edges() -> MigrationEdges:
+    z = jnp.zeros((0,), jnp.float32)
+    return MigrationEdges(
+        src=jnp.zeros((0,), jnp.int32), dst=jnp.zeros((0,), jnp.int32),
+        uplift=z, inv_gain=z, midpoint_hours=z, rate_per_hour=z,
+    )
+
+
+def migration_edges(
+    keys: Sequence[dm.PoolKey],
+    cfg: MigrationConfig = MigrationConfig(),
+) -> MigrationEdges:
+    """Match the successor table onto a fleet: an edge exists wherever both
+    the old-family and new-family pool of one (cloud, region) are present.
+    Pools without a matched edge simply do not migrate."""
+    index = {tuple(k): i for i, k in enumerate(keys)}
+    src, dst, up, mid, rate = [], [], [], [], []
+    for g in cfg.generations:
+        regions = {k[1] for k in index if k[0] == g.cloud}
+        for r in sorted(regions):
+            old = index.get((g.cloud, r, g.old_family))
+            new = index.get((g.cloud, r, g.new_family))
+            if old is None or new is None:
+                continue
+            src.append(old)
+            dst.append(new)
+            up.append(g.perf_uplift)
+            mid.append(g.midpoint_week * HOURS_PER_WEEK)
+            rate.append(
+                _LOGISTIC_1090 / (g.span_weeks * HOURS_PER_WEEK)
+            )
+    if not src:
+        return _empty_edges()
+    up_arr = jnp.asarray(up, jnp.float32)
+    return MigrationEdges(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        uplift=up_arr,
+        inv_gain=1.0 / (1.0 + up_arr),
+        midpoint_hours=jnp.asarray(mid, jnp.float32),
+        rate_per_hour=jnp.asarray(rate, jnp.float32),
+    )
+
+
+def _sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically safe logistic built from exp/add/divide primitives.
+
+    ``lax.logistic`` may lower through different expansions depending on
+    fusion context (observed: last-ulp differences for deeply negative
+    arguments between a scan body and a standalone jitted step), which
+    would break the scan==loop bit-for-bit guarantee; the explicit
+    composition rounds identically in both compilations."""
+    pos = 1.0 / (1.0 + jnp.exp(-jnp.abs(x)))
+    neg_e = jnp.exp(-jnp.abs(x))
+    neg = neg_e / (1.0 + neg_e)
+    return jnp.where(x >= 0, pos, neg)
+
+
+def adoption_shares(edges: MigrationEdges, t_hours: jnp.ndarray) -> jnp.ndarray:
+    """(G, T) closed-form cumulative adoption s_g(t) — the share of edge
+    g's base demand volume that has migrated to the successor by hour t.
+    The scan recurrence in :func:`migrate_demand` reproduces exactly this
+    curve (induction on the discrete hazard); kept closed-form here for the
+    inference side and the tests."""
+    t = jnp.asarray(t_hours, jnp.float32)
+    return _sigmoid(
+        edges.rate_per_hour[:, None]
+        * (t[None, :] - edges.midpoint_hours[:, None])
+    )
+
+
+def software_deflator(
+    t_hours: jnp.ndarray, rate_per_year: float
+) -> jnp.ndarray:
+    """(T,) multiplicative software-efficiency deflator: the same user work
+    needs (1 + rate)^(-t/year) VMs as engine improvements land (§2.4)."""
+    t = jnp.asarray(t_hours, jnp.float32)
+    return jnp.exp(-jnp.log1p(rate_per_year) / HOURS_PER_YEAR * t)
+
+
+def _mig_step(edges: MigrationEdges, sw_log_hourly: float, carry, inp):
+    """One hour of turnover: place demand per the carried migrated shares,
+    then advance the carry to the next hour's share.
+
+    The hazard recurrence m_{t+1} = m_t + (1 - m_t) h_t with
+    h_t = (s(t+1) - s(t)) / (1 - s(t)) has the closed-form solution
+    m_t = s(t); the step advances the carry by evaluating that solution
+    directly rather than accumulating the increment — the incremental form
+    picks up 1-ulp fma drift that contracts differently in the fused scan
+    body vs the eagerly dispatched step, which would break the scan==loop
+    bit-for-bit guarantee the tests and bench rely on."""
+    m = carry                                    # (G,) migrated share at t
+    b, t = inp                                   # (P,) base column, hour
+    tf = t.astype(jnp.float32)
+    moved = b[edges.src] * m                     # (G,) volume leaving src
+    col = b.at[edges.src].add(-moved)
+    col = col.at[edges.dst].add(moved * edges.inv_gain)
+    eff = jnp.exp(-sw_log_hourly * tf)
+    m_next = _sigmoid(
+        edges.rate_per_hour * (tf + 1.0 - edges.midpoint_hours)
+    )
+    return m_next, col * eff
+
+
+@functools.partial(jax.jit, static_argnames=("sw_rate",))
+def migrate_demand(
+    base: jnp.ndarray,
+    edges: MigrationEdges,
+    *,
+    sw_rate: float = pricing.SOFTWARE_EFFICIENCY_PER_YEAR,
+) -> jnp.ndarray:
+    """Apply generation turnover + the software deflator to a (P, T) base
+    demand matrix — ONE ``lax.scan`` over the hour axis carrying the (G,)
+    migrated shares, so a multi-year fleet transforms as a single compiled
+    program (``unroll=8`` amortizes the tiny per-step math over blocks of
+    hours, same as the preemption walk)."""
+    base = jnp.asarray(base, jnp.float32)
+    t = jnp.arange(base.shape[1], dtype=jnp.int32)
+    m0 = adoption_shares(edges, jnp.zeros((1,)))[:, 0]
+    sw_log = float(np.log1p(sw_rate) / HOURS_PER_YEAR)
+    step = functools.partial(_mig_step, edges, sw_log)
+    _, cols = jax.lax.scan(step, m0, (base.T, t), unroll=8)
+    return cols.T                                # (T, P) -> (P, T)
+
+
+def migrate_demand_loop(
+    base: jnp.ndarray,
+    edges: MigrationEdges,
+    *,
+    sw_rate: float = pricing.SOFTWARE_EFFICIENCY_PER_YEAR,
+) -> jnp.ndarray:
+    """The same turnover replayed as a naive python loop over hours: the
+    identical (jitted) step dispatched host-side once per hour — the
+    benchmark floor (``bench_migration_scan``) and an independent execution
+    the scan path is tested against bit for bit."""
+    base = jnp.asarray(base, jnp.float32)
+    m = adoption_shares(edges, jnp.zeros((1,)))[:, 0]
+    sw_log = float(np.log1p(sw_rate) / HOURS_PER_YEAR)
+    step = jax.jit(functools.partial(_mig_step, edges, sw_log))
+    cols = []
+    for t in range(base.shape[1]):
+        m, col = step(m, (base[:, t], jnp.int32(t)))
+        cols.append(np.asarray(col))
+    return jnp.asarray(np.stack(cols, axis=1))
+
+
+def migrate_pool_set(
+    pools: dm.PoolSet,
+    cfg: MigrationConfig = MigrationConfig(),
+) -> dm.PoolSet:
+    """PoolSet-level turnover transform: same keys/configs, demand run
+    through :func:`migrate_demand` on the edges the successor table matches
+    onto this fleet."""
+    edges = migration_edges(pools.keys, cfg)
+    demand = migrate_demand(
+        jnp.asarray(pools.demand), edges,
+        sw_rate=cfg.software_efficiency_per_year,
+    )
+    return dm.PoolSet(
+        keys=pools.keys, demand=np.asarray(demand), configs=pools.configs
+    )

@@ -43,6 +43,10 @@ import numpy as np
 
 from repro.capacity import pricing
 
+# The SPOT_MARKETS rows must satisfy their invariants before any revocation
+# process is built from them (see pricing.validate_tables).
+pricing.validate_tables()
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

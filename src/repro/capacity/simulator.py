@@ -23,6 +23,7 @@ from repro.core import demand as dm
 from repro.core import planner as pl
 from repro.core import portfolio as pf
 from repro.core import timeshift as ts
+from repro.capacity import generations as gn
 from repro.capacity import preemption as pe
 from repro.capacity import pricing
 from repro.capacity.pricing import on_demand_premium
@@ -110,13 +111,21 @@ def fleet_pool_demand(
     num_hours: int,
     *,
     seed: int = 0,
+    migration: "gn.MigrationConfig | bool | None" = None,
 ) -> dm.PoolSet:
     """Hourly chip demand of the fleet, attributed per pool.
 
     Each serving fleet / training job lands in its own (cloud, region,
     machine-family) pool instead of being summed into one series — the
     native shape for the batched planner.  Unpinned members fall back to a
-    deterministic catalog slot so attribution is reproducible."""
+    deterministic catalog slot so attribution is reproducible.
+
+    ``migration`` runs the attributed demand through the hardware-
+    generation turnover model (``capacity.generations``): wherever the
+    catalog holds both an old family and its successor in one (cloud,
+    region), demand volume transfers along the logistic adoption curve and
+    the software-efficiency deflator acts on every pool.  ``None``
+    (default) keeps attribution bit-identical to the pre-migration path."""
     import jax
 
     catalog = default_pool_catalog()
@@ -137,7 +146,11 @@ def fleet_pool_demand(
         hi = min(job.start_hour + job.duration_hours, num_hours)
         key = job.pool if job.pool is not None else catalog[j % len(catalog)]
         per_pool[tuple(key)][lo:hi] += job.chips
-    return dm.PoolSet.from_dict(dict(per_pool))
+    pools = dm.PoolSet.from_dict(dict(per_pool))
+    mig = gn.resolve_migration(migration)
+    if mig is not None:
+        pools = gn.migrate_pool_set(pools, mig)
+    return pools
 
 
 def fleet_chip_demand(
@@ -296,17 +309,24 @@ def simulate_and_plan_pools(
     num_hours: int = 24 * 7 * 40,
     horizon_weeks: int = 8,
     seed: int = 0,
+    demand_migration: "gn.MigrationConfig | bool | None" = None,
     **plan_kw,
 ) -> tuple[dm.PoolSet, pl.FleetPoolsPlan]:
     """One-call per-pool pipeline: attribute the (default) fleet's demand to
     its (cloud, region, machine-family) pools, then run the batched
     Algorithm-1 portfolio planner over the pool axis.  Returns the PoolSet
-    alongside the plan so callers can inspect the traces that produced it."""
+    alongside the plan so callers can inspect the traces that produced it.
+
+    ``demand_migration`` is the *generative* turnover switch (demand
+    volume actually moves between families); pass ``migration=`` in
+    ``plan_kw`` to additionally make the planner migration-aware."""
     if fleets is None or jobs is None:
         d_fleets, d_jobs = default_fleet()
         fleets = d_fleets if fleets is None else fleets
         jobs = d_jobs if jobs is None else jobs
-    pools = fleet_pool_demand(fleets, jobs, num_hours, seed=seed)
+    pools = fleet_pool_demand(
+        fleets, jobs, num_hours, seed=seed, migration=demand_migration
+    )
     return pools, pl.plan_fleet_pools(
         pools, horizon_weeks=horizon_weeks, **plan_kw
     )
@@ -386,12 +406,15 @@ def replay_spot_plan(
     fleet_avail = float(
         1.0 - fallback.sum((-1, -2)).mean() / total_dem.sum()
     )
-    # The committed + mid-band on-demand bill is path independent — read it
-    # off the report rather than re-deriving the replanner's billing here.
+    # The committed + convertible + mid-band on-demand bill is path
+    # independent — read it off the report rather than re-deriving the
+    # replanner's billing here.
     base = float(
         np.asarray(report.committed_cost).sum()
         + np.asarray(report.on_demand_cost).sum()
     )
+    if report.conv_committed_cost is not None:
+        base += float(np.asarray(report.conv_committed_cost).sum())
     realized = base + float(
         (spot_bill + fallback_bill + requeue_bill).sum(-1).mean()
     )

@@ -278,6 +278,10 @@ class PoolSet:
         ``repro.data.traces.load_dataset_csv``, whose union-timestamp
         alignment produces equal-length series.
         """
+        if not pools:
+            raise ValueError(
+                "cannot build a PoolSet from zero pools (empty dataset?)"
+            )
         keys = tuple(sorted(pools))
         lengths = {k: len(pools[k]) for k in keys}
         if len(set(lengths.values())) > 1:

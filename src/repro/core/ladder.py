@@ -244,6 +244,32 @@ def plan_pool_portfolio_purchases(
     )
 
 
+def convertible_ladder_book(
+    cloud_targets: np.ndarray,
+    term_hours: np.ndarray,
+    clouds,
+    *,
+    period_hours: int = HOURS_PER_WEEK,
+    existing: PoolLadderBook | None = None,
+) -> PoolLadderBook:
+    """Convertible tranches as a *cloud-level* ladder book.
+
+    cloud_targets (C, W, Kc): per cloud, per period, the target width of
+    each convertible SKU's band.  Convertible commitments attach to a
+    cloud, not a pool — they re-pin across that cloud's machine families
+    at every re-plan boundary — so the book's keys are the pseudo-pools
+    ``(cloud, "*", "convertible")``: the region/family slots are
+    wildcards by construction.  Tranche mechanics (increment-only buys,
+    per-SKU terms, roll-off) are identical to the pool-level book, which
+    is what lets the reconciliation test compare the book's live widths
+    against the replay scan's carried cloud-level stack week by week."""
+    keys = tuple((c, "*", "convertible") for c in clouds)
+    return plan_pool_portfolio_purchases(
+        cloud_targets, term_hours, keys,
+        period_hours=period_hours, existing=existing,
+    )
+
+
 def weekly_spot_ladder(
     peaks: np.ndarray,
     *,

@@ -23,11 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.capacity import generations as gn
 from repro.capacity import pricing
 from repro.core import commitment as cm
 from repro.core import demand as dm
 from repro.core import forecast as fc
 from repro.core import ladder as ld
+from repro.core import migration as mg
 from repro.core import portfolio as pf
 from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
@@ -295,6 +297,18 @@ class FleetPoolsPlan:
     spot_lines: "spot_mod.SpotLines | None" = None
     spot_floor: np.ndarray | None = None    # (P,) spot band bottoms
     spot_cost: float = 0.0
+    # Migration awareness (None on migration-blind plans): the successor
+    # edges the share-based forecaster composed per-pool forecasts over.
+    migration_edges: "gn.MigrationEdges | None" = None
+    # Convertible band (None on convertible-free plans): cloud-level
+    # exchangeable tranches sized on the residual demand above the pool
+    # stacks and re-pinned onto pools for the evaluation window.
+    conv_options: "list[pf.PurchaseOption] | None" = None
+    conv_clouds: tuple[str, ...] | None = None
+    conv_widths: np.ndarray | None = None   # (C, Kc) widths purchased now
+    conv_alloc: np.ndarray | None = None    # (P,) re-pinned allocation
+    conv_ladders: ld.PoolLadderBook | None = None
+    conv_cost: float = 0.0
 
     def commitment(
         self,
@@ -327,6 +341,8 @@ def plan_fleet_pools(
     cfg: fc.ForecastConfig = fc.ForecastConfig(),
     mode: Literal["one_shot", "rolling"] = "one_shot",
     spot: "spot_mod.SpotConfig | bool | None" = None,
+    migration: "gn.MigrationConfig | bool | None" = None,
+    convertible: "list[pf.PurchaseOption] | bool | None" = None,
     **rolling_kw,
 ):
     """Algorithm 1 + the portfolio solver over every pool in ONE batched
@@ -354,13 +370,27 @@ def plan_fleet_pools(
     risk-priced spot band above its commitment stack, chance-constrained so
     expected demand-weighted availability stays >= the configured target.
     ``spot=None`` (default) leaves every code path bit-identical to the
-    spot-free planner."""
+    spot-free planner.
+
+    ``migration`` makes forecasting turnover-aware (``core.migration``):
+    pools matched by the ``pricing.GENERATIONS`` successor table are
+    forecast as *pair total x logistic family share* instead of raw
+    per-pool traces, so a generational migration is not extrapolated as
+    permanent organic decay/growth.  ``convertible`` adds the cloud-level
+    exchangeable SKUs (``pricing.CONVERTIBLE_PLANS``): a convertible
+    stack is sized on the cloud residual demand above the pool-pinned
+    stacks and its width re-pinned onto pools over the evaluation window
+    (the aggregate pooling-premium baseline stays commitments+spot only —
+    pooled capacity is already fungible, which is exactly what a
+    convertible buys back).  Both default to None and leave every code
+    path bit-identical to the pre-migration planner."""
     if mode == "rolling":
         from repro.core import replan
 
         return replan.replan_fleet_pools(
             pools, options, horizon_weeks=horizon_weeks, od_rate=od_rate,
-            term_weighting=term_weighting, cfg=cfg, spot=spot, **rolling_kw,
+            term_weighting=term_weighting, cfg=cfg, spot=spot,
+            migration=migration, convertible=convertible, **rolling_kw,
         )
     if rolling_kw:
         raise TypeError(
@@ -388,10 +418,28 @@ def plan_fleet_pools(
 
     # Steps 1-2, batched: one vmapped fit + forecast over the P axis
     # (fit_batched applies fit's own short-history yearly-term guard).
-    model = fc.fit_batched(hist, cfg)
-    yhat = fc.predict_batched(
-        model, hist.shape[-1] + jnp.arange(eval_hours)
-    )                                                             # (P, H)
+    # With migration awareness, the structural fit runs on turnover-
+    # invariant pair totals and per-pool forecasts are recomposed from
+    # total x logistic share.
+    mig_cfg = gn.resolve_migration(migration)
+    edges = (
+        gn.migration_edges(pools.keys, mig_cfg)
+        if mig_cfg is not None else None
+    )
+    use_mig = edges is not None and edges.num_edges > 0
+    t_fut = hist.shape[-1] + jnp.arange(eval_hours)
+    if use_mig:
+        model = fc.fit_batched(mg.transform_for_fit(hist, edges), cfg)
+        yhat_tot = fc.predict_batched(model, t_fut)
+        sh_a, sh_b = mg.fit_share(
+            hist, edges, t_max=model.t_max,
+            prior_weight=mig_cfg.share_prior_weight,
+        )
+        shares = mg.predict_share(sh_a, sh_b, t_fut, model.t_max)
+        yhat = mg.compose_forecast(yhat_tot, shares, edges)
+    else:
+        model = fc.fit_batched(hist, cfg)
+        yhat = fc.predict_batched(model, t_fut)                   # (P, H)
     w_hours = jnp.arange(1, horizon_weeks + 1) * HOURS_PER_WEEK
 
     # Steps 3-4, vmapped over pools (per-pool fractiles ride along).
@@ -429,6 +477,55 @@ def plan_fleet_pools(
     )(per_horizon, qs)                                            # (P, K)
     widths_np = np.asarray(widths)
 
+    # Convertible stack: cloud-level exchangeable SKUs sized on the
+    # residual forecast above the pool-pinned stacks, re-pinned onto the
+    # pools for the evaluation window (same machinery as the weekly
+    # re-pin in the rolling replay, applied once).
+    conv_opts = pf.resolve_convertible(convertible, pools.clouds)
+    conv_alloc_np = None
+    conv_cost = 0.0
+    if conv_opts is not None:
+        conv_clouds, member, al_c, be_c, qs_c, conv_terms = (
+            pf.convertible_cloud_setup(
+                conv_opts, pools.clouds, term_weighting=term_weighting,
+                od_rate=od,
+            )
+        )
+        pool_top = jnp.asarray(widths_np.sum(-1))
+        # Cloud totals are turnover-invariant; convertible buys the band
+        # that is safe at cloud level but above what pools pin themselves
+        # (same sizing as the rolling replay's weekly conv pass).
+        total_c = member @ yhat
+        per_h_c = jax.vmap(
+            lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
+        )(total_c, qs_c)
+        cw, ct = jax.vmap(
+            lambda ph, q: _monotone_stack(ph, q, conv_terms, horizon_weeks)
+        )(per_h_c, qs_c)                                          # (C, Kc)
+        conv_widths = pf.truncate_convertible_stack(
+            ct, cw, member @ pool_top
+        )
+        # Need keys on the window's forecast PEAK, mirroring the rolling
+        # replay: allocating sunk capacity is free, and a mean-based need
+        # would leave the diurnal peaks billing at on-demand.
+        excess = jnp.maximum(yhat.max(-1) - pool_top, 0.0)
+        conv_alloc = pf.allocate_convertible(
+            conv_widths.sum(-1), excess, member
+        )
+        conv_widths_np = np.asarray(conv_widths)
+        conv_alloc_np = np.asarray(conv_alloc)
+        conv_rates = np.asarray([o.rate for o in conv_opts])
+        conv_cost = float(
+            (conv_rates * conv_widths_np).sum() * eval_hours
+        )
+        conv_ladders = ld.convertible_ladder_book(
+            conv_widths_np[:, None, :],
+            np.asarray(
+                [o.term_weeks * HOURS_PER_WEEK for o in conv_opts]
+            ),
+            conv_clouds,
+        )
+
     # Per-pool tranche stacks: buy every band now; terms are per-SKU.
     term_hours = np.asarray([o.term_weeks * HOURS_PER_WEEK for o in options])
     ladders = ld.plan_pool_portfolio_purchases(
@@ -446,6 +543,10 @@ def plan_fleet_pools(
             spot_floor=(
                 float(spot_floor[p]) if spot_floor is not None else None
             ),
+            level_offset=(
+                float(conv_alloc_np[p]) if conv_alloc_np is not None
+                else 0.0
+            ),
         )
         per_pool.append(PoolPlanEntry(
             key=key,
@@ -458,7 +559,7 @@ def plan_fleet_pools(
     committed = sum(float(e.spend.committed.sum()) for e in per_pool)
     on_demand = sum(e.spend.on_demand for e in per_pool)
     spot_cost = sum(e.spend.spot for e in per_pool)
-    total = committed + on_demand + spot_cost
+    total = committed + on_demand + spot_cost + conv_cost
     all_od = sum(e.spend.all_on_demand for e in per_pool)
     savings = 1.0 - total / all_od if all_od > 0 else 0.0
 
@@ -531,6 +632,19 @@ def plan_fleet_pools(
         spot_lines=sp_res[1] if sp_res is not None else None,
         spot_floor=spot_floor,
         spot_cost=spot_cost,
+        migration_edges=edges if use_mig else None,
+        conv_options=conv_opts,
+        conv_clouds=(
+            tuple(conv_clouds) if conv_opts is not None else None
+        ),
+        conv_widths=(
+            conv_widths_np if conv_opts is not None else None
+        ),
+        conv_alloc=conv_alloc_np,
+        conv_ladders=(
+            conv_ladders if conv_opts is not None else None
+        ),
+        conv_cost=conv_cost,
     )
 
 

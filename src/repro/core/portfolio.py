@@ -52,6 +52,10 @@ import numpy as np
 
 from repro.capacity import pricing
 
+# Fail at import, not as a silently absurd plan, if the pricing data rows
+# this module turns into cost lines ever stop satisfying their invariants.
+pricing.validate_tables()
+
 
 @dataclasses.dataclass(frozen=True)
 class PurchaseOption:
@@ -59,12 +63,22 @@ class PurchaseOption:
 
     ``rate`` is the committed $/unit-hour in the repo's normalized units
     (mean Table-2 3y committed rate = 1.0, so on-demand ~= 2.1).
-    """
+
+    ``convertible`` marks the cloud-level exchangeable SKU class
+    (``pricing.CONVERTIBLE_PLANS``): a convertible tranche is purchasable
+    against a *cloud*, not a (cloud, region, machine-family) pool, and may
+    be re-pinned to a different family of that cloud at every re-plan
+    boundary — the lever that keeps long commitments useful through a
+    hardware-generation migration.  The flexibility costs a discount
+    haircut, so on a static fleet a convertible line never beats the
+    matching standard line; its value is dynamic and the planners size it
+    on cloud-level residual demand (see ``core.replan``)."""
 
     name: str
     cloud: str
     rate: float
     term_weeks: int
+    convertible: bool = False
 
 
 ON_DEMAND = "on-demand"
@@ -96,6 +110,139 @@ def options_from_pricing(
                 (1.0 - p.discount_3y) / base, 156,
             ))
     return out
+
+
+def convertible_options_from_pricing(
+    clouds: Sequence[str] | None = None,
+    *,
+    terms: Sequence[str] = ("1y", "3y"),
+) -> list[PurchaseOption]:
+    """The per-cloud convertible SKUs (``pricing.CONVERTIBLE_PLANS``):
+    rate = (1 - (mean standard discount - haircut)) in the same normalized
+    units as :func:`options_from_pricing`, one SKU per cloud per term —
+    family-agnostic by construction."""
+    if clouds is None:
+        clouds = sorted(pricing.known_clouds())
+    base = 1.0 - pricing.mean_discount_3y()
+    out = []
+    for c in clouds:
+        d1, d3 = pricing.convertible_discounts(c)
+        if "1y" in terms:
+            out.append(PurchaseOption(
+                f"{c}/convertible/1y", c, (1.0 - d1) / base, 52,
+                convertible=True,
+            ))
+        if "3y" in terms:
+            out.append(PurchaseOption(
+                f"{c}/convertible/3y", c, (1.0 - d3) / base, 156,
+                convertible=True,
+            ))
+    return out
+
+
+def resolve_convertible(
+    convertible, clouds: Sequence[str]
+) -> list[PurchaseOption] | None:
+    """Normalize the planner-facing ``convertible=`` argument: None/False
+    disables (the legacy bit-identical path), True takes the default
+    per-cloud SKUs for the clouds present in the fleet, and an explicit
+    option list passes through (every option must be convertible)."""
+    if convertible is None or convertible is False:
+        return None
+    if convertible is True:
+        convertible = convertible_options_from_pricing(
+            sorted(set(clouds))
+        )
+    if not isinstance(convertible, (list, tuple)) or not all(
+        isinstance(o, PurchaseOption) and o.convertible for o in convertible
+    ):
+        raise TypeError(
+            "convertible must be None/bool or a list of convertible "
+            f"PurchaseOptions, got {convertible!r}"
+        )
+    # An empty list (e.g. a caller's cloud filter matched nothing) means
+    # "no convertible SKUs exist" — the disabled path, not a zero-option
+    # solve that would crash on conv_terms.max().
+    return list(convertible) or None
+
+
+def convertible_cloud_setup(
+    conv_options: Sequence[PurchaseOption],
+    pool_clouds: Sequence[str],
+    *,
+    term_weighting: float = 0.0,
+    od_rate: float = 2.1,
+):
+    """Shared cloud-level machinery for the convertible band, used
+    identically by the one-shot planner and the rolling replay so the two
+    cannot drift apart: the sorted cloud axis, the (C, P) membership
+    matrix, per-cloud convertible cost lines (wrong-cloud SKUs priced at
+    on-demand, same trick as ``pool_option_lines``), handover fractiles,
+    and the per-SKU terms.  Returns
+    ``(clouds, member, alphas, betas, fractiles, term_weeks)``."""
+    clouds = sorted(set(pool_clouds))
+    member = jnp.asarray(
+        [[1.0 if c == pc else 0.0 for pc in pool_clouds] for c in clouds],
+        jnp.float32,
+    )
+    al, be, _ = pool_option_lines(
+        conv_options, clouds, term_weighting=term_weighting,
+        od_rate=od_rate,
+    )
+    qs = jax.vmap(
+        functools.partial(handover_fractiles, od_rate=od_rate)
+    )(al, be)
+    terms = jnp.asarray(
+        [o.term_weeks for o in conv_options], jnp.int32
+    )
+    return clouds, member, al, be, qs, terms
+
+
+def truncate_convertible_stack(
+    tops: jnp.ndarray, widths: jnp.ndarray, pinned: jnp.ndarray
+) -> jnp.ndarray:
+    """(C, Kc) convertible band widths: the cloud-total stack truncated
+    below the pool-pinned level — option bands cover (top - width, top];
+    everything under ``pinned`` (C,) belongs to the cheaper family-pinned
+    standard SKUs, so convertible keeps only the part of each band above
+    it."""
+    return jnp.maximum(
+        tops - jnp.maximum(tops - widths, pinned[:, None]), 0.0
+    )
+
+
+def allocate_convertible(
+    conv_width: jnp.ndarray,
+    excess: jnp.ndarray,
+    membership: jnp.ndarray,
+    *,
+    rounds: int = 3,
+) -> jnp.ndarray:
+    """Re-pin each cloud's convertible capacity onto its pools for one
+    period.
+
+    ``conv_width`` (C,) is the live convertible width per cloud,
+    ``excess`` (P,) each pool's forecast demand above its own pinned
+    stack, ``membership`` (C, P) the 0/1 cloud-of-pool matrix.  Allocation
+    is proportional-to-excess with ``rounds`` redistribution passes (a
+    pool never receives more than its excess while another of its cloud
+    still starves); capacity left over when a cloud's total excess is
+    smaller than its convertible width stays unallocated — it bills its
+    committed rate either way and covers nothing.  Pure array math so it
+    runs inside the rolling replay's scan."""
+    alloc = jnp.zeros_like(excess)
+    need = excess
+    rem = conv_width
+    for _ in range(rounds):
+        cloud_need = membership @ need                       # (C,)
+        give = membership.T @ (
+            rem / jnp.maximum(cloud_need, 1e-9)
+        ) * need                                             # (P,)
+        give = jnp.minimum(give, need)
+        alloc = alloc + give
+        need = need - give
+        rem = rem - membership @ give
+    return alloc
 
 
 def option_lines(
@@ -553,16 +700,22 @@ def portfolio_spend(
     od_rate: float = 2.1,
     spot_rate: float | None = None,
     spot_floor: float | None = None,
+    level_offset: float = 0.0,
 ) -> PortfolioSpend:
     """In-window dollars: every active tranche bills its committed rate for
     all hours; demand above the stack pays on-demand — except, with a spot
     band (``spot_rate``/``spot_floor``), demand above the floor bills at
-    the effective spot rate instead."""
+    the effective spot rate instead.
+
+    ``level_offset`` lifts the effective serving level above the pool's
+    own stack without billing here — the convertible allocation a
+    cloud-level tranche re-pins onto this pool (its committed rate bills
+    at cloud level, in the caller's accounting)."""
     t = f.shape[-1]
     rates = np.asarray([o.rate for o in options])
     w = np.asarray(widths)
     committed = rates * w * t
-    total_level = float(w.sum())
+    total_level = float(w.sum()) + float(level_offset)
     over = float(jnp.maximum(f - total_level, 0.0).sum())
     spot_vol = 0.0
     spot_cost = 0.0

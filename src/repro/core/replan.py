@@ -56,10 +56,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.capacity import generations as gn
 from repro.capacity import pricing
 from repro.core import demand as dm
 from repro.core import forecast as fc
 from repro.core import ladder as ld
+from repro.core import migration as mg
 from repro.core import portfolio as pf
 from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
@@ -68,6 +70,7 @@ from repro.core.planner import (
     _prefix_spot_floors,
     _prefix_weighted_quantiles,
 )
+from repro.core.portfolio import allocate_convertible  # noqa: F401  (API)
 
 
 @dataclasses.dataclass
@@ -114,6 +117,22 @@ class RollingPlanReport:
     spot_cost: np.ndarray | None = None               # (S, P) weekly spend
     spot_volume: np.ndarray | None = None             # (S, P) chip-hours
     spot_ladders: ld.PoolLadderBook | None = None     # 1-week audit tranches
+    # Migration awareness (None on migration-blind replays): the successor
+    # edges the share-based forecaster composed per-pool forecasts over.
+    migration_config: "gn.MigrationConfig | None" = None
+    migration_edges: "gn.MigrationEdges | None" = None
+    # Convertible band (None on convertible-free replays): cloud-level
+    # exchangeable tranches, carried per cloud in the scan and re-pinned
+    # onto that cloud's pools every week (``conv_alloc``).  Cloud axes
+    # align with ``conv_clouds``; option axes with ``conv_options``.
+    conv_options: "list[pf.PurchaseOption] | None" = None
+    conv_clouds: tuple[str, ...] | None = None
+    conv_targets: np.ndarray | None = None            # (S, C, Kc) targets
+    conv_increments: np.ndarray | None = None         # (S, C, Kc) buys
+    conv_active: np.ndarray | None = None             # (S, C, Kc) stack
+    conv_alloc: np.ndarray | None = None              # (S, P) re-pinned
+    conv_committed_cost: np.ndarray | None = None     # (S, C) weekly spend
+    conv_ladders: ld.PoolLadderBook | None = None     # cloud-level book
 
     @property
     def weekly_cost(self) -> np.ndarray:
@@ -121,7 +140,10 @@ class RollingPlanReport:
         total = self.committed_cost + self.on_demand_cost
         if self.spot_cost is not None:
             total = total + self.spot_cost
-        return total.sum(-1)
+        total = total.sum(-1)
+        if self.conv_committed_cost is not None:
+            total = total + self.conv_committed_cost.sum(-1)
+        return total
 
     def summary(self) -> dict:
         out = {
@@ -133,6 +155,11 @@ class RollingPlanReport:
         if self.spot_cost is not None:
             out["spot_cost"] = float(self.spot_cost.sum())
             out["spot_chip_hours"] = float(self.spot_volume.sum())
+        if self.conv_committed_cost is not None:
+            out["convertible_cost"] = float(self.conv_committed_cost.sum())
+            out["convertible_final_width"] = float(
+                self.conv_active[-1].sum()
+            )
         if self.one_shot_cost is not None:
             out["one_shot_cost"] = self.one_shot_cost
             out["savings_vs_one_shot"] = self.savings_vs_one_shot
@@ -169,6 +196,8 @@ def replan_fleet_pools(
     backend: Literal["scan", "loop"] = "scan",
     compare: bool = True,
     spot: "spot_mod.SpotConfig | bool | None" = None,
+    migration: "gn.MigrationConfig | bool | None" = None,
+    convertible: "list[pf.PurchaseOption] | bool | None" = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
 
@@ -191,6 +220,30 @@ def replan_fleet_pools(
     effective spot rate above the floor.  The one-shot baseline replays
     with the same spot band; hindsight stays commitments-only.  With
     ``spot=None`` (default) the scan program is unchanged bit for bit.
+
+    ``migration`` makes the weekly forecasts *turnover-aware*
+    (``core.migration``): wherever the successor table matches an
+    (old family, successor) pool pair, the structural forecaster fits the
+    pair total in old-equivalent units (turnover-invariant) and a rolling
+    logit-share fit carries the S-curve, so a migrating family's decay is
+    forecast as share transfer instead of permanent organic decline — the
+    failure mode that keeps migration-blind replans buying tranches on a
+    dying family.  One extra prefix-sum state (five moments per edge per
+    week) rides the same scan.
+
+    ``convertible`` adds the cloud-level exchangeable SKUs
+    (``pricing.CONVERTIBLE_PLANS``): each week, after the pool-pinned
+    targets are decided, the *residual* cloud-level demand — forecast
+    above the pool stacks, summed per cloud — is solved against the
+    convertible cost lines, increments are bought into a cloud-level
+    tranche stack the scan carries next to the pool-level one, and the
+    live convertible width is re-pinned onto the cloud's pools
+    proportionally to each pool's forecast excess
+    (:func:`allocate_convertible`).  A migrating family's demand can
+    therefore ride one convertible tranche across the family boundary
+    instead of stranding a pinned tranche and re-buying on the successor.
+    With ``migration=None`` and ``convertible=None`` (defaults) every
+    code path is bit-identical to the pre-migration planner.
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -221,31 +274,68 @@ def replan_fleet_pools(
         )(al_p, be_p, s_lines.rate)                            # (P,)
     rates = jnp.asarray([o.rate for o in options], jnp.float32)
     term_weeks = jnp.asarray([o.term_weeks for o in options], jnp.int32)
-    sched_len = total_weeks + int(term_weeks.max()) + 1
+
+    # Migration awareness: the structural forecaster fits pair totals (the
+    # old-family rows replaced by old + (1+uplift) x successor), a share
+    # prefix state rides along, and each week's per-pool forecasts are
+    # recomposed from total x share inside the step.
+    mig_cfg = gn.resolve_migration(migration)
+    edges = (
+        gn.migration_edges(pools.keys, mig_cfg)
+        if mig_cfg is not None else None
+    )
+    use_mig = edges is not None and edges.num_edges > 0
+    fit_demand = mg.transform_for_fit(demand, edges) if use_mig else demand
+
+    # Convertible band: cloud-level SKUs next to the pool-pinned options.
+    conv_opts = pf.resolve_convertible(convertible, pools.clouds)
+    if conv_opts is not None:
+        conv_clouds, member, al_c, be_c, qs_c, conv_terms = (
+            pf.convertible_cloud_setup(
+                conv_opts, pools.clouds, term_weighting=term_weighting,
+                od_rate=od,
+            )
+        )
+        num_clouds, num_conv = len(conv_clouds), len(conv_opts)
+        conv_rates = jnp.asarray(
+            [o.rate for o in conv_opts], jnp.float32
+        )
+        max_term = max(int(term_weeks.max()), int(conv_terms.max()))
+    else:
+        max_term = int(term_weeks.max())
+    sched_len = total_weeks + max_term + 1
     w_hours = jnp.arange(1, horizon_weeks + 1) * HOURS_PER_WEEK
 
     state = fc.prefix_fit_state(
-        demand, cfg, horizon_hours=horizon_hours,
+        fit_demand, cfg, horizon_hours=horizon_hours,
         min_prefix_hours=start_weeks * HOURS_PER_WEEK,
+    )
+    share_state = (
+        mg.share_prefix_state(
+            demand, edges, t_max=state.t_max,
+            prior_weight=mig_cfg.share_prior_weight,
+        )
+        if use_mig else None
     )
     demand_wk = demand.reshape(num_pools, total_weeks, HOURS_PER_WEEK)
 
-    def grid_prefix_levels(yhat):
+    def grid_prefix_levels(yhat, al, be, num_rows, num_k):
         """Per-horizon stack tops via the over/under sweep on prefix-mask
-        weights: horizon prefixes fold into the pool axis so the whole
-        (P x Wh, H, G) problem is one batched sweep."""
-        f_rep = jnp.repeat(yhat, horizon_weeks, axis=0)    # (P*Wh, H)
+        weights: horizon prefixes fold into the row axis so the whole
+        (R x Wh, H, G) problem is one batched sweep (rows = pools for the
+        standard options, clouds for the convertible residual)."""
+        f_rep = jnp.repeat(yhat, horizon_weeks, axis=0)    # (R*Wh, H)
         t = jnp.arange(horizon_hours)
         masks = (t[None, :] < w_hours[:, None]).astype(yhat.dtype)
-        w_rep = jnp.tile(masks, (num_pools, 1))
+        w_rep = jnp.tile(masks, (num_rows, 1))
         plan = pf.optimal_portfolio_grid(
             f_rep,
-            jnp.repeat(al_p, horizon_weeks, axis=0),
-            jnp.repeat(be_p, horizon_weeks, axis=0),
+            jnp.repeat(al, horizon_weeks, axis=0),
+            jnp.repeat(be, horizon_weeks, axis=0),
             od_rate=od, num_grid=num_grid, use_kernel=use_kernel,
             weights=w_rep,
         )
-        return plan.levels.reshape(num_pools, horizon_weeks, num_opts)
+        return plan.levels.reshape(num_rows, horizon_weeks, num_k)
 
     def spot_floors_for(yhat):
         """(P, W) per-horizon spot floors on one week's forecast: the
@@ -269,7 +359,9 @@ def replan_fleet_pools(
         (horizon 1 — spot is re-decided weekly, so only the nearest
         horizon binds it) rides along as the fast-capacity decision."""
         if solver == "grid":
-            per_h = grid_prefix_levels(yhat)
+            per_h = grid_prefix_levels(
+                yhat, al_p, be_p, num_pools, num_opts
+            )
         else:
             per_h = jax.vmap(
                 lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
@@ -284,9 +376,41 @@ def replan_fleet_pools(
         )(per_h, qs)
         return widths, floor
 
+    def conv_targets_for(yhat, pool_top):
+        """Cloud-level convertible targets on one week's forecast.
+
+        The cloud *total* is the turnover-invariant series (demand moves
+        between a cloud's families, it does not leave the cloud), so the
+        safe cloud-level stack comes from the same per-horizon prefix
+        thresholds -> term minima -> monotone stack machinery run on the
+        summed forecast with the convertible cost lines.  Pools pin the
+        bottom ``pool_top`` of that demand themselves (standard SKUs are
+        cheaper), so the convertible bands are truncated below the summed
+        pool targets: convertible buys exactly the band that is safe at
+        cloud level but pinnable to no single family — the volume that
+        migrates."""
+        total_c = member @ yhat                              # (C, H)
+        if solver == "grid":
+            per_h = grid_prefix_levels(
+                total_c, al_c, be_c, num_clouds, num_conv
+            )
+        else:
+            per_h = jax.vmap(
+                lambda y, q: _prefix_weighted_quantiles(y, w_hours, q)
+            )(total_c, qs_c)
+        widths_c, tops_c = jax.vmap(
+            lambda ph, q: _monotone_stack(ph, q, conv_terms, horizon_weeks)
+        )(per_h, qs_c)                                       # (C, Kc) x2
+        return pf.truncate_convertible_stack(
+            tops_c, widths_c, member @ pool_top
+        )                                                    # (C, Kc)
+
     def make_step(cadence: int, solve_fn):
         def step(carry, w):
-            active, rolloff = carry
+            if conv_opts is None:
+                active, rolloff = carry
+            else:
+                active, rolloff, active_c, rolloff_c = carry
             # 1. tranches whose term ends at week w roll off the stack
             expired = jax.lax.dynamic_index_in_dim(
                 rolloff, w, axis=2, keepdims=False
@@ -298,6 +422,14 @@ def replan_fleet_pools(
             yhat = fc.predict_from_beta(
                 state, beta, w * HOURS_PER_WEEK, horizon_hours
             )
+            if use_mig:
+                # Recompose pair totals x rolling logit-share fits into
+                # per-pool forecasts (the share state solves on the same
+                # week prefix the structural fit did).
+                sa, sb = mg.solve_share_prefix(share_state, w)
+                t_fut = w * HOURS_PER_WEEK + jnp.arange(horizon_hours)
+                sh = mg.predict_share(sa, sb, t_fut, share_state.t_max)
+                yhat = mg.compose_forecast(yhat, sh, edges)
             # 3-4. solver targets; buy only increments, only on decision
             # weeks — surpluses persist until their tranches expire.  The
             # spot floor is NOT carried: it is this week's fast-capacity
@@ -307,9 +439,66 @@ def replan_fleet_pools(
                 is_dec = (w - start_weeks) % cadence == 0
             else:
                 is_dec = w == start_weeks
-            inc = jnp.maximum(widths - active, 0.0)
-            inc = jnp.where(is_dec & (inc > ld.PURCHASE_EPS), inc, 0.0)
-            active = active + inc
+            if conv_opts is None:
+                inc = jnp.maximum(widths - active, 0.0)
+                inc = jnp.where(
+                    is_dec & (inc > ld.PURCHASE_EPS), inc, 0.0
+                )
+                active = active + inc
+            else:
+                # Convertible pass, decided BEFORE the standard buys: roll
+                # off, size the cloud-level band (cloud-total stack
+                # truncated below the pool targets), buy increments into
+                # the cloud-level carry, then re-pin the live width onto
+                # the pools with the largest gaps between forecast and
+                # their pinned stacks.  Live convertible capacity then
+                # *suppresses* new standard purchases pro rata — a tranche
+                # that migrated from a dying family serves the successor
+                # instead of the successor re-buying pinned capacity under
+                # it (the unstranding this SKU class exists for).
+                expired_c = jax.lax.dynamic_index_in_dim(
+                    rolloff_c, w, axis=2, keepdims=False
+                )
+                active_c = active_c - expired_c
+                # Truncate below the HIGHER of this week's targets and the
+                # carried stack: surplus standard tranches (targets fell,
+                # tranches persist to term) already cover their band — a
+                # convertible bought there would bill the same demand
+                # twice.
+                pool_top = jnp.maximum(widths.sum(-1), active.sum(-1))
+                widths_c = conv_targets_for(yhat, pool_top)
+                inc_c = jnp.maximum(widths_c - active_c, 0.0)
+                inc_c = jnp.where(
+                    is_dec & (inc_c > ld.PURCHASE_EPS), inc_c, 0.0
+                )
+                active_c = active_c + inc_c
+                expiry_c = jax.nn.one_hot(
+                    w + conv_terms, sched_len, dtype=rolloff_c.dtype
+                )
+                rolloff_c = rolloff_c + (
+                    inc_c[:, :, None] * expiry_c[None, :, :]
+                )
+                # Allocation need keys on the coming week's forecast PEAK:
+                # allocating sunk capacity is free, and a mean-based need
+                # would leave the diurnal peaks billing at on-demand.
+                week1 = yhat[:, :HOURS_PER_WEEK].max(-1)
+                need = jnp.maximum(week1 - active.sum(-1), 0.0)
+                alloc = allocate_convertible(
+                    active_c.sum(-1), need, member
+                )
+                desired = jnp.maximum(widths - active, 0.0)
+                lift = desired.sum(-1)                     # (P,)
+                scale = jnp.where(
+                    lift > ld.PURCHASE_EPS,
+                    jnp.maximum(lift - alloc, 0.0)
+                    / jnp.maximum(lift, 1e-9),
+                    0.0,
+                )
+                inc = desired * scale[:, None]
+                inc = jnp.where(
+                    is_dec & (inc > ld.PURCHASE_EPS), inc, 0.0
+                )
+                active = active + inc
             expiry = jax.nn.one_hot(
                 w + term_weeks, sched_len, dtype=rolloff.dtype
             )                                              # (K, sched)
@@ -317,12 +506,16 @@ def replan_fleet_pools(
             # 5. bill the week: committed rates regardless of use,
             # shortfall above the stack top at the on-demand rate — or,
             # with a spot band, on-demand only up to the floor and the
-            # effective spot rate above it
+            # effective spot rate above it.  A convertible allocation
+            # lifts each pool's effective level for the week (the tranche
+            # itself bills at cloud level whether or not it is pinned).
             d = jax.lax.dynamic_index_in_dim(
                 demand_wk, w, axis=1, keepdims=False
             )                                              # (P, 168)
             level = active.sum(-1)
             committed = (rates * active).sum(-1) * HOURS_PER_WEEK
+            if conv_opts is not None:
+                level = level + alloc
             used = jnp.minimum(d, level[:, None]).sum(-1)
             util = jnp.where(
                 level > 0, used / (level * HOURS_PER_WEEK), 0.0
@@ -347,21 +540,36 @@ def replan_fleet_pools(
                     "spot": s_lines.rate * spot_over.sum(-1),
                     "spot_peak": spot_over.max(-1),
                 }
-            return (active, rolloff), out
+            if conv_opts is None:
+                return (active, rolloff), out
+            out.update({
+                "conv_target": widths_c, "conv_inc": inc_c,
+                "conv_active": active_c, "conv_alloc": alloc,
+                "conv_committed": (
+                    (conv_rates * active_c).sum(-1) * HOURS_PER_WEEK
+                ),
+            })
+            return (active, rolloff, active_c, rolloff_c), out
         return step
 
     def replay(cadence: int, which: str):
         active0 = jnp.zeros((num_pools, num_opts), jnp.float32)
         rolloff0 = jnp.zeros((num_pools, num_opts, sched_len), jnp.float32)
+        carry0 = (active0, rolloff0)
+        if conv_opts is not None:
+            carry0 = carry0 + (
+                jnp.zeros((num_clouds, num_conv), jnp.float32),
+                jnp.zeros((num_clouds, num_conv, sched_len), jnp.float32),
+            )
         if which == "scan":
             step = make_step(cadence, fc.solve_prefix)
             ws = jnp.arange(start_weeks, total_weeks)
-            _, ys = jax.lax.scan(step, (active0, rolloff0), ws)
+            _, ys = jax.lax.scan(step, carry0, ws)
             return ys
         # Naive python-level replay: one full prefix re-accumulation and
         # one host dispatch per week (what the scan path replaces).
         step = make_step(cadence, fc.solve_prefix_direct)
-        carry, outs = (active0, rolloff0), []
+        carry, outs = carry0, []
         for w in range(start_weeks, total_weeks):
             carry, out = step(carry, jnp.int32(w))
             outs.append(out)
@@ -375,10 +583,14 @@ def replan_fleet_pools(
 
     # The purchases as a tranche book: per-week targets (0 outside decision
     # weeks, so the ladder planner's "never below active" rule buys exactly
-    # the scan's increments) threaded through the portfolio ladder.
+    # the scan's increments) threaded through the portfolio ladder.  With a
+    # convertible band the solver targets are NOT what was bought (live
+    # convertible capacity suppresses standard purchases), so the book
+    # replays the scan's realized post-purchase stack instead.
     targets_full = np.zeros((num_pools, total_weeks, num_opts), np.float32)
     dec = (weeks - start_weeks) % cadence_weeks == 0
-    targets_full[:, weeks[dec]] = np.swapaxes(ys["target"][dec], 0, 1)
+    book_targets = ys["target"] if conv_opts is None else ys["active"]
+    targets_full[:, weeks[dec]] = np.swapaxes(book_targets[dec], 0, 1)
     term_hours = np.asarray(
         [o.term_weeks * HOURS_PER_WEEK for o in options]
     )
@@ -389,6 +601,8 @@ def replan_fleet_pools(
     total = float(ys["committed"].sum() + ys["od"].sum())
     if sp_res is not None:
         total += float(ys["spot"].sum())
+    if conv_opts is not None:
+        total += float(ys["conv_committed"].sum())
     eval_demand = demand[:, start_weeks * HOURS_PER_WEEK:]
     all_od = od * float(eval_demand.sum())
     report = RollingPlanReport(
@@ -421,16 +635,45 @@ def replan_fleet_pools(
         report.spot_ladders = ld.spot_ladder_book(
             ys["spot_peak"], pools.keys, start_week=start_weeks
         )
+    if use_mig:
+        report.migration_config = mig_cfg
+        report.migration_edges = edges
+    if conv_opts is not None:
+        report.conv_options = conv_opts
+        report.conv_clouds = tuple(conv_clouds)
+        report.conv_targets = ys["conv_target"]
+        report.conv_increments = ys["conv_inc"]
+        report.conv_active = ys["conv_active"]
+        report.conv_alloc = ys["conv_alloc"]
+        report.conv_committed_cost = ys["conv_committed"]
+        # The cloud-level tranche book: same increment-only semantics as
+        # the pool book, so its live widths must reconcile with the scan's
+        # carried cloud-level stack every week (tested).
+        conv_full = np.zeros(
+            (len(conv_clouds), total_weeks, len(conv_opts)), np.float32
+        )
+        conv_full[:, weeks[dec]] = np.swapaxes(
+            ys["conv_target"][dec], 0, 1
+        )
+        report.conv_ladders = ld.convertible_ladder_book(
+            conv_full,
+            np.asarray(
+                [o.term_weeks * HOURS_PER_WEEK for o in conv_opts]
+            ),
+            conv_clouds,
+        )
     if not compare:
         return report
 
     # One-shot baseline: identical replay, single decision week (with the
-    # same spot band when enabled — the baselines differ in commitment
-    # cadence, not in which purchasing options exist).
+    # same spot/convertible bands when enabled — the baselines differ in
+    # commitment cadence, not in which purchasing options exist).
     one = replay(0, "scan")
     one_weekly = np.asarray(one["committed"] + one["od"]).sum(-1)
     if sp_res is not None:
         one_weekly = one_weekly + np.asarray(one["spot"]).sum(-1)
+    if conv_opts is not None:
+        one_weekly = one_weekly + np.asarray(one["conv_committed"]).sum(-1)
     report.one_shot_weekly_cost = one_weekly
     report.one_shot_cost = float(one_weekly.sum())
     report.savings_vs_one_shot = (

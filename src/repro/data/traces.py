@@ -27,6 +27,7 @@ from datetime import datetime
 import jax
 import numpy as np
 
+from repro.capacity import generations as gn
 from repro.core import demand as dm
 
 DATASET_ENV = "SHAVEDICE_DATASET"
@@ -35,16 +36,29 @@ DATASET_ENV = "SHAVEDICE_DATASET"
 def _time_index(timestamps: set[str]) -> tuple[dict[str, int], int]:
     """(timestamp -> row index, grid length) for the alignment grid.
 
-    ISO-8601 timestamps on whole hours get a *contiguous* hourly grid from
-    the earliest to the latest observed stamp, so hours missing from every
-    pool at once (a global recording outage) still occupy a slot instead of
-    silently compressing the time axis — downstream code does hour
-    arithmetic (weekly horizon slicing, Fourier phases) on array indices.
-    Unparseable or sub-hourly stamps fall back to the sorted union of
+    ISO-8601 timestamps get a *contiguous* hourly grid from the earliest
+    to the latest observed stamp, so hours missing from every pool at once
+    (a global recording outage) still occupy a slot instead of silently
+    compressing the time axis — downstream code does hour arithmetic
+    (weekly horizon slicing, Fourier phases) on array indices.  RARE
+    sub-hourly stamps snap to their nearest hour slot (a single glitchy
+    half-hour row — the typical companion of duplicate rows — must not
+    poison the whole dataset's grid; snapped collisions are summed by the
+    loader, the same semantics as duplicate rows).  Unparseable stamps —
+    or a systematically sub-hourly cadence, where snap-and-sum would
+    inflate every pool's demand — fall back to the sorted union of
     observed stamps."""
+    if not timestamps:
+        raise ValueError(
+            "dataset has no rows: an empty CSV defines no timestamp grid"
+        )
     try:
         parsed = {ts: datetime.fromisoformat(ts) for ts in timestamps}
-        lo = min(parsed.values())
+        # Anchor the grid on the earliest stamp's WHOLE hour: if the
+        # earliest observation is itself a sub-hourly glitch, anchoring on
+        # it verbatim would shift every whole-hour stamp to a half-open
+        # offset and the rounding would merge distinct hours.
+        lo = min(parsed.values()).replace(minute=0, second=0, microsecond=0)
         offsets = {
             ts: (dt - lo).total_seconds() / 3600.0
             for ts, dt in parsed.items()
@@ -52,12 +66,17 @@ def _time_index(timestamps: set[str]) -> tuple[dict[str, int], int]:
     except (ValueError, TypeError):      # non-ISO stamps / mixed tz-ness
         grid = sorted(timestamps)
         return {ts: i for i, ts in enumerate(grid)}, len(grid)
-    index = {ts: int(round(o)) for ts, o in offsets.items()}
-    off_hour = any(abs(o - round(o)) > 1e-9 for o in offsets.values())
-    collides = len(set(index.values())) != len(index)
-    if off_hour or collides:
+    off_hour = sum(
+        1 for o in offsets.values() if abs(o - round(o)) > 1e-9
+    )
+    if off_hour > max(1, len(offsets) // 20):
+        # SYSTEMATICALLY sub-hourly (e.g. a 30-minute-cadence export, not
+        # one glitchy row): snapping would sum several samples into every
+        # hour slot and silently inflate demand — keep each sample in its
+        # own slot on the sorted-union grid instead.
         grid = sorted(timestamps)
         return {ts: i for i, ts in enumerate(grid)}, len(grid)
+    index = {ts: int(round(o)) for ts, o in offsets.items()}
     return index, max(index.values()) + 1
 
 
@@ -71,9 +90,14 @@ def load_dataset_csv(path: str) -> dict[tuple[str, str, str], np.ndarray]:
     ``_time_index``) — and a pool contributes its ``normalized_count`` at
     the stamps it has rows for and **0.0 demand** at grid hours it is
     missing: absence of a row means the pool had no recorded demand that
-    hour, not unknown demand.  Duplicate (timestamp, pool) rows are summed.
-    Every returned array therefore has the same length and the mapping
-    stacks directly into a (P, T) matrix (``PoolSet.from_dict``).
+    hour, not unknown demand.  Duplicate (timestamp, pool) rows are
+    summed, as are distinct stamps that snap to the same hour slot, so a
+    pool made entirely of duplicate rows or a single-row pool still lands
+    correctly on the union grid (the degenerate shapes that used to
+    produce broken grids).  Every returned array therefore has the same
+    length and the mapping stacks directly into a (P, T) matrix
+    (``PoolSet.from_dict``); an empty CSV raises instead of returning an
+    un-stackable empty mapping.
     """
     series: dict[tuple[str, str, str], dict[str, float]] = defaultdict(
         lambda: defaultdict(float)
@@ -90,7 +114,7 @@ def load_dataset_csv(path: str) -> dict[tuple[str, str, str], np.ndarray]:
     for key, by_ts in series.items():
         arr = np.zeros(n, np.float32)
         for ts, v in by_ts.items():
-            arr[index[ts]] = v
+            arr[index[ts]] += v       # += : snapped stamps may share a slot
         out[key] = arr
     return out
 
@@ -128,11 +152,92 @@ def synthetic_pools(
     }
 
 
+def _turnover_pool_configs(
+    num_pools: int, cfg: gn.MigrationConfig
+) -> dict[tuple[str, str, str], dm.DemandConfig]:
+    """Per-pool configs for a fleet undergoing generation turnover: pools
+    come in (old family, successor family) pairs keyed by the successor
+    table, replicated across regions until ``num_pools`` is reached.  The
+    old-family pool carries the pair's base demand; the successor starts
+    empty and receives volume only through migration — exactly the shape
+    the paper's §2.3 dataset shows around a family launch."""
+    gens = list(cfg.generations)
+    if not gens:
+        raise ValueError("migration config has no generations to plant")
+    if num_pools < 2 or num_pools % 2:
+        raise ValueError(
+            "a turnover fleet is built from (old family, successor) pool "
+            f"pairs; num_pools must be even and >= 2, got {num_pools}"
+        )
+    out: dict[tuple[str, str, str], dm.DemandConfig] = {}
+    num_pairs = num_pools // 2
+    for i in range(num_pairs):
+        g = gens[i % len(gens)]
+        region = f"region_{i // len(gens)}"
+        out[(g.cloud, region, g.old_family)] = dm.DemandConfig(
+            base_level=60.0 * (1.5 ** (i % 3)),
+            annual_growth=0.35 + 0.1 * (i % 4),
+            diurnal_amplitude=0.10 + 0.02 * (i % 3),
+            weekly_amplitude=0.12 + 0.02 * (i % 4),
+        )
+        out[(g.cloud, region, g.new_family)] = dm.DemandConfig(
+            base_level=0.0
+        )
+    return out
+
+
+def synthetic_base_pool_set(
+    num_pools: int = 12,
+    num_hours: int = 24 * 365 * 3,
+    seed: int = 0,
+    migration: "gn.MigrationConfig | bool | None" = True,
+) -> dm.PoolSet:
+    """The *pre-turnover* fleet a migration scenario starts from: demand is
+    attributed to the old-family pools, successor pools exist but are empty.
+    Kept public so tests can plant a known base, run
+    ``generations.migrate_pool_set`` themselves, and hand the base's
+    aggregate to ``migration.decompose_drivers`` as the user-volume series.
+    """
+    cfg = gn.resolve_migration(migration)
+    if cfg is None:
+        # Unlike synthetic_pool_set, there IS no non-turnover base fleet:
+        # silently substituting the default table would make False mean
+        # the opposite of what it means one function up.
+        raise ValueError(
+            "synthetic_base_pool_set builds a turnover fleet; pass "
+            "migration=True or a MigrationConfig (use synthetic_pool_set "
+            "for the legacy fleet)"
+        )
+    cfgs = _turnover_pool_configs(num_pools, cfg)
+    pools = {
+        key: np.asarray(
+            dm.synth_demand(num_hours, c, key=jax.random.PRNGKey(seed + i))
+        ) if c.base_level > 0 else np.zeros(num_hours, np.float32)
+        for i, (key, c) in enumerate(cfgs.items())
+    }
+    return dm.PoolSet.from_dict(pools, configs=cfgs)
+
+
 def synthetic_pool_set(
-    num_pools: int = 12, num_hours: int = 24 * 365 * 3, seed: int = 0
+    num_pools: int = 12,
+    num_hours: int = 24 * 365 * 3,
+    seed: int = 0,
+    migration: "gn.MigrationConfig | bool | None" = None,
 ) -> dm.PoolSet:
     """The synthetic fleet as an aligned :class:`PoolSet` (keys sorted),
-    carrying each pool's generating ``DemandConfig``."""
+    carrying each pool's generating ``DemandConfig``.
+
+    ``migration`` switches the fleet to the hardware-turnover scenario:
+    pools are keyed by the successor table's (old family, new family)
+    pairs, base demand lands on the old families, and
+    ``capacity.generations`` transfers volume to the successors along the
+    planted logistic S-curves while the software-efficiency deflator acts
+    on every pool.  ``migration=None`` (default) keeps the legacy fleet
+    bit-identical."""
+    mig = gn.resolve_migration(migration)
+    if mig is not None:
+        base = synthetic_base_pool_set(num_pools, num_hours, seed, mig)
+        return gn.migrate_pool_set(base, mig)
     return dm.PoolSet.from_dict(
         synthetic_pools(num_pools, num_hours, seed),
         configs=_pool_configs(num_pools),

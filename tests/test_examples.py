@@ -41,6 +41,19 @@ class TestExamples:
         assert "Monte-Carlo replay" in out
         assert "MET" in out
 
+    def test_generation_turnover(self, capsys):
+        run_example("examples/generation_turnover.py")
+        out = capsys.readouterr().out
+        assert "driver decomposition" in out
+        assert "migration-blind vs aware + convertible" in out
+        assert "convertible tranches" in out
+
+    def test_rolling_replan_migration_flag(self, capsys):
+        run_example("examples/rolling_replan.py", ["--migration"])
+        out = capsys.readouterr().out
+        assert "convertible stack" in out
+        assert "rolling vs one-shot vs hindsight" in out
+
     def test_train_lm_small(self, tmp_path, capsys):
         run_example(
             "examples/train_lm.py",

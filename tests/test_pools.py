@@ -145,6 +145,123 @@ class TestCsvLoaderAlignment:
         pools = traces.load_dataset_csv(str(path))
         np.testing.assert_array_equal(pools[("aws", "r0", "m1")], [5.0])
 
+    def test_all_duplicate_pool_lands_on_union_grid(self, tmp_path):
+        """Regression: a pool whose trace is ENTIRELY duplicate rows of
+        one timestamp must sum onto that single slot of the union grid —
+        zeros everywhere else — instead of degrading the grid."""
+        rows = [
+            {"timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 1.0}
+            for h in range(6)
+        ] + [
+            {"timestamp": self._ts(3), "cloud": "gcp", "region": "r1",
+             "machine_type": "dup", "normalized_count": v}
+            for v in (5.0, 7.0, 1.0)
+        ]
+        path = tmp_path / "alldup.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        d = pools[("gcp", "r1", "dup")]
+        assert d.shape == (6,)
+        assert d[3] == 13.0
+        assert d.sum() == 13.0
+        ps = dm.PoolSet.from_dict(pools)
+        assert ps.demand.shape == (2, 6)
+
+    def test_single_row_pool_aligns_and_extends_grid(self, tmp_path):
+        """Regression: a single-row pool must align onto the union grid —
+        including EXTENDING the contiguous hourly grid when its stamp is
+        the latest observation, not collapsing the axis to its one row."""
+        rows = [
+            {"timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 2.0}
+            for h in range(4)
+        ] + [
+            {"timestamp": self._ts(9), "cloud": "azure", "region": "r2",
+             "machine_type": "solo", "normalized_count": 4.0},
+        ]
+        path = tmp_path / "solo.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        solo = pools[("azure", "r2", "solo")]
+        assert solo.shape == (10,)       # grid spans hours 0..9 contiguously
+        assert solo[9] == 4.0 and solo.sum() == 4.0
+        np.testing.assert_array_equal(
+            pools[("aws", "r0", "m1")][4:], 0.0
+        )
+
+    def test_sub_hour_glitch_row_does_not_poison_grid(self, tmp_path):
+        """Regression: one sub-hourly stamp (a glitchy duplicate) used to
+        drop the WHOLE dataset onto the compressed sorted-union grid; now
+        it snaps to its nearest hour slot and everyone else keeps the
+        contiguous hourly axis."""
+        rows = [
+            {"timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 1.0 + h}
+            for h in range(6)
+        ] + [
+            {"timestamp": "2023-01-01T02:10:00", "cloud": "aws",
+             "region": "r0", "machine_type": "m1",
+             "normalized_count": 10.0},
+        ]
+        path = tmp_path / "glitch.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        a = pools[("aws", "r0", "m1")]
+        assert a.shape == (6,)           # contiguous hourly grid survives
+        assert a[2] == 3.0 + 10.0        # snapped row summed into hour 2
+
+    def test_earliest_glitch_stamp_does_not_shift_grid(self, tmp_path):
+        """Regression: when the EARLIEST observation is the sub-hourly
+        glitch, the grid must anchor on its whole hour — otherwise every
+        whole-hour stamp sits at a half-open offset and rounding merges
+        distinct hours into shared slots."""
+        rows = [
+            {"timestamp": "2023-01-01T00:30:00", "cloud": "aws",
+             "region": "r0", "machine_type": "m1",
+             "normalized_count": 10.0},
+        ] + [
+            {"timestamp": self._ts(h), "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 1.0 + h}
+            for h in range(1, 4)
+        ]
+        path = tmp_path / "earlyglitch.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        a = pools[("aws", "r0", "m1")]
+        assert a.shape == (4,)
+        # whole hours keep their own slots; the glitch snaps alone
+        np.testing.assert_array_equal(a[1:], [2.0, 3.0, 4.0])
+        assert a[0] == 10.0
+
+    def test_systematic_sub_hourly_cadence_keeps_own_slots(self, tmp_path):
+        """A 30-minute-cadence export is not a glitch: snap-and-sum would
+        double every pool's demand, so the loader falls back to the
+        sorted-union grid with one slot per sample."""
+        stamps = []
+        for h in range(4):
+            stamps.append(f"2023-01-01T{h:02d}:00:00")
+            stamps.append(f"2023-01-01T{h:02d}:30:00")
+        rows = [
+            {"timestamp": ts, "cloud": "aws", "region": "r0",
+             "machine_type": "m1", "normalized_count": 3.0}
+            for ts in stamps
+        ]
+        path = tmp_path / "halfhour.csv"
+        _write_csv(path, rows)
+        pools = traces.load_dataset_csv(str(path))
+        a = pools[("aws", "r0", "m1")]
+        assert a.shape == (8,)           # one slot per sample, no summing
+        np.testing.assert_array_equal(a, 3.0)
+
+    def test_empty_dataset_fails_loudly(self, tmp_path):
+        path = tmp_path / "empty.csv"
+        _write_csv(path, [])
+        with pytest.raises(ValueError, match="no rows"):
+            traces.load_dataset_csv(str(path))
+        with pytest.raises(ValueError, match="zero pools"):
+            dm.PoolSet.from_dict({})
+
 
 class TestBatchedSolverVsLoop:
     """Acceptance: the batched (P, T) solver path must match a python loop

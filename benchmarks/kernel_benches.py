@@ -231,7 +231,7 @@ def bench_preemption_scan(quick: bool = False, seed: int = 0) -> list[Row]:
          f"max |a_emp - a| = {np.abs(a_emp - a_th).max():.4f}"),
         ("spot_effective_rate_range", us_scan,
          f"{float(lines.rate.min()):.2f}-{float(lines.rate.max()):.2f} "
-         f"per used chip-hour vs od 2.1"),
+         "per used chip-hour vs od 2.1"),
     ]
 
 

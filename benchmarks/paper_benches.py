@@ -66,7 +66,7 @@ def bench_commitment_fig4(quick: bool = False, seed: int = 0) -> list[Row]:
         ("fig4_exact_optimum_quantile", us,
          f"c*={exact:.1f} (q=A/(A+B)={2.1/3.1:.3f})"),
         ("fig4_brent_agreement", us,
-         f"|brent-exact| cost delta "
+         "|brent-exact| cost delta "
          f"{abs(float(cm.commitment_cost(f, brent)) - float(cm.commitment_cost(f, exact))):.2f}"),
     ]
 

@@ -47,7 +47,7 @@ def main():
     print(f"  total cost:           {base.total_cost:14.0f}")
     print(f"  all-on-demand cost:   {base.all_on_demand_cost:14.0f}")
     print(f"  savings:              {base.savings_vs_on_demand * 100:13.1f}%")
-    print(f"  with 5% time shifting: on-demand spill "
+    print("  with 5% time shifting: on-demand spill "
           f"{base.on_demand_cost:.0f} -> {shifted.on_demand_cost:.0f}")
 
     # Portfolio of Table-2 purchasing options instead of one averaged level.
@@ -84,9 +84,9 @@ def main():
     gcp_3y = pool_plan.commitment(cloud="gcp", term_weeks=156)
     print(f"  3y GCP commitment across regions: {gcp_3y:.1f} chips")
     print(f"  fleet total cost:     {pool_plan.total_cost:14.0f}")
-    print(f"  vs all-on-demand:     "
+    print("  vs all-on-demand:     "
           f"{pool_plan.savings_vs_on_demand * 100:13.1f}%")
-    print(f"  pooling premium:      "
+    print("  pooling premium:      "
           f"{pool_plan.pooling_premium * 100:+13.2f}%  "
           "(per-pool plans vs one aggregate plan — capacity cannot "
           "actually pool across clouds)")

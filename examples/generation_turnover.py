@@ -21,7 +21,6 @@ strands them.  This walkthrough runs the whole subsystem:
      family each week — the unstranding lever.
 """
 
-import numpy as np
 
 from repro.capacity import generations as gn
 from repro.capacity import pricing
@@ -59,7 +58,7 @@ def main():
               f"midpoint wk {ef.midpoint_weeks:5.1f}  "
               f"span wk {ef.span_weeks:5.1f}  "
               f"adopted {ef.final_share * 100:5.1f}%")
-    print(f"  software efficiency drift: "
+    print("  software efficiency drift: "
           f"{dec.efficiency_per_year * 100:.1f}%/yr "
           f"(planted {plant.software_efficiency_per_year * 100:.0f}%/yr)")
     print(f"  hardware index at end: {dec.hardware_index[-1]:.3f} "

@@ -8,7 +8,6 @@ with its cost breakdown.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import commitment as cm
@@ -39,7 +38,7 @@ def main():
     # 3. Algorithm 1: forecast-driven commitment for next week.
     res = pl.plan_commitment(trace, num_horizons=12)
     print("\n== Algorithm 1 (paper §3.3.3) ==")
-    print(f"  per-horizon optimal levels: "
+    print("  per-horizon optimal levels: "
           f"{np.array2string(np.asarray(res.per_horizon_levels), precision=1)}")
     print(f"  c* = min over horizons  = {res.commitment:.1f} "
           f"(binding horizon: {res.argmin_horizon + 1} weeks out)")
@@ -47,9 +46,9 @@ def main():
     # 4. What the decision costs over the binding horizon.
     w = (res.argmin_horizon + 1) * HOURS_PER_WEEK
     seg = res.forecast[:w]
-    print(f"  expected C(c*) over horizon: "
+    print("  expected C(c*) over horizon: "
           f"{float(cm.commitment_cost(seg, res.commitment)):.0f}")
-    print(f"  unused-commitment fraction:  "
+    print("  unused-commitment fraction:  "
           f"{float(cm.unused_commitment_fraction(seg, res.commitment)) * 100:.1f}%"
           " (paper §4: ~4.3%)")
 

@@ -74,7 +74,7 @@ def main():
     print(f"    spot bill {rr.realized_spot_cost:.0f} + od fallback "
           f"{rr.fallback_on_demand_cost:.0f} + requeue "
           f"{rr.requeue_cost:.0f}")
-    print(f"  availability per pool (mean over draws): "
+    print("  availability per pool (mean over draws): "
           + " ".join(f"{v:.4f}" for v in rr.mean_availability))
     print(f"  target {rr.availability_target:.2f} -> "
           f"{'MET' if rr.meets_target else 'MISSED'} "

@@ -76,7 +76,7 @@ def main():
     losses = trainer.fit()
     print(f"step {trainer.step}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
     if trainer.watchdog.flagged_steps:
-        print(f"straggler watchdog flagged steps: "
+        print("straggler watchdog flagged steps: "
               f"{trainer.watchdog.flagged_steps}")
     print(f"checkpoints: {trainer.ckpt.all_steps()} in {args.ckpt_dir}")
 

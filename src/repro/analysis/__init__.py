@@ -1,0 +1,26 @@
+"""``repro.analysis`` — trace-safety, determinism, and kernel-contract
+static analyzer.
+
+The invariants every subsystem in this repo leans on (scan bodies are
+trace-pure and bit-deterministic, kernels ship ops/ref pairs with tolerance
+tests, pricing-table consumers validate at import, optional subsystems keep
+disabled-path goldens, docs name real symbols) were previously enforced by
+convention.  This package enforces them as AST-level lint rules, run in CI
+as a blocking job:
+
+    python -m repro.analysis            # human output, exit 1 on findings
+    python -m repro.analysis --json     # machine output for CI artifacts
+
+Accepted exceptions live in ``baseline.json`` at the repo root; every entry
+needs a justification string.  See docs/ARCHITECTURE.md
+("Static analysis & contracts") for the rule table and workflow.
+"""
+
+from repro.analysis.engine import (  # noqa: F401
+    AnalysisContext,
+    Finding,
+    Report,
+    Rule,
+    run_analysis,
+    write_baseline,
+)

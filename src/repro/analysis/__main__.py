@@ -1,0 +1,89 @@
+"""CLI: ``python -m repro.analysis [--json] [--baseline PATH] [--root PATH]``.
+
+Exit codes: 0 = clean (no non-baselined findings), 1 = findings,
+2 = configuration error (malformed baseline / unjustified suppression).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.engine import run_analysis, write_baseline
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analyzer for the repo's trace-safety, "
+                    "determinism, and contract invariants.",
+    )
+    parser.add_argument(
+        "--root", default=".",
+        help="repo root (contains src/, tests/, README.md); default: cwd",
+    )
+    parser.add_argument(
+        "--baseline", default=None,
+        help="baseline file (default: <root>/baseline.json)",
+    )
+    parser.add_argument(
+        "--json", action="store_true",
+        help="emit findings as JSON on stdout (for CI artifacts)",
+    )
+    parser.add_argument(
+        "--rule", action="append", default=None, metavar="ID",
+        choices=sorted(RULES_BY_ID),
+        help="run only the given rule(s); repeatable",
+    )
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to the baseline file as entries with "
+             "EMPTY justifications — each must be hand-justified before the "
+             "baseline is accepted",
+    )
+    args = parser.parse_args(argv)
+
+    root = Path(args.root)
+    if not (root / "src").is_dir():
+        print(f"error: {root} does not look like the repo root "
+              "(no src/ directory)", file=sys.stderr)
+        return 2
+
+    rules = [RULES_BY_ID[r] for r in args.rule] if args.rule else None
+    report = run_analysis(root, baseline_path=args.baseline, rules=rules)
+
+    if args.write_baseline:
+        bpath = Path(args.baseline) if args.baseline else root / "baseline.json"
+        write_baseline(report, bpath)
+        print(f"wrote {len(report.findings)} entr"
+              f"{'y' if len(report.findings) == 1 else 'ies'} to {bpath} — "
+              "fill in every justification before committing")
+        return 0
+
+    if args.json:
+        json.dump(report.to_dict(), sys.stdout, indent=2)
+        print()
+    else:
+        for f in report.unsuppressed:
+            print(f.render())
+        for key in report.stale_suppressions:
+            print(f"warning: stale baseline entry (matches nothing): {key}",
+                  file=sys.stderr)
+        for e in report.errors:
+            print(f"error: {e}", file=sys.stderr)
+        n, s = len(report.unsuppressed), len(report.suppressed)
+        print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}"
+              + (f" ({s} baselined)" if s else "")
+              + f" across {len(ALL_RULES) if rules is None else len(rules)}"
+              " rules")
+
+    if report.errors:
+        return 2
+    return 1 if report.unsuppressed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""Shared AST helpers for the static-analysis rules: import resolution,
+dotted-name rendering, symbol tables, and the static-expression classifier
+used by the trace-purity rule.
+
+Everything here is pure ``ast`` — the analyzer never imports the code it
+checks, so a module with a missing optional dependency (or a planted
+violation in a test fixture) still analyzes fine.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterator
+
+#: attribute chains whose value is shape/layout metadata, not array data —
+#: reading (or branching on) them is trace-safe.
+SHAPE_ATTRS = frozenset({"shape", "ndim", "size", "dtype"})
+
+#: numpy attributes that are dtypes/constants, safe to reference under trace.
+NUMPY_SAFE_ATTRS = frozenset({
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "ndarray", "generic", "number", "integer", "floating",
+    "dtype", "finfo", "iinfo", "newaxis", "pi", "inf", "nan", "e",
+    "euler_gamma",
+})
+
+
+def iter_py_files(root: Path) -> Iterator[Path]:
+    """All .py files under ``root``, skipping caches, sorted for stable
+    finding order."""
+    if not root.is_dir():
+        return
+    for p in sorted(root.rglob("*.py")):
+        if "__pycache__" in p.parts:
+            continue
+        yield p
+
+
+def module_name_for(path: Path, src_root: Path) -> str:
+    """Dotted module name of ``path`` relative to ``src_root``
+    (``src/repro/core/planner.py`` -> ``repro.core.planner``)."""
+    rel = path.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Render a Name/Attribute chain as ``a.b.c``; None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class ImportMap:
+    """Name bindings a module's top-level imports introduce.
+
+    ``aliases`` maps a local name to the full dotted module it stands for
+    (``np`` -> ``numpy``, ``gn`` -> ``repro.capacity.generations``);
+    ``from_imports`` maps a local name to ``(module, original_name)`` for
+    ``from module import original as local``.
+    """
+
+    aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    from_imports: dict[str, tuple[str, str]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def resolve(self, dotted_name: str) -> str:
+        """Expand the leading component of ``a.b.c`` through the module's
+        imports, returning a fully-qualified dotted name.  Unknown leading
+        names pass through unchanged."""
+        head, _, rest = dotted_name.partition(".")
+        if head in self.aliases:
+            base = self.aliases[head]
+        elif head in self.from_imports:
+            mod, orig = self.from_imports[head]
+            base = f"{mod}.{orig}"
+        else:
+            return dotted_name
+        return f"{base}.{rest}" if rest else base
+
+
+def import_map(tree: ast.Module) -> ImportMap:
+    m = ImportMap()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                m.aliases[a.asname or a.name.partition(".")[0]] = (
+                    a.name if a.asname else a.name.partition(".")[0]
+                )
+                if a.asname is None and "." in a.name:
+                    # `import a.b.c` binds `a`; remember the full path too so
+                    # `a.b.c.f()` resolves without guessing.
+                    m.aliases.setdefault(a.name, a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                m.from_imports[a.asname or a.name] = (node.module, a.name)
+    return m
+
+
+def top_level_symbols(tree: ast.Module) -> set[str]:
+    """Names a module defines or re-exports at top level."""
+    out: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                out.add(a.asname or a.name.partition(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name != "*":
+                    out.add(a.asname or a.name)
+    return out
+
+
+def func_params(fn: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda):
+    """(positional_names, kwonly_names) of a function/lambda signature."""
+    a = fn.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    if a.vararg:
+        pos.append(a.vararg.arg)
+    kw = [p.arg for p in a.kwonlyargs]
+    if a.kwarg:
+        kw.append(a.kwarg.arg)
+    return pos, kw
+
+
+def is_shape_attr_chain(node: ast.AST) -> bool:
+    """True for ``x.shape``, ``x.shape[0]``, ``x.ndim`` ... — metadata reads
+    that never force a tracer to a concrete value."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS
+
+
+class StaticEnv:
+    """Classifies expressions inside one traced function as *static*
+    (resolvable at trace time: config, shapes, python ints) or potentially
+    tracer-valued.
+
+    Positional parameters start out tracer-valued; keyword-only parameters
+    and parameters named in ``static_names`` (e.g. ``jax.jit``
+    ``static_argnames``) start static.  Locals become static when assigned a
+    static expression — shape unpacks (``p, t = f.shape``), ``len()``,
+    constants, and arithmetic over static names all qualify.  Names bound
+    outside the function (globals, closure captures) are assumed static:
+    the analyzer cannot see them, and flagging every closure read would
+    drown real findings (a documented limitation).
+    """
+
+    def __init__(self, fn, static_names: frozenset[str] = frozenset()):
+        pos, kw = func_params(fn)
+        self.tracer_names: set[str] = {
+            p for p in pos
+            if p not in static_names and not self._static_annotation(fn, p)
+        }
+        self.local_names: set[str] = set(pos) | set(kw)
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+        # Two passes so forward references inside straight-line bodies
+        # settle (a = b; b = x.shape style orderings are rare but cheap to
+        # cover).
+        for _ in range(2):
+            for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    targets = [node.target]
+                else:
+                    continue
+                static_rhs = self.is_static(node.value)
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            self.local_names.add(n.id)
+                            if static_rhs:
+                                self.tracer_names.discard(n.id)
+                            else:
+                                self.tracer_names.add(n.id)
+
+    @staticmethod
+    def _static_annotation(fn, param: str) -> bool:
+        """A parameter annotated with a non-array type (config dataclass,
+        str, int, ...) is trace-static: tracers only flow through
+        array-typed (or unannotated) parameters."""
+        if isinstance(fn, ast.Lambda):
+            return False
+        for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+            if a.arg == param and a.annotation is not None:
+                try:
+                    text = ast.unparse(a.annotation)
+                except Exception:
+                    return False
+                return not any(
+                    hint in text for hint in ("ndarray", "Array", "array")
+                )
+        return False
+
+    def is_static(self, expr: ast.AST) -> bool:
+        """True when no tracer-valued *data* feeds the expression."""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in self.tracer_names:
+                if not self._inside_shape_read(expr, node):
+                    return False
+        return True
+
+    @staticmethod
+    def _inside_shape_read(root: ast.AST, name: ast.Name) -> bool:
+        """Is this Name occurrence under an ``.shape``/``.ndim``/... read?"""
+        for node in ast.walk(root):
+            if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+                for sub in ast.walk(node):
+                    if sub is name:
+                        return True
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id == "len":
+                    for sub in ast.walk(node):
+                        if sub is name:
+                            return True
+        return False

@@ -1,0 +1,250 @@
+"""Traced-code discovery: which functions run under a JAX trace.
+
+Entry points are found syntactically — functions passed to ``lax.scan`` /
+``jax.jit`` / ``jax.vmap`` / ``pl.pallas_call`` (directly, via
+``functools.partial``, or as ``@jax.jit`` / ``@partial(jax.jit, ...)``
+decorators) — then the call graph is walked transitively: any repo function
+a traced function calls is itself traced.  Resolution is deliberately
+conservative: bare names resolve through enclosing function scopes, the
+module's top level, and top-level ``from repro... import`` bindings;
+``mod.attr`` calls resolve when ``mod`` is an imported repo module.
+Anything unresolvable (``jnp.*``, third-party, dynamic dispatch) is skipped
+rather than guessed at.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis.astutils import dotted
+
+# Fully-qualified callables whose function-argument runs under trace, after
+# alias expansion through the module's imports.
+SCAN_CALLS = frozenset({"jax.lax.scan", "lax.scan"})
+VMAP_CALLS = frozenset({"jax.vmap", "vmap"})
+JIT_CALLS = frozenset({"jax.jit", "jit"})
+PARTIAL_CALLS = frozenset({"functools.partial", "partial"})
+
+FuncNode = ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+
+
+@dataclasses.dataclass
+class TracedFunction:
+    module: "object"                  # engine.ModuleInfo
+    node: FuncNode
+    kind: str                         # "scan_body" | "vmap" | "jit" | "pallas" | "called"
+    static_names: frozenset[str]      # params static under this trace
+    entry: str                        # human description of how it got traced
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+class _ScopeIndex(ast.NodeVisitor):
+    """Per-module index: every function node with its enclosing-scope chain,
+    so a bare name at any point resolves lexically."""
+
+    def __init__(self, tree: ast.Module):
+        self.parents: dict[ast.AST, ast.AST | None] = {}
+        self.functions: list[tuple[FuncNode, tuple[FuncNode, ...]]] = []
+        self._stack: list[FuncNode] = []
+        self._walk(tree)
+
+    def _walk(self, node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            self.parents[child] = node
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                self.functions.append((child, tuple(self._stack)))
+                self._stack.append(child)
+                self._walk(child)
+                self._stack.pop()
+            else:
+                self._walk(child)
+
+    def scope_of(self, node: ast.AST) -> tuple[FuncNode, ...]:
+        """Enclosing function chain (outermost first) of any AST node."""
+        chain: list[FuncNode] = []
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                chain.append(cur)
+            cur = self.parents.get(cur)
+        return tuple(reversed(chain))
+
+
+class CallGraph:
+    """Traced-function closure over every module in the context."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self._scopes = {name: _ScopeIndex(m.tree) for name, m in ctx.modules.items()}
+        self._top_funcs: dict[str, dict[str, FuncNode]] = {}
+        for name, m in ctx.modules.items():
+            self._top_funcs[name] = {
+                n.name: n for n in m.tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+        self.traced: list[TracedFunction] = []
+        self._seen: set[tuple[str, int]] = set()   # (module, node id)
+        self._discover_roots()
+        self._close_over_calls()
+
+    # -- root discovery ----------------------------------------------------
+
+    def _discover_roots(self):
+        for modname, info in self.ctx.modules.items():
+            scope = self._scopes[modname]
+            resolve = info.imports.resolve
+            for node in ast.walk(info.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._check_decorators(modname, info, node)
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted(node.func)
+                if name is None:
+                    continue
+                full = resolve(name)
+                if full in SCAN_CALLS and node.args:
+                    self._trace_arg(modname, node, node.args[0], "scan_body",
+                                    frozenset(), f"lax.scan in {modname}")
+                elif full in VMAP_CALLS and node.args:
+                    self._trace_arg(modname, node, node.args[0], "vmap",
+                                    frozenset(), f"jax.vmap in {modname}")
+                elif full in JIT_CALLS and node.args:
+                    static = _jit_static_names(node, node.args[0])
+                    self._trace_arg(modname, node, node.args[0], "jit",
+                                    static, f"jax.jit in {modname}")
+                elif full.endswith("pallas_call") and node.args:
+                    self._trace_arg(modname, node, node.args[0], "pallas",
+                                    frozenset(), f"pallas_call in {modname}")
+
+    def _check_decorators(self, modname, info, fn):
+        resolve = info.imports.resolve
+        for dec in fn.decorator_list:
+            target = None
+            static: frozenset[str] = frozenset()
+            name = dotted(dec)
+            if name is not None and resolve(name) in JIT_CALLS:
+                target = fn                                   # @jax.jit
+            elif isinstance(dec, ast.Call):
+                cname = dotted(dec.func)
+                if cname is None:
+                    continue
+                cfull = resolve(cname)
+                if cfull in JIT_CALLS:                        # @jax.jit(...)
+                    target = fn
+                    static = _static_from_kwargs(dec, fn)
+                elif cfull in PARTIAL_CALLS and dec.args:     # @partial(jax.jit, ...)
+                    inner = dotted(dec.args[0])
+                    if inner is not None and resolve(inner) in JIT_CALLS:
+                        target = fn
+                        static = _static_from_kwargs(dec, fn)
+            if target is not None:
+                self._add(modname, target, "jit", static,
+                          f"@jit decorator on {fn.name}")
+
+    def _trace_arg(self, modname, call, arg, kind, static, entry):
+        """Resolve the function-valued argument of a tracing call."""
+        resolved = self._resolve_func_expr(modname, call, arg)
+        for mod, fnode in resolved:
+            self._add(mod, fnode, kind, static, entry)
+
+    def _resolve_func_expr(self, modname, site, expr):
+        """-> [(module_name, FuncNode)] the expression may denote."""
+        if isinstance(expr, ast.Lambda):
+            return [(modname, expr)]
+        if isinstance(expr, ast.Call):
+            # functools.partial(fn, ...) / jax.checkpoint(fn) style wrappers:
+            # trace the first function-ish argument.
+            name = dotted(expr.func)
+            resolve = self.ctx.modules[modname].imports.resolve
+            if name is not None and resolve(name) in PARTIAL_CALLS and expr.args:
+                return self._resolve_func_expr(modname, site, expr.args[0])
+            return []
+        name = dotted(expr)
+        if name is None:
+            return []
+        return self._resolve_name(modname, site, name)
+
+    def _resolve_name(self, modname, site, name):
+        scope = self._scopes[modname]
+        info = self.ctx.modules[modname]
+        head, _, rest = name.partition(".")
+        if not rest:
+            # Lexical: nested defs in enclosing scopes, innermost first.
+            for enclosing in reversed(scope.scope_of(site)):
+                body = enclosing.body if isinstance(enclosing.body, list) else []
+                for n in body:
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                            and n.name == head:
+                        return [(modname, n)]
+            if head in self._top_funcs[modname]:
+                return [(modname, self._top_funcs[modname][head])]
+            if head in info.imports.from_imports:
+                mod, orig = info.imports.from_imports[head]
+                if mod in self._top_funcs and orig in self._top_funcs[mod]:
+                    return [(mod, self._top_funcs[mod][orig])]
+            return []
+        # mod.attr: the head must be an imported repo module.
+        target_mod = info.imports.resolve(head)
+        if target_mod in self._top_funcs and "." not in rest:
+            fn = self._top_funcs[target_mod].get(rest)
+            if fn is not None:
+                return [(target_mod, fn)]
+        return []
+
+    def _add(self, modname, fnode, kind, static, entry):
+        key = (modname, id(fnode))
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.traced.append(TracedFunction(
+            module=self.ctx.modules[modname], node=fnode, kind=kind,
+            static_names=static, entry=entry,
+        ))
+
+    # -- transitive closure ------------------------------------------------
+
+    def _close_over_calls(self):
+        queue = list(self.traced)
+        while queue:
+            tf = queue.pop()
+            modname = tf.module.name
+            body = tf.node.body if isinstance(tf.node.body, list) \
+                else [ast.Expr(tf.node.body)]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    for mod, fnode in self._resolve_func_expr(
+                            modname, node, node.func):
+                        key = (mod, id(fnode))
+                        if key in self._seen:
+                            continue
+                        self._add(mod, fnode, "called", frozenset(),
+                                  f"called from traced {tf.name} ({modname})")
+                        queue.append(self.traced[-1])
+
+
+def _jit_static_names(call: ast.Call, fn_expr) -> frozenset[str]:
+    """static_argnames/static_argnums of a jit(...) call, as param names
+    where statically recoverable."""
+    return _static_from_kwargs(call, None)
+
+
+def _static_from_kwargs(call: ast.Call, fn) -> frozenset[str]:
+    names: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums" and fn is not None:
+            pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                        and 0 <= n.value < len(pos):
+                    names.add(pos[n.value])
+    return frozenset(names)

@@ -1,0 +1,246 @@
+"""Rule engine for ``repro.analysis``: parsed-module index, rule registry,
+findings, and the ``baseline.json`` suppression mechanism.
+
+The analyzer is purely static (``ast`` only): it parses every module under
+``src/``, the top-level test files, and the two prose docs, hands the parsed
+index to each registered rule, and diffs the resulting findings against the
+baseline.  A finding's suppression ``key`` is line-free so baselines survive
+unrelated edits; every baseline entry must carry a human justification —
+the baseline is a ledger of *accepted* exceptions, not a mute button.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+from typing import Callable
+
+from repro.analysis.astutils import (
+    import_map,
+    iter_py_files,
+    module_name_for,
+    top_level_symbols,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str       # "R1".."R6" (or "PARSE" for unparseable sources)
+    file: str       # repo-relative posix path; "" for repo-level findings
+    line: int       # 1-based; 0 for file/repo-level findings
+    key: str        # stable suppression identity (never includes the line)
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.line else (self.file or "<repo>")
+        return f"[{self.rule}] {loc}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    run: Callable[["AnalysisContext"], list[Finding]]
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    name: str            # dotted module name ("" for test files)
+    path: Path
+    source: str
+    tree: ast.Module
+
+    @property
+    def imports(self):
+        if not hasattr(self, "_imports"):
+            self._imports = import_map(self.tree)
+        return self._imports
+
+
+class AnalysisContext:
+    """Everything the rules see: one parse of the repo.
+
+    Layout expectations (shared by the real repo and the test fixtures):
+    ``<root>/src/repro/...`` sources, ``<root>/tests/*.py`` tests (top level
+    only — fixture trees under ``tests/`` are not scanned), and prose docs at
+    ``<root>/README.md`` + ``<root>/docs/ARCHITECTURE.md``.
+    """
+
+    def __init__(self, root: Path | str):
+        self.root = Path(root).resolve()
+        self.src_root = self.root / "src"
+        self.tests_root = self.root / "tests"
+        self.parse_findings: list[Finding] = []
+        self.modules: dict[str, ModuleInfo] = {}
+        for path in iter_py_files(self.src_root):
+            name = module_name_for(path, self.src_root)
+            info = self._parse(name, path)
+            if info is not None:
+                self.modules[name] = info
+        self.tests: dict[str, ModuleInfo] = {}
+        if self.tests_root.is_dir():
+            for path in sorted(self.tests_root.glob("*.py")):
+                info = self._parse("", path)
+                if info is not None:
+                    self.tests[path.name] = info
+        self.docs: dict[str, str] = {}
+        for rel in ("README.md", "docs/ARCHITECTURE.md"):
+            p = self.root / rel
+            if p.is_file():
+                self.docs[rel] = p.read_text()
+        # Namespace packages (source dirs without __init__.py) are modules
+        # too: their "symbols" are their children, so `from repro.data
+        # import traces` resolves.
+        self.packages: dict[str, set[str]] = {}
+        for name in list(self.modules):
+            parts = name.split(".")
+            for i in range(1, len(parts)):
+                pkg = ".".join(parts[:i])
+                self.packages.setdefault(pkg, set()).add(parts[i])
+        self._symbols: dict[str, set[str]] = {}
+
+    def _parse(self, name: str, path: Path) -> ModuleInfo | None:
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError as e:
+            self.parse_findings.append(Finding(
+                rule="PARSE",
+                file=self.relpath(path),
+                line=e.lineno or 0,
+                key=f"PARSE:{self.relpath(path)}",
+                message=f"unparseable source: {e.msg}",
+            ))
+            return None
+        return ModuleInfo(name=name, path=path, source=source, tree=tree)
+
+    def relpath(self, path: Path) -> str:
+        return path.resolve().relative_to(self.root).as_posix()
+
+    def module_symbols(self, modname: str) -> set[str]:
+        """Top-level names of a repo module (empty set if unknown)."""
+        if modname not in self._symbols:
+            info = self.modules.get(modname)
+            syms = top_level_symbols(info.tree) if info else set()
+            syms |= self.packages.get(modname, set())
+            self._symbols[modname] = syms
+        return self._symbols[modname]
+
+    def has_module(self, modname: str) -> bool:
+        return modname in self.modules or modname in self.packages
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]            # every raw finding, all rules
+    unsuppressed: list[Finding]        # findings not covered by the baseline
+    suppressed: list[Finding]
+    stale_suppressions: list[str]      # baseline keys that matched nothing
+    errors: list[str]                  # baseline/config problems (exit 2)
+
+    @property
+    def ok(self) -> bool:
+        return not self.unsuppressed and not self.errors
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "counts": {
+                "total": len(self.findings),
+                "unsuppressed": len(self.unsuppressed),
+                "suppressed": len(self.suppressed),
+            },
+            "findings": [f.to_dict() for f in self.unsuppressed],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "stale_suppressions": self.stale_suppressions,
+            "errors": self.errors,
+        }
+
+
+def load_baseline(path: Path) -> tuple[dict[str, str], list[str]]:
+    """-> ({key: justification}, errors).  A missing file is an empty
+    baseline; a malformed one (bad JSON, entry without a non-empty
+    justification, duplicate key) is a config error."""
+    if not path.is_file():
+        return {}, []
+    errors: list[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return {}, [f"baseline {path.name}: invalid JSON: {e}"]
+    entries = data.get("suppressions", None)
+    if not isinstance(entries, list):
+        return {}, [f"baseline {path.name}: expected a 'suppressions' list"]
+    out: dict[str, str] = {}
+    for i, entry in enumerate(entries):
+        if not isinstance(entry, dict) or "key" not in entry:
+            errors.append(f"baseline entry #{i}: must be an object with 'key'")
+            continue
+        key = entry["key"]
+        just = entry.get("justification", "")
+        if not isinstance(just, str) or not just.strip():
+            errors.append(
+                f"baseline entry {key!r}: a non-empty 'justification' string "
+                "is required — the baseline records accepted exceptions, "
+                "not silenced ones"
+            )
+        if key in out:
+            errors.append(f"baseline entry {key!r}: duplicate key")
+        out[key] = just
+    return out, errors
+
+
+def run_analysis(
+    root: Path | str,
+    baseline_path: Path | str | None = None,
+    rules: list[Rule] | None = None,
+) -> Report:
+    """Run every registered rule over the repo at ``root`` and apply the
+    baseline.  ``rules=None`` means all registered rules."""
+    from repro.analysis.rules import ALL_RULES
+
+    ctx = AnalysisContext(root)
+    findings: list[Finding] = list(ctx.parse_findings)
+    for rule in (rules if rules is not None else ALL_RULES):
+        findings.extend(rule.run(ctx))
+    findings.sort(key=lambda f: (f.rule, f.file, f.line, f.key))
+
+    bpath = (
+        Path(baseline_path) if baseline_path is not None
+        else ctx.root / "baseline.json"
+    )
+    suppressions, errors = load_baseline(bpath)
+    seen_keys = {f.key for f in findings}
+    suppressed = [f for f in findings if f.key in suppressions]
+    unsuppressed = [f for f in findings if f.key not in suppressions]
+    stale = sorted(k for k in suppressions if k not in seen_keys)
+    return Report(
+        findings=findings,
+        unsuppressed=unsuppressed,
+        suppressed=suppressed,
+        stale_suppressions=stale,
+        errors=errors,
+    )
+
+
+def write_baseline(report: Report, path: Path) -> None:
+    """Write the current unsuppressed findings as a baseline skeleton.  The
+    justification is intentionally left empty — the engine refuses empty
+    justifications, so every entry must be hand-finished before the baseline
+    is usable.  Existing justified entries are preserved."""
+    existing, _ = load_baseline(path)
+    entries = []
+    for f in report.findings:
+        entries.append({
+            "key": f.key,
+            "justification": existing.get(f.key, ""),
+            "note": f.render(),
+        })
+    path.write_text(json.dumps(
+        {"version": 1, "suppressions": entries}, indent=2,
+    ) + "\n")

@@ -1,0 +1,23 @@
+"""Rule registry.  Adding a rule = write a module defining a ``rule``
+object (see any sibling) and list it here; the engine, CLI, baseline, and
+fixture-test harness pick it up with no further wiring."""
+
+from repro.analysis.rules import (
+    r1_trace_purity,
+    r2_determinism,
+    r3_kernel_contract,
+    r4_pricing_guard,
+    r5_golden_coverage,
+    r6_doc_drift,
+)
+
+ALL_RULES = [
+    r1_trace_purity.rule,
+    r2_determinism.rule,
+    r3_kernel_contract.rule,
+    r4_pricing_guard.rule,
+    r5_golden_coverage.rule,
+    r6_doc_drift.rule,
+]
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}

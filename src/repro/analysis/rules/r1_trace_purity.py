@@ -1,0 +1,144 @@
+"""R1 — trace purity.
+
+Functions that run under a JAX trace (scan bodies, jit/vmap targets, Pallas
+kernels, and everything they transitively call inside the repo) must not
+force tracers to concrete host values: no ``float()``/``int()``/``bool()``
+coercions of tracer-valued expressions, no ``.item()``, no ``np.*`` calls on
+tracer data, and — for scan/vmap bodies, whose positional arguments are
+always tracers — no Python ``if``/``while``/ternary on a tracer-valued test.
+
+Why it matters here: a concrete-value leak inside the rolling-replan scan or
+the migration walk turns a bit-deterministic compiled program into one whose
+result depends on host-side evaluation order, which silently invalidates the
+golden tests and every scan-vs-loop oracle.
+
+Shape reads (``x.shape``/``x.ndim``/``len(x)``), ``is None`` structure
+checks, static jit arguments, and keyword-only config parameters are all
+recognized as trace-static and never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutils import (
+    NUMPY_SAFE_ATTRS,
+    StaticEnv,
+    dotted,
+    is_shape_attr_chain,
+)
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.engine import Finding, Rule
+
+_COERCIONS = ("float", "int", "bool")
+
+
+def _is_structural_test(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — pytree-structure checks, static."""
+    return isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    )
+
+
+def _numpy_root(node: ast.AST, imports) -> str | None:
+    """If this Name/Attribute resolves into numpy, the attribute path under
+    ``numpy.`` (e.g. ``asarray``, ``random.rand``); else None."""
+    name = dotted(node)
+    if name is None:
+        return None
+    full = imports.resolve(name)
+    if full == "numpy" or full.startswith("numpy."):
+        return full[len("numpy."):] if full != "numpy" else ""
+    return None
+
+
+def run(ctx) -> list[Finding]:
+    graph = CallGraph(ctx)
+    findings: list[Finding] = []
+
+    for tf in graph.traced:
+        info = tf.module
+        rel = ctx.relpath(info.path)
+        env = StaticEnv(tf.node, tf.static_names)
+        fname = tf.name
+        body = tf.node.body if isinstance(tf.node.body, list) \
+            else [ast.Expr(tf.node.body)]
+
+        # Nested function defs get traced in their own right by the call
+        # graph; don't double-report their bodies under the parent.
+        nested: set[int] = set()
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not tf.node:
+                    for sub in ast.walk(node):
+                        nested.add(id(sub))
+                    nested.discard(id(node))
+
+        def emit(node, detail, message):
+            findings.append(Finding(
+                rule="R1", file=rel, line=getattr(node, "lineno", 0),
+                key=f"R1:{rel}:{fname}:{detail}",
+                message=f"in traced `{fname}` ({tf.entry}): {message}",
+            ))
+
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if id(node) in nested:
+                    continue
+                if isinstance(node, ast.Call):
+                    callee = node.func
+                    # float(x) / int(x) / bool(x) on tracer data.
+                    if isinstance(callee, ast.Name) and \
+                            callee.id in _COERCIONS and node.args:
+                        if not env.is_static(node.args[0]):
+                            emit(node, f"{callee.id}()",
+                                 f"`{callee.id}()` coerces a tracer to a "
+                                 "host value")
+                        continue
+                    # .item() — always a host sync.
+                    if isinstance(callee, ast.Attribute) and \
+                            callee.attr == "item" and not node.args:
+                        emit(node, "item()",
+                             "`.item()` forces a device->host transfer")
+                        continue
+                    # np.f(tracer) — numpy can't trace.
+                    np_attr = _numpy_root(callee, info.imports)
+                    if np_attr:
+                        leaf = np_attr.rsplit(".", 1)[-1]
+                        if leaf not in NUMPY_SAFE_ATTRS and any(
+                                not env.is_static(a) for a in node.args):
+                            emit(node, f"np.{np_attr}",
+                                 f"`np.{np_attr}` called on tracer-valued "
+                                 "arguments (numpy evaluates on host)")
+                        continue
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)) and \
+                        tf.kind in ("scan_body", "vmap"):
+                    test = node.test
+                    if _is_structural_test(test):
+                        continue
+                    if is_shape_attr_chain(test):
+                        continue
+                    if not env.is_static(test):
+                        kindword = ("`while`" if isinstance(node, ast.While)
+                                    else "`if`")
+                        emit(node, f"branch@{_test_repr(test)}",
+                             f"python {kindword} on a tracer-valued test "
+                             f"({_test_repr(test)}) inside a "
+                             f"{tf.kind.replace('_', ' ')}")
+    return findings
+
+
+def _test_repr(test: ast.AST) -> str:
+    try:
+        s = ast.unparse(test)
+    except Exception:
+        s = "<expr>"
+    return s if len(s) <= 40 else s[:37] + "..."
+
+
+rule = Rule(
+    id="R1",
+    title="trace purity: no host coercions or tracer branches in traced code",
+    run=run,
+)

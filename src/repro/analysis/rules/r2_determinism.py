@@ -1,0 +1,128 @@
+"""R2 — determinism.
+
+The modules backing bit-exact goldens and scan-vs-loop oracles
+(``core/``, ``capacity/``, ``kernels/``, ``data/``, ``serve/``) must be
+reproducible from their inputs alone: no wall-clock reads
+(``time.time``/``datetime.now``), no stdlib ``random``, and no global-state
+or unseeded numpy RNG (``np.random.rand``, ``np.random.default_rng()`` with
+no seed).  Seeded construction — ``np.random.default_rng(seed_expr)``,
+``jax.random.PRNGKey`` — is the sanctioned pattern and is never flagged.
+
+A single unseeded draw in a demand synthesizer or replay would make every
+"golden" number a function of the process that produced it, which is
+exactly the hidden-risk failure mode the planner exists to eliminate.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutils import dotted
+from repro.analysis.engine import Finding, Rule
+
+SCOPES = ("repro/core/", "repro/capacity/", "repro/kernels/",
+          "repro/data/", "repro/serve/")
+
+#: wall-clock and ordering-dependent reads, fully qualified.
+CLOCK_CALLS = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+#: numpy.random attributes allowed when *seeded* (constructor given args).
+SEEDED_CTORS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+    "MT19937", "SFC64",
+})
+
+
+def _in_scope(rel: str) -> bool:
+    return any(rel.startswith(f"src/{s}") for s in SCOPES)
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    for info in ctx.modules.values():
+        rel = ctx.relpath(info.path)
+        if not _in_scope(rel):
+            continue
+        imports = info.imports
+
+        def emit(node, detail, message):
+            findings.append(Finding(
+                rule="R2", file=rel, line=getattr(node, "lineno", 0),
+                key=f"R2:{rel}:{detail}",
+                message=message,
+            ))
+
+        # `from random import X` / `from time import time` at any level.
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                if node.module == "random":
+                    emit(node, "import-random",
+                         "stdlib `random` is process-global state; use a "
+                         "seeded np.random.default_rng or jax.random key")
+                if node.module == "time":
+                    for a in node.names:
+                        if f"time.{a.name}" in CLOCK_CALLS:
+                            emit(node, f"import-time.{a.name}",
+                                 f"`from time import {a.name}` pulls a "
+                                 "wall-clock read into a determinism-scoped "
+                                 "module")
+
+        handled: set[int] = set()
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if name is None:
+                    continue
+                full = imports.resolve(name)
+                if full in CLOCK_CALLS:
+                    handled.add(id(node.func))
+                    emit(node, full,
+                         f"`{full}()` is a wall-clock read; goldens built "
+                         "through here are unreproducible")
+                elif full.startswith("numpy.random."):
+                    handled.add(id(node.func))
+                    attr = full[len("numpy.random."):]
+                    if attr in SEEDED_CTORS:
+                        if not node.args and not node.keywords:
+                            emit(node, f"numpy.random.{attr}:unseeded",
+                                 f"`np.random.{attr}()` without a seed "
+                                 "draws OS entropy; pass an explicit seed")
+                    else:
+                        emit(node, f"numpy.random.{attr}",
+                             f"`np.random.{attr}` uses numpy's global RNG "
+                             "state; construct a seeded Generator instead")
+                elif full == "random" or full.startswith("random."):
+                    if "random" in imports.aliases and \
+                            imports.aliases["random"] == "random":
+                        handled.add(id(node.func))
+                        emit(node, full,
+                             f"stdlib `{full}()` is process-global RNG "
+                             "state; use a seeded generator")
+
+        # Bare references (passing `time.time` / `np.random.rand` around).
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.Attribute) and id(node) not in handled:
+                name = dotted(node)
+                if name is None:
+                    continue
+                full = imports.resolve(name)
+                if full in CLOCK_CALLS:
+                    emit(node, full,
+                         f"reference to wall-clock `{full}`")
+                elif full.startswith("numpy.random.") and \
+                        full[len("numpy.random."):] not in SEEDED_CTORS:
+                    emit(node, full.replace("numpy.random.", "numpy.random.", 1),
+                         f"reference to global-state `{name}`")
+    return findings
+
+
+rule = Rule(
+    id="R2",
+    title="determinism: no clocks or unseeded RNG in golden-backed modules",
+    run=run,
+)

@@ -1,0 +1,383 @@
+"""R3 — Pallas kernel contract (docs/ARCHITECTURE.md "Pallas kernel
+contract", made machine-checked).
+
+Every ``src/repro/kernels/<name>/`` directory must be the ops/ref/kernel
+triad:
+
+* **files** — ``<name>.py`` (the ``pallas_call`` kernel), ``ops.py`` (the
+  public padded/interpret-fallback entry point), ``ref.py`` (the pure-jnp
+  oracle that defines the semantics);
+* **ref purity** — ``ref.py`` must not import pallas (the oracle is the
+  spec, it cannot be the implementation);
+* **ops is the only entry point** — no module outside the kernel directory
+  may import the raw kernel module ``repro.kernels.<name>.<name>``;
+* **signature agreement** — each public ``*_ref`` oracle must have an ops
+  counterpart whose signature covers the oracle's positional parameters,
+  with matching dtype annotations wherever both sides annotate the same
+  parameter (``X | None`` on the ops side matches ``X`` on the ref side:
+  optionality is an ops-level convenience);
+* **BlockSpec divisibility** — inside the kernel file, every name used as a
+  BlockSpec block dimension must be either a divisor in the
+  ``pallas_call`` grid expression (``grid=(p // bp, ...)`` makes ``bp``
+  structurally divide the padded dim) or a shape-derived full-dimension
+  size; a free block-size name is exactly the "block doesn't tile the
+  grid" bug;
+* **tolerance test** — ``tests/test_kernels.py`` must exercise the kernel's
+  ops entry point against the ref inside a test that asserts a tolerance
+  (``assert_allclose``/``allclose``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutils import dotted, func_params
+from repro.analysis.engine import Finding, Rule
+
+
+def _kernel_dirs(ctx):
+    kroot = ctx.src_root / "repro" / "kernels"
+    if not kroot.is_dir():
+        return []
+    return sorted(
+        d for d in kroot.iterdir()
+        if d.is_dir() and any(d.glob("*.py"))
+    )
+
+
+def _public_functions(tree: ast.Module):
+    return [n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")]
+
+
+def _normalize_ann(node: ast.AST | None) -> str | None:
+    """Annotation as comparable text; optionality stripped (`X | None` ==
+    `X`, `Optional[X]` == `X`)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return node.value.strip()
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        sides = [_normalize_ann(node.left), _normalize_ann(node.right)]
+        sides = [s for s in sides if s != "None"]
+        if len(sides) == 1:
+            return sides[0]
+    if isinstance(node, ast.Subscript):
+        base = dotted(node.value)
+        if base is not None and base.rsplit(".", 1)[-1] == "Optional":
+            return _normalize_ann(node.slice)
+    try:
+        return ast.unparse(node).replace(" ", "")
+    except Exception:
+        return None
+
+
+def _annotations(fn: ast.FunctionDef) -> dict[str, str]:
+    out = {}
+    for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+        ann = _normalize_ann(a.annotation)
+        if ann is not None:
+            out[a.arg] = ann
+    return out
+
+
+def _positional_params(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+
+def _all_params(fn: ast.FunctionDef) -> set[str]:
+    pos, kw = func_params(fn)
+    return set(pos) | set(kw)
+
+
+def _shape_derived_names(tree: ast.Module) -> set[str]:
+    """Names assigned from `.shape` unpacks / subscripts / `len()` anywhere
+    in the module — full-dimension sizes a block may legitimately span."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        v = node.value
+        derived = False
+        vv = v
+        while isinstance(vv, ast.Subscript):
+            vv = vv.value
+        if isinstance(vv, ast.Attribute) and vv.attr == "shape":
+            derived = True
+        if isinstance(v, ast.Call) and isinstance(v.func, ast.Name) \
+                and v.func.id == "len":
+            derived = True
+        if derived:
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+    return out
+
+
+def _local_assignments(fn: ast.FunctionDef) -> dict[str, ast.AST]:
+    out = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _check_blockspecs(ctx, info, rel, kname, findings):
+    """Grid-divisibility of BlockSpec block shapes in the kernel file."""
+    imports = info.imports
+    shape_names = _shape_derived_names(info.tree)
+
+    for node in ast.walk(info.tree):
+        if not (isinstance(node, ast.Call) and dotted(node.func) is not None
+                and imports.resolve(dotted(node.func)).endswith("pallas_call")):
+            continue
+        # Find the enclosing function to resolve `grid = (...)` locals.
+        enclosing = None
+        for fn in ast.walk(info.tree):
+            if isinstance(fn, ast.FunctionDef) and any(
+                    n is node for n in ast.walk(fn)):
+                enclosing = fn
+        local = _local_assignments(enclosing) if enclosing else {}
+        lambda_params: set[str] = set()
+        for fn in ast.walk(info.tree):
+            if isinstance(fn, ast.Lambda):
+                pos, kw = func_params(fn)
+                lambda_params.update(pos)
+                lambda_params.update(kw)
+
+        grid_expr = None
+        for kw in node.keywords:
+            if kw.arg == "grid":
+                grid_expr = kw.value
+        if grid_expr is None:
+            continue
+        if isinstance(grid_expr, ast.Name):
+            grid_expr = local.get(grid_expr.id, grid_expr)
+        divisors: set[str] = set()
+        elts = grid_expr.elts if isinstance(grid_expr, ast.Tuple) else [grid_expr]
+        for e in elts:
+            if isinstance(e, ast.BinOp) and isinstance(e.op, ast.FloorDiv):
+                for n in ast.walk(e.right):
+                    if isinstance(n, ast.Name):
+                        divisors.add(n.id)
+        if not divisors:
+            continue  # grid of whole dims only: nothing to tile-check
+
+        allowed = divisors | shape_names | lambda_params
+        for spec in ast.walk(info.tree):
+            # BlockSpec calls anywhere in the kernel file describe this
+            # kernel's tiling (spec factories may be helpers outside the
+            # pallas_call expression itself).
+            if not (isinstance(spec, ast.Call) and dotted(spec.func) is not None
+                    and dotted(spec.func).rsplit(".", 1)[-1] == "BlockSpec"
+                    and spec.args):
+                continue
+            shape = spec.args[0]
+            if not isinstance(shape, ast.Tuple):
+                continue
+            for dim in shape.elts:
+                for n in ast.walk(dim):
+                    if isinstance(n, ast.Name) and n.id not in allowed:
+                        findings.append(Finding(
+                            rule="R3", file=rel, line=n.lineno,
+                            key=f"R3:{rel}:blockspec:{n.id}",
+                            message=(
+                                f"kernel `{kname}`: BlockSpec block dim uses "
+                                f"`{n.id}`, which is neither a grid divisor "
+                                f"({', '.join(sorted(divisors))}) nor a "
+                                "shape-derived full dimension — the block "
+                                "cannot be shown to tile the padded grid"
+                            ),
+                        ))
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    kdirs = _kernel_dirs(ctx)
+    test_mod = ctx.tests.get("test_kernels.py")
+
+    for kdir in kdirs:
+        kname = kdir.name
+        rel_dir = ctx.relpath(kdir)
+        required = {f"{kname}.py", "ops.py", "ref.py"}
+        present = {p.name for p in kdir.glob("*.py")}
+        for missing in sorted(required - present):
+            findings.append(Finding(
+                rule="R3", file=rel_dir, line=0,
+                key=f"R3:{rel_dir}:missing:{missing}",
+                message=(f"kernel `{kname}` is missing `{missing}` — every "
+                         "kernel ships the ops/ref/kernel triad"),
+            ))
+        mod_prefix = f"repro.kernels.{kname}"
+        ops_info = ctx.modules.get(f"{mod_prefix}.ops")
+        ref_info = ctx.modules.get(f"{mod_prefix}.ref")
+        kern_info = ctx.modules.get(f"{mod_prefix}.{kname}")
+
+        # ref purity: the oracle must not import pallas.
+        if ref_info is not None:
+            for node in ast.walk(ref_info.tree):
+                mods = []
+                if isinstance(node, ast.Import):
+                    mods = [a.name for a in node.names]
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    mods = [node.module]
+                for m in mods:
+                    if "pallas" in m:
+                        rel = ctx.relpath(ref_info.path)
+                        findings.append(Finding(
+                            rule="R3", file=rel, line=node.lineno,
+                            key=f"R3:{rel}:ref-imports-pallas",
+                            message=(f"kernel `{kname}`: ref.py imports "
+                                     f"`{m}` — the oracle must stay pure "
+                                     "jnp"),
+                        ))
+
+        # signature agreement ref -> ops.
+        if ops_info is not None and ref_info is not None:
+            ops_funcs = _public_functions(ops_info.tree)
+            for rfn in _public_functions(ref_info.tree):
+                counterpart = _match_ops(rfn, ops_funcs)
+                rel = ctx.relpath(ref_info.path)
+                if counterpart is None:
+                    findings.append(Finding(
+                        rule="R3", file=rel, line=rfn.lineno,
+                        key=f"R3:{rel}:no-ops-counterpart:{rfn.name}",
+                        message=(f"kernel `{kname}`: oracle `{rfn.name}` has "
+                                 "no public ops.py counterpart covering its "
+                                 "positional parameters"),
+                    ))
+                    continue
+                o_ann = _annotations(counterpart)
+                for pname, r_ann in _annotations(rfn).items():
+                    oa = o_ann.get(pname)
+                    if oa is not None and oa != r_ann:
+                        findings.append(Finding(
+                            rule="R3", file=rel, line=rfn.lineno,
+                            key=f"R3:{rel}:ann:{rfn.name}:{pname}",
+                            message=(
+                                f"kernel `{kname}`: `{rfn.name}` annotates "
+                                f"`{pname}: {r_ann}` but ops "
+                                f"`{counterpart.name}` annotates `{oa}` — "
+                                "the oracle and entry point disagree on the "
+                                "contract dtype"
+                            ),
+                        ))
+
+        # BlockSpec divisibility in the kernel file.
+        if kern_info is not None:
+            _check_blockspecs(ctx, kern_info,
+                              ctx.relpath(kern_info.path), kname, findings)
+
+        # ops-only entry: nobody outside the kernel dir imports the raw
+        # kernel module.
+        raw = f"{mod_prefix}.{kname}"
+        for scope in (ctx.modules.values(), ctx.tests.values()):
+            for info in scope:
+                if info.path.parent == kdir:
+                    continue
+                for node in ast.walk(info.tree):
+                    imported = []
+                    if isinstance(node, ast.Import):
+                        imported = [a.name for a in node.names]
+                    elif isinstance(node, ast.ImportFrom) and node.module:
+                        imported = [node.module]
+                    for m in imported:
+                        if m == raw or m.startswith(raw + "."):
+                            rel = ctx.relpath(info.path)
+                            findings.append(Finding(
+                                rule="R3", file=rel, line=node.lineno,
+                                key=f"R3:{rel}:raw-kernel-import:{kname}",
+                                message=(
+                                    f"imports raw kernel module `{raw}` — "
+                                    "ops.py is the only entry point (it owns "
+                                    "padding and the interpret fallback)"
+                                ),
+                            ))
+
+        # tolerance test in tests/test_kernels.py.
+        if test_mod is None:
+            findings.append(Finding(
+                rule="R3", file="tests", line=0,
+                key=f"R3:tests:no-test-kernels:{kname}",
+                message=(f"kernel `{kname}`: tests/test_kernels.py is "
+                         "missing — every kernel needs a registered "
+                         "kernel-vs-ref tolerance test"),
+            ))
+        else:
+            imported_names = {
+                a.asname or a.name
+                for node in ast.walk(test_mod.tree)
+                if isinstance(node, ast.ImportFrom) and node.module
+                and node.module.startswith(mod_prefix)
+                for a in node.names
+            }
+            if not imported_names or not _has_tolerance_use(
+                    test_mod.tree, imported_names):
+                findings.append(Finding(
+                    rule="R3", file="tests/test_kernels.py", line=0,
+                    key=f"R3:tests/test_kernels.py:no-tolerance-test:{kname}",
+                    message=(
+                        f"kernel `{kname}`: no test in tests/test_kernels.py "
+                        "both calls its ops entry point and asserts a "
+                        "tolerance (assert_allclose) against the ref"
+                    ),
+                ))
+    return findings
+
+
+def _match_ops(rfn: ast.FunctionDef, ops_funcs):
+    """The ops counterpart of an oracle: exact stem match first, else the
+    unique public ops function whose parameters cover the oracle's
+    positional parameters."""
+    stem = rfn.name
+    for suffix in ("_ref", "_oracle"):
+        if stem.endswith(suffix):
+            stem = stem[: -len(suffix)]
+    for ofn in ops_funcs:
+        if ofn.name == stem:
+            return ofn
+    want = set(_positional_params(rfn))
+    covering = [ofn for ofn in ops_funcs if want <= _all_params(ofn)]
+    if not covering:
+        return None
+    # Several candidates cover the positional params (e.g. a full-sequence
+    # op and a decode step): the counterpart is the one sharing the most
+    # parameter names with the oracle overall, fewest extras breaking ties.
+    ref_all = _all_params(rfn)
+    covering.sort(key=lambda ofn: (
+        -len(ref_all & _all_params(ofn)),
+        len(_all_params(ofn) - ref_all),
+    ))
+    return covering[0]
+
+
+def _has_tolerance_use(tree: ast.Module, names: set[str]) -> bool:
+    """Some function body both references one of ``names`` and calls an
+    allclose-style assertion."""
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        uses = any(isinstance(n, ast.Name) and n.id in names
+                   for n in ast.walk(fn))
+        tol = any(
+            isinstance(n, ast.Call) and dotted(n.func) is not None
+            and dotted(n.func).rsplit(".", 1)[-1] in
+            ("assert_allclose", "allclose", "assert_array_almost_equal")
+            for n in ast.walk(fn)
+        )
+        if uses and tol:
+            return True
+    return False
+
+
+rule = Rule(
+    id="R3",
+    title="kernel contract: ops/ref triad, signatures, BlockSpec tiling, "
+          "tolerance tests",
+    run=run,
+)

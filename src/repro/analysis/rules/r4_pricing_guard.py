@@ -1,0 +1,80 @@
+"""R4 — pricing-table guard.
+
+Any src module that consumes ``repro.capacity.pricing`` (the module itself
+or any name out of it) must call ``pricing.validate_tables()`` at import
+time, matching the established pattern in ``portfolio.py`` /
+``preemption.py`` / ``generations.py``.  The tables are plain data; the
+invariant checker is the only thing standing between a hand-edited discount
+row and a silently absurd plan.  ``validate_tables`` memoizes after its
+first success, so the per-import cost is one function call.
+
+Exempt: ``pricing`` itself and the analyzer.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutils import dotted
+from repro.analysis.engine import Finding, Rule
+
+PRICING = "repro.capacity.pricing"
+
+
+def _imports_pricing(info) -> bool:
+    for node in ast.walk(info.tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == PRICING for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == PRICING:
+                return True
+            if node.module == PRICING.rsplit(".", 1)[0] and any(
+                    a.name == "pricing" for a in node.names):
+                return True
+    return False
+
+
+def _calls_validate_at_import(info) -> bool:
+    """A top-level statement calling (something resolving to)
+    pricing.validate_tables."""
+    resolve = info.imports.resolve
+    for node in info.tree.body:
+        if not (isinstance(node, ast.Expr) and isinstance(node.value, ast.Call)):
+            continue
+        name = dotted(node.value.func)
+        if name is None:
+            continue
+        if resolve(name) == f"{PRICING}.validate_tables":
+            return True
+    return False
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    for modname, info in ctx.modules.items():
+        if modname == PRICING or modname.startswith("repro.analysis"):
+            continue
+        if not _imports_pricing(info):
+            continue
+        if not _calls_validate_at_import(info):
+            rel = ctx.relpath(info.path)
+            findings.append(Finding(
+                rule="R4", file=rel, line=0,
+                key=f"R4:{rel}:no-validate-tables",
+                message=(
+                    f"`{modname}` imports pricing tables but never calls "
+                    "`pricing.validate_tables()` at import — a corrupted "
+                    "table would flow straight into a plan (the call is "
+                    "memoized; it costs one comparison after the first "
+                    "import)"
+                ),
+            ))
+    return findings
+
+
+rule = Rule(
+    id="R4",
+    title="pricing guard: table consumers validate at import",
+    run=run,
+)

@@ -1,0 +1,71 @@
+"""R5 — golden coverage for optional subsystems.
+
+Every optional-subsystem keyword the planner stack exposes (``spot=``,
+``migration=``, ``convertible=``) shipped with a hard guarantee: the
+disabled path stays bit-identical to the pre-subsystem planner, proven by
+hardcoded golden tests.  This rule keeps that guarantee alive: for each
+watched kwarg that actually appears as a defaulted parameter somewhere in
+``src/repro``, some top-level test file must (a) reference the disabled
+spelling (``<kw>=None`` or ``<kw>=False``) and (b) carry golden assertions
+(``golden`` in its text).  Drop the golden test and the next refactor can
+shift the disabled path without anything noticing.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Finding, Rule
+
+WATCHED = ("spot", "migration", "convertible")
+
+
+def _kwargs_in_repo(ctx) -> dict[str, str]:
+    """watched kwarg -> file where it first appears as a defaulted param."""
+    found: dict[str, str] = {}
+    for info in ctx.modules.values():
+        for node in ast.walk(info.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            defaulted = [
+                a.arg for a in args.args[len(args.args) - len(args.defaults):]
+            ] + [
+                a.arg for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None
+            ]
+            for kw in WATCHED:
+                if kw in defaulted and kw not in found:
+                    found[kw] = ctx.relpath(info.path)
+    return found
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    present = _kwargs_in_repo(ctx)
+    for kw, where in sorted(present.items()):
+        pat = re.compile(rf"\b{kw}\s*=\s*(None|False)\b")
+        covered = any(
+            pat.search(t.source) and "golden" in t.source.lower()
+            for t in ctx.tests.values()
+        )
+        if not covered:
+            findings.append(Finding(
+                rule="R5", file=where, line=0,
+                key=f"R5:{kw}",
+                message=(
+                    f"optional subsystem kwarg `{kw}=` (first seen in "
+                    f"{where}) has no disabled-path golden test: no test "
+                    f"file references `{kw}=None`/`{kw}=False` alongside "
+                    "golden assertions"
+                ),
+            ))
+    return findings
+
+
+rule = Rule(
+    id="R5",
+    title="golden coverage: optional kwargs keep disabled-path goldens",
+    run=run,
+)

@@ -1,0 +1,184 @@
+"""R6 — doc drift.
+
+README.md and docs/ARCHITECTURE.md are load-bearing: the paper-section →
+module map and the prose name real symbols, and CI smoke-runs the quickstart
+snippets.  This rule keeps the *names* honest without executing anything:
+
+* module-path tokens (``repro/core/demand.py``) must exist on disk;
+* fenced ``python`` blocks must import-resolve: ``from X import Y`` needs
+  ``X`` to be a repo module exporting ``Y``; attribute reads on imported
+  repo-module aliases (``traces.synthetic_pool_set``) must hit a top-level
+  symbol;
+* inline-code dotted tokens (``pricing.GENERATIONS``,
+  ``capacity.simulator.replay_spot_plan``) are resolved against the repo's
+  module tree by basename or dotted path — a token whose leading component
+  is a known repo module must resolve to an exported symbol.
+
+Tokens whose leading component is not a repo module (``jax.lax.scan``,
+``np.log``, snippet-local variables) are out of scope and skipped.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Finding, Rule
+
+_MODULE_PATH = re.compile(r"`?\b(repro/[\w/]+\.py)\b`?")
+_INLINE_CODE = re.compile(r"`([^`\n]+)`")
+_FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+_DOTTED = re.compile(r"^[A-Za-z_][\w]*(\.[A-Za-z_][\w]*)+$")
+
+
+def _basename_index(ctx) -> dict[str, list[str]]:
+    """last-component -> [module names] for every src module."""
+    idx: dict[str, list[str]] = {}
+    for name in ctx.modules:
+        base = name.rsplit(".", 1)[-1]
+        idx.setdefault(base, []).append(name)
+    return idx
+
+
+def _resolve_token(ctx, idx, token: str):
+    """-> (resolved: bool, relevant: bool).  relevant=False means the token
+    doesn't name repo code and shouldn't be judged."""
+    parts = token.split(".")
+    # Whole token as a module (repro.core.demand / core.replan).
+    for cand in (token, f"repro.{token}"):
+        if ctx.has_module(cand):
+            return True, True
+    # module-prefix + symbol suffix, longest prefix first.
+    for cut in range(len(parts) - 1, 0, -1):
+        prefix = ".".join(parts[:cut])
+        suffix = parts[cut:]
+        cands = [prefix, f"repro.{prefix}"]
+        cands += idx.get(parts[cut - 1], []) if cut == 1 else []
+        for cand in cands:
+            if ctx.has_module(cand):
+                sym = suffix[0]
+                if sym in ctx.module_symbols(cand):
+                    return True, True
+                # Known module, unknown symbol: relevant and broken —
+                # unless a deeper module path also exists (handled above).
+                return False, True
+    head = parts[0]
+    relevant = head == "repro" or head in idx or ctx.has_module(head)
+    return False, relevant
+
+
+def _check_python_block(ctx, idx, code: str, rel: str, base_line: int,
+                        findings):
+    try:
+        tree = ast.parse(code)
+    except SyntaxError:
+        findings.append(Finding(
+            rule="R6", file=rel, line=base_line,
+            key=f"R6:{rel}:snippet-syntax:{base_line}",
+            message="python snippet does not parse",
+        ))
+        return
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.startswith("repro"):
+            if not ctx.has_module(node.module):
+                findings.append(Finding(
+                    rule="R6", file=rel, line=base_line + node.lineno - 1,
+                    key=f"R6:{rel}:snippet-module:{node.module}",
+                    message=f"snippet imports missing module `{node.module}`",
+                ))
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                if ctx.has_module(f"{node.module}.{a.name}"):
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+                elif a.name in ctx.module_symbols(node.module):
+                    pass  # plain symbol import, resolves
+                else:
+                    findings.append(Finding(
+                        rule="R6", file=rel,
+                        line=base_line + node.lineno - 1,
+                        key=f"R6:{rel}:snippet-import:{node.module}.{a.name}",
+                        message=(f"snippet imports `{a.name}` which "
+                                 f"`{node.module}` does not export"),
+                    ))
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.startswith("repro") and ctx.has_module(a.name):
+                    aliases[a.asname or a.name.partition(".")[0]] = a.name
+    # Attribute reads on repo-module aliases.
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+            mod = aliases.get(node.value.id)
+            if mod is None or not ctx.has_module(mod):
+                continue
+            if node.attr not in ctx.module_symbols(mod) \
+                    and not ctx.has_module(f"{mod}.{node.attr}"):
+                findings.append(Finding(
+                    rule="R6", file=rel, line=base_line + node.lineno - 1,
+                    key=f"R6:{rel}:snippet-attr:{mod}.{node.attr}",
+                    message=(f"snippet references `{node.value.id}."
+                             f"{node.attr}` but `{mod}` has no such symbol"),
+                ))
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    idx = _basename_index(ctx)
+    for rel, text in ctx.docs.items():
+        # 1. module file paths.
+        seen_paths: set[str] = set()
+        for m in _MODULE_PATH.finditer(text):
+            path = m.group(1)
+            if path in seen_paths:
+                continue
+            seen_paths.add(path)
+            if not (ctx.src_root / path).is_file():
+                line = text.count("\n", 0, m.start()) + 1
+                findings.append(Finding(
+                    rule="R6", file=rel, line=line,
+                    key=f"R6:{rel}:path:{path}",
+                    message=f"references `{path}`, which does not exist "
+                            "under src/",
+                ))
+
+        # 2. fenced python blocks.
+        fence_spans = []
+        for m in _FENCE.finditer(text):
+            fence_spans.append((m.start(), m.end()))
+            if m.group(1) == "python":
+                base_line = text.count("\n", 0, m.start()) + 2
+                _check_python_block(ctx, idx, m.group(2), rel, base_line,
+                                    findings)
+
+        # 3. inline dotted tokens in prose (outside fences).
+        seen_tokens: set[str] = set()
+        for m in _INLINE_CODE.finditer(text):
+            if any(s <= m.start() < e for s, e in fence_spans):
+                continue
+            token = m.group(1).strip()
+            token = re.sub(r"\(.*\)$", "", token)   # strip call args
+            if not _DOTTED.match(token) or token in seen_tokens:
+                continue
+            if re.search(r"\.(py|json|md|yml|yaml|csv|txt|toml)$", token):
+                continue  # file names, not symbols
+            seen_tokens.add(token)
+            resolved, relevant = _resolve_token(ctx, idx, token)
+            if relevant and not resolved:
+                line = text.count("\n", 0, m.start()) + 1
+                findings.append(Finding(
+                    rule="R6", file=rel, line=line,
+                    key=f"R6:{rel}:token:{token}",
+                    message=(f"inline code `{token}` does not resolve to a "
+                             "repo module symbol — doc drift"),
+                ))
+    return findings
+
+
+rule = Rule(
+    id="R6",
+    title="doc drift: README/ARCHITECTURE symbols must import-resolve",
+    run=run,
+)

@@ -189,7 +189,12 @@ def known_clouds() -> frozenset[str]:
     return frozenset(p.cloud for p in SAVINGS_PLANS)
 
 
-def validate_tables() -> None:
+#: set after the first successful validate_tables() run; the tables are
+#: module-level constants, so one clean pass proves them for the process.
+_VALIDATED = False
+
+
+def validate_tables(force: bool = False) -> None:
     """Invariant checker for the pricing tables, run at import time by the
     tables' consumers (portfolio/preemption/generations): discounts in
     (0, 1) and monotone in term (a 3y lock can't discount less than 1y),
@@ -197,7 +202,15 @@ def validate_tables() -> None:
     dates sorted, and SPOT_MARKETS / GENERATIONS / CONVERTIBLE_PLANS keyed
     strictly inside the Table-2 clouds.  Raises ValueError on the first
     violated invariant so a corrupted table fails loudly at import, not as
-    a silently absurd plan."""
+    a silently absurd plan.
+
+    Memoized after the first clean pass — every consumer calls this at
+    import, and the tables never change at runtime.  Pass ``force=True``
+    to re-check anyway (tests that monkeypatch a table corrupted rely on
+    this escape hatch)."""
+    global _VALIDATED
+    if _VALIDATED and not force:
+        return
     clouds = known_clouds()
     for p in SAVINGS_PLANS:
         if not (0.0 < p.discount_1y < 1.0 and 0.0 < p.discount_3y < 1.0):
@@ -262,3 +275,4 @@ def validate_tables() -> None:
             "SOFTWARE_EFFICIENCY_PER_YEAR must be in (0, 1): "
             f"{SOFTWARE_EFFICIENCY_PER_YEAR}"
         )
+    _VALIDATED = True

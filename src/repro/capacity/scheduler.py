@@ -15,7 +15,9 @@ import dataclasses
 import numpy as np
 
 from repro.core import timeshift as ts
-from repro.capacity.pricing import on_demand_premium
+from repro.capacity import pricing
+
+pricing.validate_tables()
 
 
 @dataclasses.dataclass(frozen=True)

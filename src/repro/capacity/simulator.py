@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import commitment as cm
 from repro.core import demand as dm
 from repro.core import planner as pl
 from repro.core import portfolio as pf
@@ -28,6 +27,8 @@ from repro.capacity import preemption as pe
 from repro.capacity import pricing
 from repro.capacity.pricing import on_demand_premium
 from repro.models.model import build
+
+pricing.validate_tables()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Literal
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,8 @@ from repro.core import migration as mg
 from repro.core import portfolio as pf
 from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
+
+pricing.validate_tables()
 
 
 @dataclasses.dataclass

@@ -72,6 +72,8 @@ from repro.core.planner import (
 )
 from repro.core.portfolio import allocate_convertible  # noqa: F401  (API)
 
+pricing.validate_tables()
+
 
 @dataclasses.dataclass
 class RollingPlanReport:

@@ -13,7 +13,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import configs
 from repro.models.config import SHAPES, ModelConfig, ShapeCell, cells_for
 from repro.models.model import Model, build
-from repro.models.params import abstract_params, sharding_tree
+from repro.models.params import sharding_tree
 from repro.sharding.rules import RULESETS, Rules
 from repro.train.step import (
     build_grad_accum_train_step,

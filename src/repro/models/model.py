@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.models import jamba, rwkv, transformer, whisper
 from repro.models.config import ModelConfig, ShapeCell
 from repro.models.params import (
-    Spec,
     abstract_params,
     count_params,
     init_params,

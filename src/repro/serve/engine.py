@@ -10,7 +10,6 @@ free-pool autoscaler (serve/autoscaler.py, paper §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ is wired via shard_map with auto inner axes when enabled.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

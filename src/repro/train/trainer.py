@@ -23,7 +23,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import TokenPipeline

@@ -1,0 +1,13 @@
+"""Planted R1 violation: a scan body concretizes a tracer with float()."""
+
+import jax
+import jax.numpy as jnp
+
+
+def body(carry, x):
+    carry = carry + float(x)  # planted: float() on a tracer
+    return carry, x
+
+
+def run(xs):
+    return jax.lax.scan(body, jnp.float32(0.0), xs)

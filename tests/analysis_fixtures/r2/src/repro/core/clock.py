@@ -1,0 +1,7 @@
+"""Planted R2 violation: a wall-clock read in deterministic scope."""
+
+import time
+
+
+def stamp():
+    return time.time()  # planted: nondeterministic clock in repro/core/

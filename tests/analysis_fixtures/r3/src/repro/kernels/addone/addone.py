@@ -1,0 +1,5 @@
+"""Kernel file for the r3 fixture (the triad is missing ref.py)."""
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0

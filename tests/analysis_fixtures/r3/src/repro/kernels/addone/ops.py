@@ -1,0 +1,5 @@
+"""Ops entry point for the r3 fixture kernel."""
+
+
+def addone(x):
+    return x + 1.0

@@ -1,0 +1,8 @@
+import numpy as np
+
+from repro.kernels.addone.ops import addone
+
+
+def test_addone_matches_golden():
+    x = np.zeros(4, np.float32)
+    np.testing.assert_allclose(addone(x), x + 1.0)

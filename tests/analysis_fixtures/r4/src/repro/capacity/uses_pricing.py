@@ -1,0 +1,7 @@
+"""Planted R4 violation: consumes pricing tables without validating them."""
+
+from repro.capacity import pricing
+
+
+def premium():
+    return pricing.ON_DEMAND_PREMIUM  # planted: no validate_tables() call

@@ -1,0 +1,8 @@
+"""Planted R5 violation: optional `spot=` kwarg with no disabled-path
+golden test anywhere under tests/."""
+
+
+def plan(demand, spot=None):
+    if spot is None:
+        return demand
+    return demand + spot

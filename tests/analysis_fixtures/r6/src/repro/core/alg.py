@@ -1,0 +1,10 @@
+"""Module for the r6 fixture — exports `cumsum` only."""
+
+
+def cumsum(xs):
+    total = 0.0
+    out = []
+    for x in xs:
+        total += x
+        out.append(total)
+    return total, out

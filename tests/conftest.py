@@ -1,0 +1,5 @@
+"""The analyzer fixtures under ``analysis_fixtures/`` are miniature repos
+with *planted* violations — their ``tests/`` files import modules that only
+exist inside the fixture tree, so pytest must never collect them."""
+
+collect_ignore_glob = ["analysis_fixtures/*"]

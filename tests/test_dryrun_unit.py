@@ -1,8 +1,6 @@
 """Unit tests for the dry-run machinery that don't need the 512-device mesh:
 collective parsing, delta configs, rule resolution, sharding sanitization."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -3,7 +3,6 @@
 import runpy
 import sys
 
-import pytest
 
 
 def run_example(path, argv=None):
@@ -81,8 +80,6 @@ class TestDataTraces:
 
     def test_csv_roundtrip(self, tmp_path):
         import csv
-
-        import numpy as np
 
         from repro.data.traces import load_dataset_csv
 

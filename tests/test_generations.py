@@ -5,7 +5,6 @@ plus the no-regression guarantee that migration=None / convertible=None
 paths stay bit-identical to the pre-generation planner (hardcoded
 goldens)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ PLANT = gn.MigrationConfig(generations=(
 
 class TestPricingTables:
     def test_tables_validate(self):
-        pricing.validate_tables()  # the shipped data must be clean
+        pricing.validate_tables(force=True)  # the shipped data must be clean
 
     def test_corrupted_savings_plan_raises(self, monkeypatch):
         bad = pricing.SavingsPlan("aws", "C6i", 0.60, 0.52)  # 1y > 3y
@@ -42,7 +41,7 @@ class TestPricingTables:
             pricing, "SAVINGS_PLANS", [bad] + pricing.SAVINGS_PLANS[1:]
         )
         with pytest.raises(ValueError, match="monotone in term"):
-            pricing.validate_tables()
+            pricing.validate_tables(force=True)
 
     def test_corrupted_spot_market_raises(self, monkeypatch):
         bad = pricing.SpotMarket("oraclecloud", 0.5, 0.05, 0.5, 0.1)
@@ -50,7 +49,7 @@ class TestPricingTables:
             pricing, "SPOT_MARKETS", pricing.SPOT_MARKETS + [bad]
         )
         with pytest.raises(ValueError, match="unknown cloud"):
-            pricing.validate_tables()
+            pricing.validate_tables(force=True)
 
     def test_corrupted_generation_raises(self, monkeypatch):
         bad = pricing.Generation("aws", "C6i", "NotASku", 26, 40.0, 0.25)
@@ -58,7 +57,7 @@ class TestPricingTables:
             pricing, "GENERATIONS", pricing.GENERATIONS + [bad]
         )
         with pytest.raises(ValueError, match="Table-2"):
-            pricing.validate_tables()
+            pricing.validate_tables(force=True)
 
     def test_chained_generation_raises(self, monkeypatch):
         chain = pricing.Generation("aws", "C7i", "C6i", 10, 10.0, 0.1)
@@ -66,7 +65,7 @@ class TestPricingTables:
             pricing, "GENERATIONS", pricing.GENERATIONS + [chain]
         )
         with pytest.raises(ValueError, match="chained"):
-            pricing.validate_tables()
+            pricing.validate_tables(force=True)
 
     def test_unsorted_transitions_raise(self, monkeypatch):
         monkeypatch.setattr(
@@ -74,7 +73,7 @@ class TestPricingTables:
             list(reversed(pricing.HARDWARE_TRANSITIONS)),
         )
         with pytest.raises(ValueError, match="date-sorted"):
-            pricing.validate_tables()
+            pricing.validate_tables(force=True)
 
     def test_convertible_discounts_haircut(self):
         for c in sorted(pricing.known_clouds()):

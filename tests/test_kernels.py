@@ -1,7 +1,6 @@
 """Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles,
 executed in interpret mode (TPU kernels, CPU validation)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

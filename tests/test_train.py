@@ -4,12 +4,11 @@ pipeline, straggler watchdog."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.data.pipeline import DataConfig, PrefetchingLoader, TokenPipeline
 from repro.models.model import build
-from repro.train.optimizer import AdamWConfig, global_norm, init_opt_state
+from repro.train.optimizer import AdamWConfig, global_norm
 from repro.train.step import build_train_step, init_train_state
 from repro.train.trainer import StragglerWatchdog, Trainer, TrainerConfig
 

@@ -268,6 +268,45 @@ def bench_portfolio_table2(quick: bool = False, seed: int = 0) -> list[Row]:
     ]
 
 
+def bench_tournament(quick: bool = False, seed: int = 0) -> list[Row]:
+    """Beyond-paper: the policy tournament (competitive ratio vs per-path
+    hindsight across the §2 scenario taxonomy).  Times one compiled
+    vmapped replay program per policy; the derived columns are the mean
+    competitive ratios the acceptance tests pin (hedging bounds on
+    steady, rolling's margin on declining)."""
+    from repro.core import tournament as tn
+
+    kw = dict(
+        policies=("rolling_portfolio", "deterministic_hedge",
+                  "randomized_hedge"),
+        families=("steady", "declining"),
+        num_pools=2 if quick else 3,
+        num_weeks=24 if quick else 48,
+        num_seeds=2 if quick else 8,
+        base_seed=seed,
+        start_weeks=12 if quick else 20,
+        cadence_weeks=2,
+        horizon_weeks=4 if quick else 8,
+    )
+    t0 = time.perf_counter()
+    rep = tn.run_tournament(**kw)
+    rep.elapsed_s = time.perf_counter() - t0
+    us = rep.elapsed_s * 1e6
+    rows: list[Row] = []
+    for pol_name, short in (
+        ("rolling_portfolio", "rolling"),
+        ("deterministic_hedge", "det_hedge"),
+        ("randomized_hedge", "rand_hedge"),
+    ):
+        for fam in rep.families:
+            st = rep.family_stats(pol_name, fam)
+            rows.append((
+                f"tournament_{short}_{fam}", us,
+                f"CR mean {st['cr_mean']:.3f} max {st['cr_max']:.3f}",
+            ))
+    return rows
+
+
 ALL_PAPER_BENCHES = [
     bench_demand_characterization,
     bench_commitment_fig4,
@@ -278,4 +317,5 @@ ALL_PAPER_BENCHES = [
     bench_freepool_fig12,
     bench_forecast_quality,
     bench_portfolio_table2,
+    bench_tournament,
 ]

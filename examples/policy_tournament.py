@@ -1,0 +1,69 @@
+"""Policy tournament: competitive ratio and regret across workload families.
+
+    PYTHONPATH=src python examples/policy_tournament.py
+
+The rolling replay (`examples/rolling_replan.py`) is a harness; the weekly
+purchasing decision behind it is a *policy* (`repro.core.policy`).  Besides
+the paper's forecast-and-solve loop, the registry carries the forecast-free
+online hedging algorithms of Ambati, Urgaonkar & Sitaraman ("Hedge Your
+Bets", arXiv 2004.04302) — per-capacity-band ski rental with classical
+competitive-ratio guarantees (2 deterministic, e/(e-1) randomized).
+
+This walkthrough runs the tournament rig (`repro.core.tournament`): every
+policy replays every seeded demand path of the scenario taxonomy
+(`repro.data.scenarios` — steady / burst / cyclic / declining /
+unpredictable), one compiled vmapped program per policy, scored against the
+per-path hindsight-optimal constant stack.  Swapping a policy into the full
+planner is one kwarg:
+
+    pl.plan_fleet_pools(pools, mode="rolling", policy="deterministic_hedge")
+"""
+
+import time
+
+from repro.core import policy as pol
+from repro.core import tournament as tn
+
+# Small shapes so the walkthrough stays fast; drop the overrides for the
+# paper-scale defaults (5 families x 32 seeds x 48 weeks).
+REPORT_KW = dict(
+    policies=("rolling_portfolio", "one_shot", "deterministic_hedge",
+              "randomized_hedge"),
+    families=("steady", "burst", "declining"),
+    num_pools=2, num_weeks=24, num_seeds=4,
+    start_weeks=12, cadence_weeks=2, horizon_weeks=4,
+)
+
+
+def main():
+    t0 = time.perf_counter()
+    rep = tn.run_tournament(**REPORT_KW)
+    rep.elapsed_s = time.perf_counter() - t0
+
+    print("== mean competitive ratio (cost / per-path hindsight) ==")
+    print(rep.to_markdown())
+
+    print("\n== tails ==")
+    for p in rep.policies:
+        worst = max(
+            (rep.family_stats(p, f)["cr_max"], f) for f in rep.families
+        )
+        print(f"  {p:20s} worst CR {worst[0]:6.3f}  on {worst[1]}")
+
+    det = rep.family_stats("deterministic_hedge", "steady")
+    rnd = rep.family_stats("randomized_hedge", "steady")
+    print(f"\nclassical bounds on the steady family: "
+          f"deterministic {det['cr_max']:.3f} <= "
+          f"{pol.DETERMINISTIC_CR_BOUND:.3f}, "
+          f"randomized mean {rnd['cr_mean']:.3f} <= "
+          f"{pol.RANDOMIZED_CR_BOUND:.3f}")
+    roll = rep.family_stats("rolling_portfolio", "declining")["cr_mean"]
+    hedge = rep.family_stats("deterministic_hedge", "declining")["cr_mean"]
+    print(f"declining fleet: forecasting planner CR {roll:.3f} vs "
+          f"forecast-free hedge {hedge:.3f} — forecasts pay for themselves "
+          f"when demand has structure")
+    print(f"\n({rep.num_seeds} seeds/family, {rep.elapsed_s:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

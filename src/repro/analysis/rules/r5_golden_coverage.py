@@ -1,7 +1,8 @@
 """R5 — golden coverage for optional subsystems.
 
 Every optional-subsystem keyword the planner stack exposes (``spot=``,
-``migration=``, ``convertible=``) shipped with a hard guarantee: the
+``migration=``, ``convertible=``, ``policy=``) shipped with a hard
+guarantee: the
 disabled path stays bit-identical to the pre-subsystem planner, proven by
 hardcoded golden tests.  This rule keeps that guarantee alive: for each
 watched kwarg that actually appears as a defaulted parameter somewhere in
@@ -18,7 +19,7 @@ import re
 
 from repro.analysis.engine import Finding, Rule
 
-WATCHED = ("spot", "migration", "convertible")
+WATCHED = ("spot", "migration", "convertible", "policy")
 
 
 def _kwargs_in_repo(ctx) -> dict[str, str]:

@@ -345,6 +345,7 @@ def plan_fleet_pools(
     spot: "spot_mod.SpotConfig | bool | None" = None,
     migration: "gn.MigrationConfig | bool | None" = None,
     convertible: "list[pf.PurchaseOption] | bool | None" = None,
+    policy=None,
     **rolling_kw,
 ):
     """Algorithm 1 + the portfolio solver over every pool in ONE batched
@@ -385,19 +386,28 @@ def plan_fleet_pools(
     (the aggregate pooling-premium baseline stays commitments+spot only —
     pooled capacity is already fungible, which is exactly what a
     convertible buys back).  Both default to None and leave every code
-    path bit-identical to the pre-migration planner."""
+    path bit-identical to the pre-migration planner.
+
+    ``policy`` (rolling mode only) selects the weekly decision rule — a
+    :class:`repro.core.policy.Policy`, a registry name such as
+    ``"deterministic_hedge"``, or None for the paper's rolling portfolio
+    loop.  ``policy=None`` (default) keeps the replay bit-identical to
+    the pre-policy planner (golden-tested)."""
     if mode == "rolling":
         from repro.core import replan
 
         return replan.replan_fleet_pools(
             pools, options, horizon_weeks=horizon_weeks, od_rate=od_rate,
             term_weighting=term_weighting, cfg=cfg, spot=spot,
-            migration=migration, convertible=convertible, **rolling_kw,
+            migration=migration, convertible=convertible, policy=policy,
+            **rolling_kw,
         )
     if rolling_kw:
         raise TypeError(
             f"unexpected arguments for mode='one_shot': {sorted(rolling_kw)}"
         )
+    if policy is not None:
+        raise TypeError("policy= applies to mode='rolling' only")
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
     eval_hours = horizon_weeks * HOURS_PER_WEEK

@@ -62,6 +62,7 @@ from repro.core import demand as dm
 from repro.core import forecast as fc
 from repro.core import ladder as ld
 from repro.core import migration as mg
+from repro.core import policy as pol
 from repro.core import portfolio as pf
 from repro.core import spot as spot_mod
 from repro.core.demand import HOURS_PER_WEEK
@@ -135,6 +136,8 @@ class RollingPlanReport:
     conv_alloc: np.ndarray | None = None              # (S, P) re-pinned
     conv_committed_cost: np.ndarray | None = None     # (S, C) weekly spend
     conv_ladders: ld.PoolLadderBook | None = None     # cloud-level book
+    # Which policy drove the weekly decisions (``core.policy``).
+    policy_name: str = "rolling_portfolio"
 
     @property
     def weekly_cost(self) -> np.ndarray:
@@ -200,6 +203,7 @@ def replan_fleet_pools(
     spot: "spot_mod.SpotConfig | bool | None" = None,
     migration: "gn.MigrationConfig | bool | None" = None,
     convertible: "list[pf.PurchaseOption] | bool | None" = None,
+    policy: "pol.Policy | str | None" = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
 
@@ -246,6 +250,17 @@ def replan_fleet_pools(
     instead of stranding a pinned tranche and re-buying on the successor.
     With ``migration=None`` and ``convertible=None`` (defaults) every
     code path is bit-identical to the pre-migration planner.
+
+    ``policy`` selects the weekly decision rule (``core.policy``): a
+    :class:`repro.core.policy.Policy` instance, a registry name, or None
+    for the paper's :class:`~repro.core.policy.RollingPortfolioPolicy` —
+    the pre-refactor scan body op for op, so ``policy=None`` replays are
+    bit-identical to the pre-policy planner (golden-tested).  The spot,
+    migration and convertible bands all key on the weekly forecast, so
+    they require a forecasting policy; the hedging policies are
+    forecast-free and run commitments-only.  The ``compare`` baselines
+    always replay the standard one-shot and hindsight references,
+    whichever policy drives the main replay.
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -260,7 +275,7 @@ def replan_fleet_pools(
     t_hist = total_weeks * HOURS_PER_WEEK
     demand = jnp.asarray(pools.demand[:, :t_hist], jnp.float32)
 
-    al_p, be_p, _ = pf.pool_option_lines(
+    al_p, be_p, avail_p = pf.pool_option_lines(
         options, pools.clouds, term_weighting=term_weighting, od_rate=od
     )
     qs = jax.vmap(
@@ -307,6 +322,21 @@ def replan_fleet_pools(
         max_term = int(term_weeks.max())
     sched_len = total_weeks + max_term + 1
     w_hours = jnp.arange(1, horizon_weeks + 1) * HOURS_PER_WEEK
+
+    pcy = pol.get_policy(policy)
+    if not pcy.forecasting:
+        bands = [
+            name for name, on in [
+                ("spot", sp_res is not None), ("migration", use_mig),
+                ("convertible", conv_opts is not None),
+            ] if on
+        ]
+        if bands:
+            raise ValueError(
+                f"policy {pcy.name!r} does not forecast, but "
+                f"{'/'.join(bands)} bands key on the weekly forecast; "
+                "use a forecasting policy or disable the bands"
+            )
 
     state = fc.prefix_fit_state(
         fit_demand, cfg, horizon_hours=horizon_hours,
@@ -407,40 +437,62 @@ def replan_fleet_pools(
             tops_c, widths_c, member @ pool_top
         )                                                    # (C, Kc)
 
-    def make_step(cadence: int, solve_fn):
+    # Migration recomposition as the policy hook: pair totals x rolling
+    # logit-share fits become per-pool forecasts (the share state solves
+    # on the same week prefix the structural fit did).
+    if use_mig:
+        def compose_forecast(yhat, w):
+            sa, sb = mg.solve_share_prefix(share_state, w)
+            t_fut = w * HOURS_PER_WEEK + jnp.arange(horizon_hours)
+            sh = mg.predict_share(sa, sb, t_fut, share_state.t_max)
+            return mg.compose_forecast(yhat, sh, edges)
+    else:
+        compose_forecast = None
+
+    def make_ctx(cadence: int, solve_fn) -> pol.PolicyContext:
+        """The full-harness policy context: ``targets_for`` carries the
+        configured solver (quantile or grid sweep) and the spot floors;
+        ``compose_forecast`` the migration recomposition."""
+        return pol.PolicyContext(
+            demand=demand, options=options, clouds=pools.clouds, od=od,
+            rates=rates, term_weeks=term_weeks, avail=avail_p, qs=qs,
+            w_hours=w_hours, start_weeks=start_weeks,
+            cadence_weeks=cadence, horizon_weeks=horizon_weeks,
+            total_weeks=total_weeks, state=state, solve_fn=solve_fn,
+            irls_iters=irls_iters, targets_for=targets_for,
+            compose_forecast=compose_forecast,
+        )
+
+    def make_step(cadence: int, solve_fn, step_policy: pol.Policy):
+        pstate0, decide = step_policy.setup(make_ctx(cadence, solve_fn))
+
         def step(carry, w):
             if conv_opts is None:
-                active, rolloff = carry
+                active, rolloff, pstate = carry
             else:
-                active, rolloff, active_c, rolloff_c = carry
+                active, rolloff, pstate, active_c, rolloff_c = carry
             # 1. tranches whose term ends at week w roll off the stack
             expired = jax.lax.dynamic_index_in_dim(
                 rolloff, w, axis=2, keepdims=False
             )
             active = active - expired
-            # 2. re-fit on the prefix of w whole weeks, forecast ahead
-            beta = solve_fn(state, w)
-            beta = fc.irls_refine(state, beta, w, irls_iters)
-            yhat = fc.predict_from_beta(
-                state, beta, w * HOURS_PER_WEEK, horizon_hours
-            )
-            if use_mig:
-                # Recompose pair totals x rolling logit-share fits into
-                # per-pool forecasts (the share state solves on the same
-                # week prefix the structural fit did).
-                sa, sb = mg.solve_share_prefix(share_state, w)
-                t_fut = w * HOURS_PER_WEEK + jnp.arange(horizon_hours)
-                sh = mg.predict_share(sa, sb, t_fut, share_state.t_max)
-                yhat = mg.compose_forecast(yhat, sh, edges)
-            # 3-4. solver targets; buy only increments, only on decision
-            # weeks — surpluses persist until their tranches expire.  The
-            # spot floor is NOT carried: it is this week's fast-capacity
+            # 2-4. the policy decides this week's target stack (for the
+            # default rolling policy: prefix refit -> horizon forecast ->
+            # solver targets, op for op the pre-policy scan body).  Buys
+            # happen only on decision weeks and only as increments —
+            # surpluses persist until their tranches expire.  The spot
+            # floor is NOT carried: it is this week's fast-capacity
             # decision, re-derived from scratch on every step.
-            widths, floor = targets_for(yhat)
-            if cadence > 0:
-                is_dec = (w - start_weeks) % cadence == 0
-            else:
-                is_dec = w == start_weeks
+            d_prev = (
+                jax.lax.dynamic_index_in_dim(
+                    demand_wk, w - 1, axis=1, keepdims=False
+                )
+                if step_policy.needs_prev_demand else None
+            )
+            pstate, dec = decide(
+                pstate, pol.Observation(week=w, active=active, d_prev=d_prev)
+            )
+            widths, floor, yhat, is_dec = dec
             if conv_opts is None:
                 inc = jnp.maximum(widths - active, 0.0)
                 inc = jnp.where(
@@ -527,6 +579,7 @@ def replan_fleet_pools(
                 out = {
                     "target": widths, "inc": inc, "active": active,
                     "committed": committed, "od": od * over, "util": util,
+                    "is_dec": is_dec,
                 }
             else:
                 fl = jnp.maximum(floor, level)
@@ -537,13 +590,14 @@ def replan_fleet_pools(
                 out = {
                     "target": widths, "inc": inc, "active": active,
                     "committed": committed, "od": od * over, "util": util,
+                    "is_dec": is_dec,
                     "floor": fl,
                     "spot_vol": spot_over.sum(-1),
                     "spot": s_lines.rate * spot_over.sum(-1),
                     "spot_peak": spot_over.max(-1),
                 }
             if conv_opts is None:
-                return (active, rolloff), out
+                return (active, rolloff, pstate), out
             out.update({
                 "conv_target": widths_c, "conv_inc": inc_c,
                 "conv_active": active_c, "conv_alloc": alloc,
@@ -551,26 +605,36 @@ def replan_fleet_pools(
                     (conv_rates * active_c).sum(-1) * HOURS_PER_WEEK
                 ),
             })
-            return (active, rolloff, active_c, rolloff_c), out
-        return step
+            return (active, rolloff, pstate, active_c, rolloff_c), out
+        return step, pstate0
 
-    def replay(cadence: int, which: str):
+    def replay(cadence: int, which: str, step_policy: pol.Policy):
         active0 = jnp.zeros((num_pools, num_opts), jnp.float32)
         rolloff0 = jnp.zeros((num_pools, num_opts, sched_len), jnp.float32)
-        carry0 = (active0, rolloff0)
-        if conv_opts is not None:
-            carry0 = carry0 + (
-                jnp.zeros((num_clouds, num_conv), jnp.float32),
-                jnp.zeros((num_clouds, num_conv, sched_len), jnp.float32),
-            )
         if which == "scan":
-            step = make_step(cadence, fc.solve_prefix)
+            step, pstate0 = make_step(cadence, fc.solve_prefix, step_policy)
+            carry0 = (active0, rolloff0, pstate0)
+            if conv_opts is not None:
+                carry0 = carry0 + (
+                    jnp.zeros((num_clouds, num_conv), jnp.float32),
+                    jnp.zeros(
+                        (num_clouds, num_conv, sched_len), jnp.float32
+                    ),
+                )
             ws = jnp.arange(start_weeks, total_weeks)
             _, ys = jax.lax.scan(step, carry0, ws)
             return ys
         # Naive python-level replay: one full prefix re-accumulation and
         # one host dispatch per week (what the scan path replaces).
-        step = make_step(cadence, fc.solve_prefix_direct)
+        step, pstate0 = make_step(
+            cadence, fc.solve_prefix_direct, step_policy
+        )
+        carry0 = (active0, rolloff0, pstate0)
+        if conv_opts is not None:
+            carry0 = carry0 + (
+                jnp.zeros((num_clouds, num_conv), jnp.float32),
+                jnp.zeros((num_clouds, num_conv, sched_len), jnp.float32),
+            )
         carry, outs = carry0, []
         for w in range(start_weeks, total_weeks):
             carry, out = step(carry, jnp.int32(w))
@@ -579,7 +643,9 @@ def replan_fleet_pools(
             key: jnp.stack([o[key] for o in outs]) for key in outs[0]
         }
 
-    ys = replay(cadence_weeks, "scan" if backend == "scan" else "loop")
+    ys = replay(
+        cadence_weeks, "scan" if backend == "scan" else "loop", pcy
+    )
     ys = {k_: np.asarray(v) for k_, v in ys.items()}
     weeks = np.arange(start_weeks, total_weeks)
 
@@ -590,7 +656,7 @@ def replan_fleet_pools(
     # convertible capacity suppresses standard purchases), so the book
     # replays the scan's realized post-purchase stack instead.
     targets_full = np.zeros((num_pools, total_weeks, num_opts), np.float32)
-    dec = (weeks - start_weeks) % cadence_weeks == 0
+    dec = ys.pop("is_dec").astype(bool)    # the policy's decision weeks
     book_targets = ys["target"] if conv_opts is None else ys["active"]
     targets_full[:, weeks[dec]] = np.swapaxes(book_targets[dec], 0, 1)
     term_hours = np.asarray(
@@ -624,6 +690,7 @@ def replan_fleet_pools(
         total_cost=total,
         all_on_demand_cost=all_od,
         savings_vs_on_demand=1.0 - total / all_od if all_od > 0 else 0.0,
+        policy_name=pcy.name,
     )
     if sp_res is not None:
         report.spot_config = s_cfg
@@ -669,8 +736,10 @@ def replan_fleet_pools(
 
     # One-shot baseline: identical replay, single decision week (with the
     # same spot/convertible bands when enabled — the baselines differ in
-    # commitment cadence, not in which purchasing options exist).
-    one = replay(0, "scan")
+    # commitment cadence, not in which purchasing options exist).  Always
+    # driven by the standard rolling policy so a custom ``policy=`` is
+    # still scored against the paper's reference points.
+    one = replay(0, "scan", pol.RollingPortfolioPolicy())
     one_weekly = np.asarray(one["committed"] + one["od"]).sum(-1)
     if sp_res is not None:
         one_weekly = one_weekly + np.asarray(one["spot"]).sum(-1)

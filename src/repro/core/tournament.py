@@ -1,0 +1,275 @@
+"""Adversarial policy tournament: competitive ratio + regret, vmapped.
+
+The paper scores one strategy on one realized trace; this rig scores
+every :mod:`repro.core.policy` policy across the §2 workload taxonomy
+(``repro.data.scenarios``): for each policy, ONE compiled program runs
+the weekly replay over every (family x seed) demand path at once —
+``jit(vmap(path_cost))`` over the stacked (F*N, P, T) batch — and the
+per-path hindsight-optimal constant stack (the same reference
+``replan_fleet_pools`` reports) is computed once in its own vmapped
+program and shared by all policies.
+
+Reported per (policy, family, seed):
+
+    competitive ratio   realized cost / hindsight-optimal cost  (>= 1)
+    regret              realized cost - hindsight-optimal cost
+
+so the hedging policies' classical guarantees (<= 2 deterministic,
+<= e/(e-1) randomized, Ambati et al. arXiv 2004.04302) become *testable
+distributions* instead of citations, and every future policy change has
+a scoreboard: tests pin the deterministic bound on steady fleets and the
+rolling planner's margin over both hedges on the declining fleet.
+
+The replay here is the lean commitments-only harness (no spot /
+migration / convertible bands — those key on the forecasting planner's
+weekly yhat): roll off expired tranches, let the policy decide, buy
+increments on decision weeks, bill committed rates plus on-demand
+overflow.  ``backend="loop"`` replays the same weeks as a Python loop
+(the scan-parity oracle, mirroring ``replan``'s loop backend).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.capacity import pricing
+from repro.core import forecast as fc
+from repro.core import ladder as ld
+from repro.core import policy as pol
+from repro.core import portfolio as pf
+from repro.core.demand import HOURS_PER_WEEK
+from repro.data import scenarios as sc
+
+pricing.validate_tables()
+
+DEFAULT_POLICIES = (
+    "rolling_portfolio", "one_shot", "deterministic_hedge",
+    "randomized_hedge",
+)
+
+
+@dataclasses.dataclass
+class TournamentReport:
+    """Per-(policy, family, seed) outcome grid plus summaries."""
+
+    policies: tuple[str, ...]
+    families: tuple[str, ...]
+    num_seeds: int
+    start_weeks: int
+    cadence_weeks: int
+    horizon_weeks: int
+    cost: np.ndarray               # (Pol, F, N) realized replay cost
+    hindsight_cost: np.ndarray     # (F, N) per-path hindsight optimum
+    competitive_ratio: np.ndarray  # (Pol, F, N) cost / hindsight
+    regret: np.ndarray             # (Pol, F, N) cost - hindsight
+    #: wall time, stamped by callers (benchmarks/examples) — core modules
+    #: are wall-clock-free by contract (analysis rule R2)
+    elapsed_s: float = 0.0
+
+    def family_stats(self, policy: str, family: str) -> dict:
+        i = self.policies.index(policy)
+        j = self.families.index(family)
+        cr, rg = self.competitive_ratio[i, j], self.regret[i, j]
+        return {
+            "cr_mean": float(cr.mean()),
+            "cr_p95": float(np.quantile(cr, 0.95)),
+            "cr_max": float(cr.max()),
+            "regret_mean": float(rg.mean()),
+            "regret_max": float(rg.max()),
+        }
+
+    def summary(self) -> dict:
+        return {
+            p: {f: self.family_stats(p, f) for f in self.families}
+            for p in self.policies
+        }
+
+    def to_markdown(self) -> str:
+        """Mean competitive ratio per policy x family, one screen."""
+        head = "| policy | " + " | ".join(self.families) + " |"
+        sep = "|---" * (len(self.families) + 1) + "|"
+        rows = [head, sep]
+        for i, p in enumerate(self.policies):
+            cells = " | ".join(
+                f"{self.competitive_ratio[i, j].mean():.3f}"
+                for j in range(len(self.families))
+            )
+            rows.append(f"| {p} | {cells} |")
+        return "\n".join(rows)
+
+
+def _lean_replay(policy: pol.Policy, ctx: pol.PolicyContext, backend: str):
+    """Total replay cost of ``policy`` on ``ctx``'s demand path: the
+    commitments-only weekly harness (roll off, decide, buy increments,
+    bill) — the scan body of ``replan`` minus the optional bands."""
+    pstate0, decide = policy.setup(ctx)
+    num_p, num_k = ctx.num_pools, ctx.num_options
+    sched_len = ctx.total_weeks + int(max(
+        o.term_weeks for o in ctx.options
+    )) + 1
+    demand_wk = ctx.demand.reshape(
+        num_p, ctx.total_weeks, HOURS_PER_WEEK
+    )
+
+    def step(carry, w):
+        active, rolloff, pstate = carry
+        expired = jax.lax.dynamic_index_in_dim(
+            rolloff, w, axis=2, keepdims=False
+        )
+        active = active - expired
+        d_prev = (
+            jax.lax.dynamic_index_in_dim(
+                demand_wk, w - 1, axis=1, keepdims=False
+            )
+            if policy.needs_prev_demand else None
+        )
+        pstate, dec = decide(
+            pstate, pol.Observation(week=w, active=active, d_prev=d_prev)
+        )
+        inc = jnp.maximum(dec.targets - active, 0.0)
+        inc = jnp.where(
+            dec.is_decision & (inc > ld.PURCHASE_EPS), inc, 0.0
+        )
+        active = active + inc
+        expiry = jax.nn.one_hot(
+            w + ctx.term_weeks, sched_len, dtype=rolloff.dtype
+        )
+        rolloff = rolloff + inc[:, :, None] * expiry[None, :, :]
+        d = jax.lax.dynamic_index_in_dim(
+            demand_wk, w, axis=1, keepdims=False
+        )
+        level = active.sum(-1)
+        committed = (ctx.rates * active).sum(-1) * HOURS_PER_WEEK
+        over = jnp.maximum(d - level[:, None], 0.0).sum(-1)
+        return (active, rolloff, pstate), committed.sum() + ctx.od * over.sum()
+
+    carry0 = (
+        jnp.zeros((num_p, num_k), jnp.float32),
+        jnp.zeros((num_p, num_k, sched_len), jnp.float32),
+        pstate0,
+    )
+    if backend == "scan":
+        _, weekly = jax.lax.scan(
+            step, carry0, jnp.arange(ctx.start_weeks, ctx.total_weeks)
+        )
+        return weekly.sum()
+    carry, total = carry0, jnp.float32(0.0)
+    for w in range(ctx.start_weeks, ctx.total_weeks):
+        carry, cost = step(carry, jnp.int32(w))
+        total = total + cost
+    return total
+
+
+def _hindsight_cost(demand, *, options, clouds, od, start_weeks):
+    """Per-path hindsight optimum: the optimal constant stack on the
+    realized evaluation demand, billing lines (``term_weighting=0``) —
+    the exact reference ``replan_fleet_pools`` reports regret against."""
+    al0, be0, _ = pf.pool_option_lines(
+        options, clouds, term_weighting=0.0, od_rate=od
+    )
+    total_weeks = demand.shape[-1] // HOURS_PER_WEEK
+    ev = demand[:, start_weeks * HOURS_PER_WEEK: total_weeks * HOURS_PER_WEEK]
+    plan = jax.vmap(
+        lambda f_, a_, b_: pf.optimal_portfolio_stack(
+            f_, a_, b_, od_rate=od
+        )
+    )(ev, al0, be0)
+    rates = jnp.asarray([o.rate for o in options], jnp.float32)
+    level = plan.widths.sum(-1)
+    over = jnp.maximum(ev - level[:, None], 0.0).sum(-1)
+    committed = (
+        (rates * plan.widths).sum(-1)
+        * (total_weeks - start_weeks) * HOURS_PER_WEEK
+    )
+    return committed.sum() + od * over.sum()
+
+
+def run_tournament(
+    policies: Sequence["pol.Policy | str"] = DEFAULT_POLICIES,
+    families: Sequence[str] = sc.FAMILIES,
+    *,
+    num_pools: int = 3,
+    num_weeks: int = 48,
+    num_seeds: int = 32,
+    base_seed: int = 0,
+    start_weeks: int = 20,
+    cadence_weeks: int = 2,
+    horizon_weeks: int = 8,
+    options: list | None = None,
+    od_rate: float | None = None,
+    cfg: fc.ForecastConfig = fc.ForecastConfig(),
+    backend: Literal["scan", "loop"] = "scan",
+) -> TournamentReport:
+    """Run the policy tournament: ONE compiled replay program per policy
+    over every (family x seed) path, scored against per-path hindsight.
+
+    Paths come from :func:`repro.data.scenarios.scenario_paths` (N >= 32
+    seeds per family by default); clouds cycle aws/azure/gcp exactly as
+    the synthetic artifact's pools do, so the Table-2 purchase options
+    apply unchanged."""
+    resolved = [pol.get_policy(p) for p in policies]
+    families = tuple(families)
+    options = options if options is not None else pf.options_from_pricing()
+    od = od_rate if od_rate is not None else pricing.on_demand_premium()
+    clouds = tuple(c for c, _, _ in sc.scenario_keys(num_pools))
+
+    paths = np.stack([
+        sc.scenario_paths(
+            f, num_pools=num_pools, num_weeks=num_weeks,
+            num_seeds=num_seeds, base_seed=base_seed,
+        )
+        for f in families
+    ])                                      # (F, N, P, T)
+    num_f = len(families)
+    flat = jnp.asarray(
+        paths.reshape(num_f * num_seeds, num_pools, -1), jnp.float32
+    )
+
+    solve_fn = (
+        fc.solve_prefix if backend == "scan" else fc.solve_prefix_direct
+    )
+
+    def make_path_cost(policy):
+        def path_cost(demand):
+            ctx = pol.make_context(
+                demand, options, clouds=clouds, od_rate=od, cfg=cfg,
+                start_weeks=start_weeks, cadence_weeks=cadence_weeks,
+                horizon_weeks=horizon_weeks, solve_fn=solve_fn,
+            )
+            return _lean_replay(policy, ctx, backend)
+        return path_cost
+
+    hs = jax.jit(jax.vmap(
+        lambda d: _hindsight_cost(
+            d, options=options, clouds=clouds, od=od,
+            start_weeks=start_weeks,
+        )
+    ))(flat)
+    hindsight = np.asarray(hs, np.float64).reshape(num_f, num_seeds)
+
+    cost = np.empty((len(resolved), num_f, num_seeds), np.float64)
+    for i, policy in enumerate(resolved):
+        # One compiled program per policy: the vmap batches every
+        # family's every seed through the same replay.
+        totals = jax.jit(jax.vmap(make_path_cost(policy)))(flat)
+        cost[i] = np.asarray(totals, np.float64).reshape(
+            num_f, num_seeds
+        )
+
+    return TournamentReport(
+        policies=tuple(p.name for p in resolved),
+        families=families,
+        num_seeds=num_seeds,
+        start_weeks=start_weeks,
+        cadence_weeks=cadence_weeks,
+        horizon_weeks=horizon_weeks,
+        cost=cost,
+        hindsight_cost=hindsight,
+        competitive_ratio=cost / hindsight[None],
+        regret=cost - hindsight[None],
+    )

@@ -1,0 +1,193 @@
+"""Adversarial scenario families for the policy tournament (§2 taxonomy).
+
+The paper evaluates one strategy on one realized demand trace; the
+tournament (``repro.core.tournament``) instead scores every policy across
+the canonical workload taxonomy cloud cost planners are judged on —
+steady, burst, cyclic, declining, unpredictable — with N seeded paths per
+family, so competitive-ratio and regret numbers are *distributions*, not
+anecdotes.
+
+Each family reuses the ``synthetic_pool_set`` drivers: the same
+:func:`repro.core.demand.synth_demand` trend x seasonality x AR(1) model
+(clouds cycling aws/azure/gcp so pool keys line up with the Table-2
+purchase options), then applies a family-specific transform with its own
+seeded generator:
+
+    steady         flat trend, mild seasonality, low noise
+    burst          steady base + rare short multiplicative spikes
+    cyclic         strong weekly + 4-week modulation on top
+    declining      negative annual growth (a sunsetting fleet)
+    unpredictable  regime-switching level shifts + heavy noise
+
+Every family has a *defining property* the test-suite asserts per seed
+(burst exceedance counts, cyclic lag-168 autocorrelation, declining
+trend sign, ...), and every path is a pure function of
+``(family, base_seed)`` — reproducibility is part of the contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import demand as dm
+from repro.core.demand import HOURS_PER_WEEK
+
+FAMILIES: tuple[str, ...] = (
+    "steady", "burst", "cyclic", "declining", "unpredictable",
+)
+
+_CLOUDS = ("aws", "azure", "gcp")
+
+# Burst family knobs (shared with the coverage tests).
+BURST_EVERY_WEEKS = 4          # ~one spike per this many weeks
+BURST_FACTOR = 3.0             # spike multiplier
+BURST_LEN_HOURS = (6, 24)      # spike duration range
+# Unpredictable family knobs.
+REGIME_SEGMENTS = 5
+REGIME_RANGE = (0.5, 1.8)
+
+
+def _family_config(family: str, pool: int) -> dm.DemandConfig:
+    """The per-pool driver config, varied across pools the same way
+    ``traces._pool_configs`` varies the synthetic artifact."""
+    base = 40.0 * (1.5 ** (pool % 3))
+    if family == "steady":
+        return dm.DemandConfig(
+            base_level=base, annual_growth=0.0,
+            diurnal_amplitude=0.10 + 0.02 * (pool % 3),
+            weekly_amplitude=0.12 + 0.02 * (pool % 4),
+            noise_sigma=0.04,
+        )
+    if family == "burst":
+        return dm.DemandConfig(
+            base_level=base, annual_growth=0.0,
+            diurnal_amplitude=0.08, weekly_amplitude=0.10,
+            noise_sigma=0.05,
+        )
+    if family == "cyclic":
+        return dm.DemandConfig(
+            base_level=base, annual_growth=0.0,
+            diurnal_amplitude=0.35 + 0.05 * (pool % 2),
+            weekly_amplitude=0.45 + 0.05 * (pool % 3),
+            noise_sigma=0.05,
+        )
+    if family == "declining":
+        return dm.DemandConfig(
+            base_level=1.6 * base, annual_growth=-0.90,
+            diurnal_amplitude=0.10, weekly_amplitude=0.12,
+            noise_sigma=0.05,
+        )
+    if family == "unpredictable":
+        return dm.DemandConfig(
+            base_level=base, annual_growth=0.0,
+            diurnal_amplitude=0.10, weekly_amplitude=0.12,
+            noise_sigma=0.15,
+        )
+    raise ValueError(f"unknown family {family!r}; known: {FAMILIES}")
+
+
+def _transform(
+    family: str, y: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    """Family-specific post-transform on one pool's hourly series."""
+    t = y.shape[-1]
+    if family == "burst":
+        num_bursts = max(1, t // (BURST_EVERY_WEEKS * HOURS_PER_WEEK))
+        for _ in range(num_bursts):
+            ln = int(rng.integers(*BURST_LEN_HOURS))
+            at = int(rng.integers(0, max(t - ln, 1)))
+            y = y.copy()
+            y[at:at + ln] *= BURST_FACTOR
+        return y
+    if family == "cyclic":
+        # A 4-week business cycle on top of the weekly/diurnal pattern —
+        # the autocorrelation structure the family is named for.
+        phase = rng.uniform(0.0, 2.0 * np.pi)
+        month = 1.0 + 0.3 * np.sin(
+            2.0 * np.pi * np.arange(t) / (4 * HOURS_PER_WEEK) + phase
+        )
+        return y * month
+    if family == "unpredictable":
+        # Piecewise-constant regime multipliers: level shifts no
+        # smooth structural fit anticipates.
+        edges = np.sort(
+            rng.integers(1, t, size=REGIME_SEGMENTS - 1)
+        )
+        mult = rng.uniform(*REGIME_RANGE, size=REGIME_SEGMENTS)
+        levels = np.repeat(
+            mult, np.diff(np.concatenate([[0], edges, [t]]))
+        )
+        return y * levels
+    return y
+
+
+def scenario_keys(num_pools: int) -> tuple[dm.PoolKey, ...]:
+    """Pool keys for a scenario fleet, cloud-cycled like the artifact."""
+    return tuple(
+        (_CLOUDS[i % 3], f"region_{i % 4}", f"type_{i:02d}")
+        for i in range(num_pools)
+    )
+
+
+def scenario_path(
+    family: str,
+    *,
+    num_pools: int = 3,
+    num_weeks: int = 40,
+    seed: int = 0,
+) -> np.ndarray:
+    """One (P, T) demand path of ``family`` at ``seed``, T in whole weeks."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}; known: {FAMILIES}")
+    num_hours = num_weeks * HOURS_PER_WEEK
+    fam_idx = FAMILIES.index(family)
+    rows = []
+    for p in range(num_pools):
+        cfg = _family_config(family, p)
+        key = jax.random.PRNGKey(100_000 * fam_idx + 100 * seed + p)
+        y = np.asarray(dm.synth_demand(num_hours, cfg, key=key))
+        rng = np.random.default_rng((fam_idx, seed, p))
+        rows.append(_transform(family, y, rng))
+    return np.stack(rows).astype(np.float32)
+
+
+def scenario_paths(
+    family: str,
+    *,
+    num_pools: int = 3,
+    num_weeks: int = 40,
+    num_seeds: int = 32,
+    base_seed: int = 0,
+) -> np.ndarray:
+    """(N, P, T) seeded paths of one family — the tournament's unit of
+    coverage (N >= 32 by default so ratio/regret tails are populated)."""
+    return np.stack([
+        scenario_path(
+            family, num_pools=num_pools, num_weeks=num_weeks,
+            seed=base_seed + s,
+        )
+        for s in range(num_seeds)
+    ])
+
+
+def scenario_pool_set(
+    family: str,
+    *,
+    num_pools: int = 3,
+    num_weeks: int = 40,
+    seed: int = 0,
+) -> dm.PoolSet:
+    """One scenario path wrapped as a :class:`~repro.core.demand.PoolSet`
+    so the full planner surface (``plan_fleet_pools``) runs on it."""
+    demand = scenario_path(
+        family, num_pools=num_pools, num_weeks=num_weeks, seed=seed
+    )
+    return dm.PoolSet(
+        keys=scenario_keys(num_pools),
+        demand=demand,
+        configs={
+            k: _family_config(family, i)
+            for i, k in enumerate(scenario_keys(num_pools))
+        },
+    )

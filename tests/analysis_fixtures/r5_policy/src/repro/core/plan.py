@@ -1,0 +1,8 @@
+"""Planted R5 violation: optional `policy=` kwarg with no disabled-path
+golden test anywhere under tests/."""
+
+
+def replay(demand, policy=None):
+    if policy is None:
+        return demand
+    return policy(demand)

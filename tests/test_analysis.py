@@ -38,6 +38,7 @@ CASES = {
     "r3": "R3",
     "r4": "R4",
     "r5": "R5",
+    "r5_policy": "R5",
     "r6": "R6",
 }
 

@@ -47,6 +47,13 @@ class TestExamples:
         assert "migration-blind vs aware + convertible" in out
         assert "convertible tranches" in out
 
+    def test_policy_tournament(self, capsys):
+        run_example("examples/policy_tournament.py")
+        out = capsys.readouterr().out
+        assert "mean competitive ratio" in out
+        assert "classical bounds" in out
+        assert "declining fleet" in out
+
     def test_rolling_replan_migration_flag(self, capsys):
         run_example("examples/rolling_replan.py", ["--migration"])
         out = capsys.readouterr().out

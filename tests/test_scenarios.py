@@ -1,0 +1,137 @@
+"""Scenario-generator coverage: every tournament family exhibits its
+defining property across seeds, every path is a pure function of
+(family, seed), and the PoolSet wrapper feeds the planner surface."""
+
+import numpy as np
+import pytest
+
+from repro.core.demand import HOURS_PER_WEEK
+from repro.data import scenarios as sc
+
+WK = HOURS_PER_WEEK
+SEEDS = (0, 1, 2, 3)
+
+
+def _weekly_means(path):
+    """(P, W) weekly mean level of one (P, T) path."""
+    p, t = path.shape
+    return path.reshape(p, t // WK, WK).mean(-1)
+
+
+def _cv(path):
+    wm = _weekly_means(path)
+    return float((wm.std(-1) / wm.mean(-1)).mean())
+
+
+def _lag_autocorr(x, lag):
+    a, b = x[..., :-lag], x[..., lag:]
+    a = a - a.mean(-1, keepdims=True)
+    b = b - b.mean(-1, keepdims=True)
+    return float(
+        ((a * b).mean(-1) / (a.std(-1) * b.std(-1) + 1e-12)).mean()
+    )
+
+
+class TestFamilyProperties:
+    """One defining, seed-robust property per §2 taxonomy family."""
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_steady_low_weekly_variation(self, seed):
+        path = sc.scenario_path("steady", num_weeks=24, seed=seed)
+        assert _cv(path) < 0.15
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_burst_rare_large_exceedances(self, seed):
+        burst = sc.scenario_path("burst", num_weeks=24, seed=seed)
+        steady = sc.scenario_path("steady", num_weeks=24, seed=seed)
+
+        def exceed(path):
+            med = np.median(path, axis=-1, keepdims=True)
+            return int((path > 1.8 * med).sum())
+
+        # spikes are present but rare: well under 10% of hours
+        assert exceed(burst) >= 6
+        assert exceed(burst) < 0.1 * burst.size
+        assert exceed(burst) > exceed(steady)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_cyclic_strong_weekly_autocorrelation(self, seed):
+        cyc = sc.scenario_path("cyclic", num_weeks=24, seed=seed)
+        steady = sc.scenario_path("steady", num_weeks=24, seed=seed)
+        ac_c = _lag_autocorr(cyc, WK)
+        assert ac_c > 0.4
+        assert ac_c > _lag_autocorr(steady, WK)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_declining_trend(self, seed):
+        path = sc.scenario_path("declining", num_weeks=24, seed=seed)
+        steady = sc.scenario_path("steady", num_weeks=24, seed=seed)
+        wm = _weekly_means(path).mean(0)
+        sm = _weekly_means(steady).mean(0)
+        assert wm[-8:].mean() < 0.7 * wm[:8].mean()
+        assert sm[-8:].mean() > 0.9 * sm[:8].mean()
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_unpredictable_high_variation(self, seed):
+        unp = sc.scenario_path("unpredictable", num_weeks=24, seed=seed)
+        steady = sc.scenario_path("steady", num_weeks=24, seed=seed)
+        assert _cv(unp) > 0.15
+        assert _cv(unp) > _cv(steady)
+
+
+class TestGeneratorContract:
+    def test_shapes_and_dtype(self):
+        path = sc.scenario_path("steady", num_pools=4, num_weeks=10, seed=3)
+        assert path.shape == (4, 10 * WK)
+        assert path.dtype == np.float32
+        assert (path >= 0).all() and np.isfinite(path).all()
+
+    def test_paths_stack_shape(self):
+        paths = sc.scenario_paths(
+            "burst", num_pools=2, num_weeks=8, num_seeds=5, base_seed=7
+        )
+        assert paths.shape == (5, 2, 8 * WK)
+
+    @pytest.mark.parametrize("family", sc.FAMILIES)
+    def test_reproducible_given_seed(self, family):
+        a = sc.scenario_path(family, num_weeks=8, seed=11)
+        b = sc.scenario_path(family, num_weeks=8, seed=11)
+        np.testing.assert_array_equal(a, b)
+        c = sc.scenario_path(family, num_weeks=8, seed=12)
+        assert not np.array_equal(a, c)
+
+    def test_paths_slices_match_single_calls(self):
+        paths = sc.scenario_paths(
+            "cyclic", num_weeks=8, num_seeds=3, base_seed=4
+        )
+        for s in range(3):
+            np.testing.assert_array_equal(
+                paths[s], sc.scenario_path("cyclic", num_weeks=8, seed=4 + s)
+            )
+
+    def test_families_are_distinct_paths(self):
+        got = {
+            f: sc.scenario_path(f, num_weeks=8, seed=0).tobytes()
+            for f in sc.FAMILIES
+        }
+        assert len(set(got.values())) == len(sc.FAMILIES)
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(ValueError, match="unknown family"):
+            sc.scenario_path("spiky", num_weeks=8)
+        with pytest.raises(ValueError, match="unknown family"):
+            sc.scenario_pool_set("spiky")
+
+    def test_pool_keys_cycle_clouds(self):
+        keys = sc.scenario_keys(5)
+        assert [k[0] for k in keys] == ["aws", "azure", "gcp", "aws", "azure"]
+        assert len(set(keys)) == 5
+
+    def test_pool_set_wraps_path(self):
+        ps = sc.scenario_pool_set("steady", num_pools=3, num_weeks=8, seed=2)
+        np.testing.assert_array_equal(
+            ps.demand,
+            sc.scenario_path("steady", num_pools=3, num_weeks=8, seed=2),
+        )
+        assert ps.keys == sc.scenario_keys(3)
+        assert set(ps.configs) == set(ps.keys)

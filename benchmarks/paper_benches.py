@@ -307,6 +307,79 @@ def bench_tournament(quick: bool = False, seed: int = 0) -> list[Row]:
     return rows
 
 
+def bench_fleet_scale(quick: bool = False, seed: int = 0) -> list[Row]:
+    """Beyond-paper: the (N scenarios x P pools) batched rolling replay's
+    fleet-scale curve.  One batched ``replan_fleet_pools(scenarios=N)``
+    program per P, plus the loop-over-scenarios oracle (N unbatched
+    replays) at the middle size — the batched scan's speedup over it is
+    the headline.  Gate: scenario 0 of every batched run is BIT-IDENTICAL
+    to the unbatched replay at the same P (the flattening contract).
+
+    ``--quick`` (the CI bench-smoke job) runs P in {16, 128} on a short
+    trace; the full curve — P in {16, 128, 1024}, N=32, a 3-year weekly
+    replan — sits behind ``--filter fleet_scale`` without ``--quick``."""
+    import dataclasses
+
+    from repro.core import replan as rp
+    from repro.data import scenarios as sc
+    from repro.data import traces
+
+    if quick:
+        p_sizes, n_scen, hours = (16, 128), 4, 24 * 7 * 20
+        kw = dict(cadence_weeks=2, start_weeks=6, horizon_weeks=4,
+                  compare=False)
+    else:
+        p_sizes, n_scen, hours = (16, 128, 1024), 32, 24 * 7 * 156
+        kw = dict(cadence_weeks=1, start_weeks=26, horizon_weeks=8,
+                  compare=False)
+    oracle_p = 128
+    cfg = sc.ScenarioConfig(n_scenarios=n_scen, family="growth", seed=seed)
+
+    rows: list[Row] = []
+    for p in p_sizes:
+        pools = traces.synthetic_pool_set(
+            num_pools=p, num_hours=hours, seed=seed
+        )
+        t0 = time.perf_counter()
+        rep = rp.replan_fleet_pools(pools, scenarios=cfg, **kw)
+        us_batched = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        base = rp.replan_fleet_pools(pools, **kw)
+        us_single = (time.perf_counter() - t0) * 1e6
+        # The flattening contract: scenario 0 IS the realized replay.
+        np.testing.assert_array_equal(rep.targets[:, 0], base.targets)
+        np.testing.assert_array_equal(
+            float(rep.scenario_cost[0]), base.total_cost
+        )
+        derived = (
+            f"P={p} N={n_scen} {hours // HOURS_PER_WEEK}wk, "
+            f"{us_batched / us_single:.1f}x one unbatched replay, "
+            f"scenario0 bit-identical"
+        )
+        rows.append((f"fleet_scale_p{p}", us_batched, derived))
+        if p == oracle_p:
+            # Loop-over-scenarios oracle: N unbatched replays over the
+            # perturbed paths — the program the batched scan replaces.
+            batch = sc.scenario_batch(pools.demand, cfg)
+            t0 = time.perf_counter()
+            per_scen = []
+            for s in range(n_scen):
+                srep = rp.replan_fleet_pools(
+                    dataclasses.replace(pools, demand=batch[s]), **kw
+                )
+                per_scen.append(srep.total_cost)
+            us_loop = (time.perf_counter() - t0) * 1e6
+            np.testing.assert_allclose(
+                np.asarray(per_scen), rep.scenario_cost, rtol=1e-5
+            )
+            speedup = us_loop / us_batched
+            rows.append((
+                f"fleet_scale_p{oracle_p}_vs_loop", us_loop,
+                f"batched scan {speedup:.1f}x loop-over-{n_scen}-scenarios",
+            ))
+    return rows
+
+
 ALL_PAPER_BENCHES = [
     bench_demand_characterization,
     bench_commitment_fig4,
@@ -318,4 +391,5 @@ ALL_PAPER_BENCHES = [
     bench_forecast_quality,
     bench_portfolio_table2,
     bench_tournament,
+    bench_fleet_scale,
 ]

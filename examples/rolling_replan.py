@@ -28,7 +28,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import planner as pl
+from repro.core import api
 from repro.data import traces
 
 
@@ -48,12 +48,14 @@ def main():
         print(f"  {cloud:5s} {region:9s} {family:12s} "
               f"mean {row.mean():7.1f} peak {row.max():7.1f} chips")
 
-    rep = pl.plan_fleet_pools(
-        pools, mode="rolling",
-        cadence_weeks=2, start_weeks=26, horizon_weeks=6,
-        term_weighting=1.0,
+    rep = api.plan(api.PlanRequest(
+        pools=pools, mode="rolling",
+        rolling=api.RollingConfig(
+            cadence_weeks=2, start_weeks=26,
+        ),
+        horizon_weeks=6, term_weighting=1.0,
         migration=args.migration, convertible=args.migration or None,
-    )
+    ))
 
     print(f"\n== rolling replay (weeks {rep.weeks[0]}..{rep.weeks[-1]}, "
           f"cadence {rep.cadence_weeks}w) ==")
@@ -96,6 +98,25 @@ def main():
     last = slice(-8, None)
     print(f"\n  last-8-week spend: rolling {rep.weekly_cost[last].sum():.0f} "
           f"vs one-shot {rep.one_shot_weekly_cost[last].sum():.0f}")
+
+    # The same loop replayed over a batch of perturbed demand futures —
+    # one scan program carries (scenarios x pools); scenario 0 is the
+    # realized path, so the distribution brackets the replay above.
+    scen = api.plan(api.PlanRequest(
+        pools=pools, mode="rolling",
+        rolling=api.RollingConfig(cadence_weeks=2, start_weeks=26),
+        horizon_weeks=6, term_weighting=1.0,
+        migration=args.migration, convertible=args.migration or None,
+        scenarios=api.ScenarioConfig(n_scenarios=8, family="regime"),
+    ))
+    s = scen.summary()
+    print(f"\n== {scen.n_scenarios} regime-switch scenarios ==")
+    print(f"  cost   mean {s['scenario_cost_mean']:14.0f}  "
+          f"p95 {s['scenario_cost_p95']:14.0f}")
+    print(f"  CR     mean {s['scenario_cr_mean']:8.3f}  "
+          f"p95 {s['scenario_cr_p95']:8.3f}")
+    print(f"  regret mean {s['scenario_regret_mean']:14.0f}  "
+          f"p95 {s['scenario_regret_p95']:14.0f}")
 
 
 if __name__ == "__main__":

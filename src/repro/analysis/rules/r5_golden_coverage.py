@@ -1,8 +1,8 @@
 """R5 — golden coverage for optional subsystems.
 
 Every optional-subsystem keyword the planner stack exposes (``spot=``,
-``migration=``, ``convertible=``, ``policy=``) shipped with a hard
-guarantee: the
+``migration=``, ``convertible=``, ``policy=``, ``scenarios=``) shipped
+with a hard guarantee: the
 disabled path stays bit-identical to the pre-subsystem planner, proven by
 hardcoded golden tests.  This rule keeps that guarantee alive: for each
 watched kwarg that actually appears as a defaulted parameter somewhere in
@@ -10,6 +10,11 @@ watched kwarg that actually appears as a defaulted parameter somewhere in
 spelling (``<kw>=None`` or ``<kw>=False``) and (b) carry golden assertions
 (``golden`` in its text).  Drop the golden test and the next refactor can
 shift the disabled path without anything noticing.
+
+The same contract extends to *request surfaces*: redesigned entry points
+(:class:`~repro.core.api.PlanRequest`) promise bit-identity with the
+legacy kwarg spelling, so when a watched surface class is defined in the
+repo, some test must construct it alongside golden assertions.
 """
 
 from __future__ import annotations
@@ -19,7 +24,11 @@ import re
 
 from repro.analysis.engine import Finding, Rule
 
-WATCHED = ("spot", "migration", "convertible", "policy")
+WATCHED = ("spot", "migration", "convertible", "policy", "scenarios")
+
+#: Redesigned entry-point classes that must keep a construct-it golden
+#: test proving parity with the legacy spelling.
+WATCHED_SURFACES = ("PlanRequest",)
 
 
 def _kwargs_in_repo(ctx) -> dict[str, str]:
@@ -42,6 +51,20 @@ def _kwargs_in_repo(ctx) -> dict[str, str]:
     return found
 
 
+def _surfaces_in_repo(ctx) -> dict[str, str]:
+    """watched surface class -> file where it is defined."""
+    found: dict[str, str] = {}
+    for info in ctx.modules.values():
+        for node in ast.walk(info.tree):
+            if (
+                isinstance(node, ast.ClassDef)
+                and node.name in WATCHED_SURFACES
+                and node.name not in found
+            ):
+                found[node.name] = ctx.relpath(info.path)
+    return found
+
+
 def run(ctx) -> list[Finding]:
     findings: list[Finding] = []
     present = _kwargs_in_repo(ctx)
@@ -60,6 +83,22 @@ def run(ctx) -> list[Finding]:
                     f"{where}) has no disabled-path golden test: no test "
                     f"file references `{kw}=None`/`{kw}=False` alongside "
                     "golden assertions"
+                ),
+            ))
+    for name, where in sorted(_surfaces_in_repo(ctx).items()):
+        pat = re.compile(rf"\b{name}\s*\(")
+        covered = any(
+            pat.search(t.source) and "golden" in t.source.lower()
+            for t in ctx.tests.values()
+        )
+        if not covered:
+            findings.append(Finding(
+                rule="R5", file=where, line=0,
+                key=f"R5:surface:{name}",
+                message=(
+                    f"request surface `{name}` (defined in {where}) has "
+                    "no legacy-parity golden test: no test file "
+                    f"constructs `{name}(...)` alongside golden assertions"
                 ),
             ))
     return findings

@@ -1,5 +1,6 @@
 """Shaved Ice core: the paper's contribution as composable JAX modules.
 
+  api         — unified PlanRequest front door (one request in, plan out)
   demand      — §2 demand characterization + calibrated synthetic traces
   commitment  — §3.1-3.2 two-sided commitment cost + solvers
   forecast    — §3.3.3 structural forecaster (Prophet replacement)
@@ -14,6 +15,7 @@
 """
 
 from repro.core import (  # noqa: F401
+    api,
     commitment,
     demand,
     forecast,

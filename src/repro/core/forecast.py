@@ -281,6 +281,90 @@ def irls_refine(
     return beta
 
 
+def solve_prefix_adjusted(
+    state: PrefixFitState, week, gram_adj: jnp.ndarray, rhs_adj: jnp.ndarray
+) -> jnp.ndarray:
+    """Prefix fit with carried IRLS weight-adjustment moments.
+
+    The asymmetric weights ``w = 1 + (asym-1)[resid > 0]`` split the
+    weighted normal equations into the unweighted prefix sums (already in
+    ``state``) plus an adjustment accumulated only over under-forecast
+    hours: ``gram_adj (P, D, D)``, ``rhs_adj (P, D)``.  Solving
+
+        (gram_prefix[w] + gram_adj + ridge I) beta = rhs_prefix[w] + rhs_adj
+
+    reproduces a weighted fit without any O(T D^2) pass — the carried-
+    moments half of the incremental IRLS scheme (see
+    :func:`irls_carry_init` / :func:`irls_carry_extend`)."""
+    g = jax.lax.dynamic_index_in_dim(
+        state.gram_prefix, week - 1, axis=0, keepdims=False
+    )
+    r = jax.lax.dynamic_index_in_dim(
+        state.rhs_prefix, week - 1, axis=1, keepdims=False
+    )
+    eye = state.cfg.ridge * jnp.eye(g.shape[-1], dtype=g.dtype)
+    return jax.vmap(
+        lambda ga, ri: jnp.linalg.solve(g + ga + eye, ri)
+    )(gram_adj, r + rhs_adj)
+
+
+def irls_carry_init(
+    state: PrefixFitState, week: int, iters: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact IRLS adjustment moments on the ``week``-period start prefix.
+
+    Runs the full masked IRLS (matching :func:`irls_refine`) once at trace
+    time and returns the final iteration's weight-adjustment moments
+    ``(gram_adj (P, D, D), rhs_adj (P, D))``.  A replay seeds its scan
+    carry with these, then keeps them current with
+    :func:`irls_carry_extend` — O(period D^2) per replayed week instead of
+    ``iters`` full O(T D^2) passes."""
+    beta = solve_prefix(state, week)
+    xh = state.x[: state.num_hist_hours]
+    t = jnp.arange(state.num_hist_hours)
+    mask = (t < week * state.period_hours).astype(xh.dtype)
+    num_p, d = state.logy.shape[0], xh.shape[-1]
+    g_adj = jnp.zeros((num_p, d, d), xh.dtype)
+    r_adj = jnp.zeros((num_p, d), xh.dtype)
+    for _ in range(max(iters, 0)):
+        resid = state.logy - beta @ xh.T                     # (P, T)
+        wadj = (state.cfg.asym_weight - 1.0) * (resid > 0) * mask
+        g_adj = jnp.einsum("pt,td,te->pde", wadj, xh, xh)
+        r_adj = jnp.einsum("pt,td->pd", wadj * state.logy, xh)
+        beta = solve_prefix_adjusted(state, week, g_adj, r_adj)
+    return g_adj, r_adj
+
+
+def irls_carry_extend(
+    state: PrefixFitState,
+    beta: jnp.ndarray,
+    gram_adj: jnp.ndarray,
+    rhs_adj: jnp.ndarray,
+    week,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Extend carried IRLS moments with period ``week``'s demand block.
+
+    Classifies only the newest period's residuals under the *current*
+    ``beta`` and adds their asymmetric-weight contribution, so the moments
+    cover the ``week+1``-period prefix for the next refit.  Older periods
+    keep the classification they had when appended (frozen-weights IRLS) —
+    the approximation that buys O(period D^2)/week; the closeness test
+    pins it against the exact :func:`irls_refine` path.  Scan-safe
+    (``week`` may be traced)."""
+    ph = state.period_hours
+    xb = jax.lax.dynamic_slice_in_dim(
+        state.x, week * ph, ph, axis=0
+    )                                                        # (ph, D)
+    lb = jax.lax.dynamic_slice_in_dim(
+        state.logy, week * ph, ph, axis=1
+    )                                                        # (P, ph)
+    resid = lb - beta @ xb.T
+    wadj = (state.cfg.asym_weight - 1.0) * (resid > 0)
+    dg = jnp.einsum("pt,td,te->pde", wadj, xb, xb)
+    dr = jnp.einsum("pt,td->pd", wadj * lb, xb)
+    return gram_adj + dg, rhs_adj + dr
+
+
 def predict_from_beta(
     state: PrefixFitState, beta: jnp.ndarray, t_start, num_hours: int
 ) -> jnp.ndarray:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Literal
 
 import jax
@@ -392,22 +393,73 @@ def plan_fleet_pools(
     :class:`repro.core.policy.Policy`, a registry name such as
     ``"deterministic_hedge"``, or None for the paper's rolling portfolio
     loop.  ``policy=None`` (default) keeps the replay bit-identical to
-    the pre-policy planner (golden-tested)."""
-    if mode == "rolling":
-        from repro.core import replan
+    the pre-policy planner (golden-tested).
 
-        return replan.replan_fleet_pools(
-            pools, options, horizon_weeks=horizon_weeks, od_rate=od_rate,
-            term_weighting=term_weighting, cfg=cfg, spot=spot,
-            migration=migration, convertible=convertible, policy=policy,
-            **rolling_kw,
+    This is the *legacy* spelling, kept as a thin shim over the unified
+    request API: it builds the equivalent :class:`repro.core.api.PlanRequest`
+    and calls :func:`repro.core.api.plan`, so both spellings are
+    bit-identical by construction.  Loose rolling knobs in ``rolling_kw``
+    (``cadence_weeks=``, ``backend=``, ...) emit a ``DeprecationWarning``
+    pointing at ``RollingConfig``; new call sites should construct a
+    ``PlanRequest`` directly."""
+    from repro.core import api
+
+    if mode != "rolling":
+        if rolling_kw:
+            raise TypeError(
+                "unexpected arguments for mode='one_shot': "
+                f"{sorted(rolling_kw)}"
+            )
+        if policy is not None:
+            raise TypeError("policy= applies to mode='rolling' only")
+        request = api.PlanRequest(
+            pools=pools, options=options, mode="one_shot",
+            horizon_weeks=horizon_weeks, od_rate=od_rate,
+            term_weighting=term_weighting, forecast=cfg, spot=spot,
+            migration=migration, convertible=convertible,
+        )
+        return api.plan(request)
+
+    scenarios = rolling_kw.pop("scenarios", None)
+    rolling_fields = {f.name for f in dataclasses.fields(api.RollingConfig)}
+    unknown = set(rolling_kw) - rolling_fields
+    if unknown:
+        raise TypeError(
+            f"unexpected arguments for mode='rolling': {sorted(unknown)}"
         )
     if rolling_kw:
-        raise TypeError(
-            f"unexpected arguments for mode='one_shot': {sorted(rolling_kw)}"
+        warnings.warn(
+            "passing rolling-replay knobs as loose keyword arguments "
+            f"({sorted(rolling_kw)}) is deprecated; build a "
+            "repro.core.api.PlanRequest with rolling=RollingConfig(...) "
+            "and call repro.core.api.plan()",
+            DeprecationWarning,
+            stacklevel=2,
         )
-    if policy is not None:
-        raise TypeError("policy= applies to mode='rolling' only")
+    request = api.PlanRequest(
+        pools=pools, options=options, mode="rolling",
+        horizon_weeks=horizon_weeks, od_rate=od_rate,
+        term_weighting=term_weighting, forecast=cfg, spot=spot,
+        migration=migration, convertible=convertible, policy=policy,
+        scenarios=scenarios, rolling=api.RollingConfig(**rolling_kw),
+    )
+    return api.plan(request)
+
+
+def _plan_fleet_pools_one_shot(
+    pools: dm.PoolSet,
+    options: list[pf.PurchaseOption] | None = None,
+    *,
+    horizon_weeks: int = 8,
+    od_rate: float | None = None,
+    term_weighting: float = 0.0,
+    cfg: fc.ForecastConfig = fc.ForecastConfig(),
+    spot: "spot_mod.SpotConfig | bool | None" = None,
+    migration: "gn.MigrationConfig | bool | None" = None,
+    convertible: "list[pf.PurchaseOption] | bool | None" = None,
+) -> FleetPoolsPlan:
+    """The one-shot planning pipeline behind :func:`repro.core.api.plan`
+    (see :func:`plan_fleet_pools` for the full narrative docstring)."""
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
     eval_hours = horizon_weeks * HOURS_PER_WEEK

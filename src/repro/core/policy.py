@@ -97,6 +97,10 @@ class PolicyContext:
     state: fc.PrefixFitState
     solve_fn: Callable           # (state, week) -> beta  (scan or loop)
     irls_iters: int = 0
+    #: carry the IRLS weight-adjustment moments in the scan state
+    #: (frozen-weights incremental IRLS) instead of re-running full
+    #: masked passes per week — see ``fc.irls_carry_init``.
+    irls_carry: bool = False
     # yhat (P, Wh*168) -> (targets (P, K), spot floor (P,) | None)
     targets_for: Callable | None = None
     # migration hook: (yhat, week) -> recomposed yhat
@@ -170,10 +174,28 @@ class RollingPortfolioPolicy(Policy):
     forecasting = True
 
     def setup(self, ctx: PolicyContext):
+        carry_irls = ctx.irls_carry and ctx.irls_iters > 0
+        # Incremental IRLS: seed the scan state with the exact adjustment
+        # moments on the start prefix; each week then solves against
+        # prefix + carried moments and appends only the newest week's
+        # block.  Off (the default) the pstate stays () and the compiled
+        # program is unchanged.
+        pstate0 = (
+            fc.irls_carry_init(ctx.state, ctx.start_weeks, ctx.irls_iters)
+            if carry_irls else ()
+        )
+
         def decide(pstate, obs: Observation):
             w = obs.week
-            beta = ctx.solve_fn(ctx.state, w)
-            beta = fc.irls_refine(ctx.state, beta, w, ctx.irls_iters)
+            if carry_irls:
+                g_adj, r_adj = pstate
+                beta = fc.solve_prefix_adjusted(ctx.state, w, g_adj, r_adj)
+                pstate = fc.irls_carry_extend(
+                    ctx.state, beta, g_adj, r_adj, w
+                )
+            else:
+                beta = ctx.solve_fn(ctx.state, w)
+                beta = fc.irls_refine(ctx.state, beta, w, ctx.irls_iters)
             yhat = fc.predict_from_beta(
                 ctx.state, beta, w * HOURS_PER_WEEK, ctx.horizon_hours
             )
@@ -184,7 +206,7 @@ class RollingPortfolioPolicy(Policy):
                 targets, floor, yhat, self._is_decision(ctx, w)
             )
 
-        return (), decide
+        return pstate0, decide
 
 
 class OneShotPolicy(RollingPortfolioPolicy):

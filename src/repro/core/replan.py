@@ -44,6 +44,19 @@ The report compares three operating points on the same evaluation window:
 Pallas kernel on TPU via ``use_kernel=True``) instead of the shared-sort
 quantile path — the K-option generalization of Algorithm 1's 52 weight
 patterns.
+
+``scenarios=`` batches the whole replay over N sampled demand futures
+(``data.scenarios.ScenarioConfig``): the (N, P) block is *flattened* into
+the scan's pool-row axis — every per-pool op in the harness is already
+row-elementwise or vmapped, so N x P rows ride the same compiled program
+(cost lines, spot lines and policy pstates tile per scenario; migration
+edges re-index into each scenario's row block; the convertible membership
+goes block-diagonal so capacity never pools across futures).  Scenario 0
+is always the realized trace, ladders are built from it, and
+``n_scenarios=1`` is bit-identical to the unbatched replay (golden-
+tested).  Rows are sharded over local devices (``launch.mesh``) when more
+than one exists, and ``ScenarioConfig.chunk`` splits very large N into
+sequential compiled chunks on one host.
 """
 
 from __future__ import annotations
@@ -72,6 +85,8 @@ from repro.core.planner import (
     _prefix_weighted_quantiles,
 )
 from repro.core.portfolio import allocate_convertible  # noqa: F401  (API)
+from repro.data import scenarios as sc
+from repro.launch import mesh as mesh_mod
 
 pricing.validate_tables()
 
@@ -138,10 +153,24 @@ class RollingPlanReport:
     conv_ladders: ld.PoolLadderBook | None = None     # cloud-level book
     # Which policy drove the weekly decisions (``core.policy``).
     policy_name: str = "rolling_portfolio"
+    # Scenario batch (fields None / axis absent on single-path replays):
+    # with a ScenarioConfig of n_scenarios > 1 every per-week array above
+    # gains an N axis at position 1 — (S, N, P, K) etc., clouds axes
+    # (S, N, C, Kc) — ``hindsight_widths`` becomes (N, P, K), the baseline
+    # weekly costs (S, N), and the scalar aggregates (``total_cost``,
+    # ``*_cost``) are MEANS over scenarios.  Ladders are always built from
+    # scenario 0, the realized trace.
+    n_scenarios: int = 1
+    scenario_family: str | None = None
+    scenario_cost: np.ndarray | None = None            # (N,) replay cost
+    scenario_one_shot_cost: np.ndarray | None = None   # (N,)
+    scenario_hindsight_cost: np.ndarray | None = None  # (N,)
+    scenario_cr: np.ndarray | None = None              # (N,) cost/hindsight
+    scenario_regret: np.ndarray | None = None          # (N,) cost-hindsight
 
     @property
     def weekly_cost(self) -> np.ndarray:
-        """(S,) fleet-total spend per week."""
+        """(S,) fleet-total spend per week ((S, N) when scenario-batched)."""
         total = self.committed_cost + self.on_demand_cost
         if self.spot_cost is not None:
             total = total + self.spot_cost
@@ -171,7 +200,105 @@ class RollingPlanReport:
         if self.hindsight_cost is not None:
             out["hindsight_cost"] = self.hindsight_cost
             out["regret_vs_hindsight"] = self.regret_vs_hindsight
+        if self.n_scenarios > 1:
+            out["n_scenarios"] = self.n_scenarios
+            out["scenario_cost_mean"] = float(self.scenario_cost.mean())
+            out["scenario_cost_p95"] = float(
+                np.quantile(self.scenario_cost, 0.95)
+            )
+            if self.scenario_cr is not None:
+                out["scenario_cr_mean"] = float(self.scenario_cr.mean())
+                out["scenario_cr_p95"] = float(
+                    np.quantile(self.scenario_cr, 0.95)
+                )
+                out["scenario_regret_mean"] = float(
+                    self.scenario_regret.mean()
+                )
+                out["scenario_regret_p95"] = float(
+                    np.quantile(self.scenario_regret, 0.95)
+                )
         return out
+
+
+def _tile_edges(edges: gn.MigrationEdges, n: int, p: int) -> gn.MigrationEdges:
+    """Replicate one fleet's migration edges onto the flattened
+    (N scenarios x P pools) row axis: scenario s's copy of edge g joins
+    rows ``src[g] + s*p -> dst[g] + s*p`` — scenarios never exchange
+    demand."""
+    off = (jnp.arange(n, dtype=jnp.int32) * p)[:, None]
+    return dataclasses.replace(
+        edges,
+        src=(edges.src[None, :] + off).reshape(-1),
+        dst=(edges.dst[None, :] + off).reshape(-1),
+        uplift=jnp.tile(edges.uplift, n),
+        inv_gain=jnp.tile(edges.inv_gain, n),
+        midpoint_hours=jnp.tile(edges.midpoint_hours, n),
+        rate_per_hour=jnp.tile(edges.rate_per_hour, n),
+    )
+
+
+def _merge_scenario_reports(
+    parts: list[RollingPlanReport],
+) -> RollingPlanReport:
+    """Stitch chunked scenario replays (``ScenarioConfig.chunk``) back into
+    one report: per-week arrays concatenate along the scenario axis,
+    per-scenario distributions along N, and the scalar aggregates are
+    recomputed as means over the full scenario set.  Ladders (always built
+    from scenario 0) come from the first chunk."""
+    first = parts[0]
+
+    def cat(name: str, axis: int):
+        vals = [getattr(p, name) for p in parts]
+        return None if vals[0] is None else np.concatenate(vals, axis=axis)
+
+    ns = np.asarray([p.n_scenarios for p in parts], np.float64)
+    rep = dataclasses.replace(
+        first,
+        targets=cat("targets", 1),
+        increments=cat("increments", 1),
+        active=cat("active", 1),
+        committed_cost=cat("committed_cost", 1),
+        on_demand_cost=cat("on_demand_cost", 1),
+        utilization=cat("utilization", 1),
+        spot_floor=cat("spot_floor", 1),
+        spot_cost=cat("spot_cost", 1),
+        spot_volume=cat("spot_volume", 1),
+        conv_targets=cat("conv_targets", 1),
+        conv_increments=cat("conv_increments", 1),
+        conv_active=cat("conv_active", 1),
+        conv_alloc=cat("conv_alloc", 1),
+        conv_committed_cost=cat("conv_committed_cost", 1),
+        one_shot_weekly_cost=cat("one_shot_weekly_cost", 1),
+        hindsight_weekly_cost=cat("hindsight_weekly_cost", 1),
+        hindsight_widths=cat("hindsight_widths", 0),
+        scenario_cost=cat("scenario_cost", 0),
+        scenario_one_shot_cost=cat("scenario_one_shot_cost", 0),
+        scenario_hindsight_cost=cat("scenario_hindsight_cost", 0),
+        scenario_cr=cat("scenario_cr", 0),
+        scenario_regret=cat("scenario_regret", 0),
+        n_scenarios=int(ns.sum()),
+    )
+    rep.total_cost = float(rep.scenario_cost.mean())
+    rep.all_on_demand_cost = float(np.average(
+        [p.all_on_demand_cost for p in parts], weights=ns
+    ))
+    rep.savings_vs_on_demand = (
+        1.0 - rep.total_cost / rep.all_on_demand_cost
+        if rep.all_on_demand_cost > 0 else 0.0
+    )
+    if rep.scenario_one_shot_cost is not None:
+        rep.one_shot_cost = float(rep.scenario_one_shot_cost.mean())
+        rep.savings_vs_one_shot = (
+            1.0 - rep.total_cost / rep.one_shot_cost
+            if rep.one_shot_cost > 0 else 0.0
+        )
+    if rep.scenario_hindsight_cost is not None:
+        rep.hindsight_cost = float(rep.scenario_hindsight_cost.mean())
+        rep.regret_vs_hindsight = (
+            rep.total_cost / rep.hindsight_cost - 1.0
+            if rep.hindsight_cost > 0 else 0.0
+        )
+    return rep
 
 
 def _validate(total_weeks: int, start_weeks: int, cadence_weeks: int):
@@ -204,6 +331,9 @@ def replan_fleet_pools(
     migration: "gn.MigrationConfig | bool | None" = None,
     convertible: "list[pf.PurchaseOption] | bool | None" = None,
     policy: "pol.Policy | str | None" = None,
+    scenarios: "sc.ScenarioConfig | int | None" = None,
+    irls_carry: bool = False,
+    _scen_slice: tuple[int, int] | None = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
 
@@ -261,6 +391,16 @@ def replan_fleet_pools(
     forecast-free and run commitments-only.  The ``compare`` baselines
     always replay the standard one-shot and hindsight references,
     whichever policy drives the main replay.
+
+    ``scenarios`` batches the replay over N demand futures derived from
+    the realized trace (``data.scenarios.ScenarioConfig``; an int means
+    that many "realized" copies).  The (N, P) block is flattened into the
+    scan's row axis, so one compiled program replays every scenario;
+    reports grow per-scenario cost/CR/regret distributions and an N axis
+    on the per-week arrays (see :class:`RollingPlanReport`).
+    ``irls_carry`` makes ``irls_iters > 0`` cheap inside the replay by
+    carrying the asymmetric-weight moments in the scan state (frozen-
+    weights incremental IRLS) instead of full masked passes per week.
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -270,18 +410,65 @@ def replan_fleet_pools(
                           max(total_weeks - 1, 1))
     _validate(total_weeks, start_weeks, cadence_weeks)
 
+    scen = sc.resolve_scenarios(scenarios)
+    if (
+        scen is not None and _scen_slice is None
+        and scen.chunk is not None and scen.chunk < scen.n_scenarios
+    ):
+        # Memory relief on one host: sequential compiled chunks over
+        # scenario sub-batches, merged back into one report.
+        parts = [
+            replan_fleet_pools(
+                pools, options, cadence_weeks=cadence_weeks,
+                start_weeks=start_weeks, horizon_weeks=horizon_weeks,
+                od_rate=od, term_weighting=term_weighting, cfg=cfg,
+                solver=solver, num_grid=num_grid, use_kernel=use_kernel,
+                irls_iters=irls_iters, backend=backend, compare=compare,
+                spot=spot, migration=migration, convertible=convertible,
+                policy=policy, scenarios=scen, irls_carry=irls_carry,
+                _scen_slice=(lo, min(lo + scen.chunk, scen.n_scenarios)),
+            )
+            for lo in range(0, scen.n_scenarios, scen.chunk)
+        ]
+        return _merge_scenario_reports(parts)
+
     num_pools, num_opts = pools.num_pools, len(options)
     horizon_hours = horizon_weeks * HOURS_PER_WEEK
     t_hist = total_weeks * HOURS_PER_WEEK
     demand = jnp.asarray(pools.demand[:, :t_hist], jnp.float32)
+    if scen is None:
+        num_scen = 1
+        row_clouds = pools.clouds
+    else:
+        lo, hi = (
+            _scen_slice if _scen_slice is not None
+            else (0, scen.n_scenarios)
+        )
+        batch = sc.scenario_batch(pools.demand[:, :t_hist], scen)[lo:hi]
+        num_scen = batch.shape[0]
+        # Flatten (N, P) -> N*P rows: every per-pool op in the harness is
+        # row-elementwise or vmapped, so the scenario axis rides the pool
+        # axis through one compiled scan.  Scenario 0 (the realized trace)
+        # occupies the first P rows; rows shard over local devices when
+        # more than one exists (no-op, bit-identical, on one device).
+        demand = mesh_mod.shard_rows(jnp.asarray(
+            batch.reshape(num_scen * num_pools, t_hist), jnp.float32
+        ))
+        row_clouds = pools.clouds * num_scen
+    num_rows = demand.shape[0]
+    # The scenario axis materializes on report arrays only for a true
+    # batch (chunked sub-replays always carry it so chunks concatenate).
+    scen_axis = scen is not None and (
+        num_scen > 1 or _scen_slice is not None
+    )
 
     al_p, be_p, avail_p = pf.pool_option_lines(
-        options, pools.clouds, term_weighting=term_weighting, od_rate=od
+        options, row_clouds, term_weighting=term_weighting, od_rate=od
     )
     qs = jax.vmap(
         functools.partial(pf.handover_fractiles, od_rate=od)
     )(al_p, be_p)                                              # (P, K)
-    sp_res = spot_mod.resolve_spot(spot, pools.clouds, od_rate=od)
+    sp_res = spot_mod.resolve_spot(spot, row_clouds, od_rate=od)
     if sp_res is not None:
         s_cfg, s_lines = sp_res
         u_env = jax.vmap(
@@ -301,6 +488,8 @@ def replan_fleet_pools(
         gn.migration_edges(pools.keys, mig_cfg)
         if mig_cfg is not None else None
     )
+    if edges is not None and num_scen > 1:
+        edges = _tile_edges(edges, num_scen, num_pools)
     use_mig = edges is not None and edges.num_edges > 0
     fit_demand = mg.transform_for_fit(demand, edges) if use_mig else demand
 
@@ -314,6 +503,29 @@ def replan_fleet_pools(
             )
         )
         num_clouds, num_conv = len(conv_clouds), len(conv_opts)
+        if num_scen > 1:
+            # Each scenario owns a private copy of the cloud axis —
+            # convertible capacity must not pool across futures that
+            # never co-occur.  The per-cloud lines tile; the membership
+            # matrix stays (C, P) and is applied per scenario block (see
+            # ``pool_to_cloud``) so the cloud-total contraction runs over
+            # exactly P terms — the same float reduction order as the
+            # unbatched replay, keeping scenario 0 bit-identical.
+            al_c = jnp.tile(al_c, (num_scen, 1))
+            be_c = jnp.tile(be_c, (num_scen, 1))
+            qs_c = jnp.tile(qs_c, (num_scen, 1))
+        num_cloud_rows = num_clouds * num_scen
+
+        def pool_to_cloud(v):
+            """Aggregate per-pool rows (R, ...) onto the per-scenario
+            cloud rows (N*C, ...) — block-diagonal membership without a
+            widened contraction."""
+            if num_scen == 1:
+                return member @ v
+            vs = v.reshape(num_scen, num_pools, *v.shape[1:])
+            out = jnp.einsum("cp,sp...->sc...", member, vs)
+            return out.reshape(num_cloud_rows, *v.shape[1:])
+
         conv_rates = jnp.asarray(
             [o.rate for o in conv_opts], jnp.float32
         )
@@ -349,7 +561,7 @@ def replan_fleet_pools(
         )
         if use_mig else None
     )
-    demand_wk = demand.reshape(num_pools, total_weeks, HOURS_PER_WEEK)
+    demand_wk = demand.reshape(num_rows, total_weeks, HOURS_PER_WEEK)
 
     def grid_prefix_levels(yhat, al, be, num_rows, num_k):
         """Per-horizon stack tops via the over/under sweep on prefix-mask
@@ -392,7 +604,7 @@ def replan_fleet_pools(
         horizon binds it) rides along as the fast-capacity decision."""
         if solver == "grid":
             per_h = grid_prefix_levels(
-                yhat, al_p, be_p, num_pools, num_opts
+                yhat, al_p, be_p, num_rows, num_opts
             )
         else:
             per_h = jax.vmap(
@@ -421,10 +633,10 @@ def replan_fleet_pools(
         pool targets: convertible buys exactly the band that is safe at
         cloud level but pinnable to no single family — the volume that
         migrates."""
-        total_c = member @ yhat                              # (C, H)
+        total_c = pool_to_cloud(yhat)                        # (C, H)
         if solver == "grid":
             per_h = grid_prefix_levels(
-                total_c, al_c, be_c, num_clouds, num_conv
+                total_c, al_c, be_c, num_cloud_rows, num_conv
             )
         else:
             per_h = jax.vmap(
@@ -434,7 +646,7 @@ def replan_fleet_pools(
             lambda ph, q: _monotone_stack(ph, q, conv_terms, horizon_weeks)
         )(per_h, qs_c)                                       # (C, Kc) x2
         return pf.truncate_convertible_stack(
-            tops_c, widths_c, member @ pool_top
+            tops_c, widths_c, pool_to_cloud(pool_top)
         )                                                    # (C, Kc)
 
     # Migration recomposition as the policy hook: pair totals x rolling
@@ -454,12 +666,13 @@ def replan_fleet_pools(
         configured solver (quantile or grid sweep) and the spot floors;
         ``compose_forecast`` the migration recomposition."""
         return pol.PolicyContext(
-            demand=demand, options=options, clouds=pools.clouds, od=od,
+            demand=demand, options=options, clouds=row_clouds, od=od,
             rates=rates, term_weeks=term_weeks, avail=avail_p, qs=qs,
             w_hours=w_hours, start_weeks=start_weeks,
             cadence_weeks=cadence, horizon_weeks=horizon_weeks,
             total_weeks=total_weeks, state=state, solve_fn=solve_fn,
-            irls_iters=irls_iters, targets_for=targets_for,
+            irls_iters=irls_iters, irls_carry=irls_carry,
+            targets_for=targets_for,
             compose_forecast=compose_forecast,
         )
 
@@ -537,9 +750,19 @@ def replan_fleet_pools(
                 # would leave the diurnal peaks billing at on-demand.
                 week1 = yhat[:, :HOURS_PER_WEEK].max(-1)
                 need = jnp.maximum(week1 - active.sum(-1), 0.0)
-                alloc = allocate_convertible(
-                    active_c.sum(-1), need, member
-                )
+                if num_scen == 1:
+                    alloc = allocate_convertible(
+                        active_c.sum(-1), need, member
+                    )
+                else:
+                    # Per-scenario-block allocation with the base (C, P)
+                    # membership — same program per block as unbatched.
+                    alloc = jax.vmap(
+                        lambda wv, nv: allocate_convertible(wv, nv, member)
+                    )(
+                        active_c.sum(-1).reshape(num_scen, num_clouds),
+                        need.reshape(num_scen, num_pools),
+                    ).reshape(num_rows)
                 desired = jnp.maximum(widths - active, 0.0)
                 lift = desired.sum(-1)                     # (P,)
                 scale = jnp.where(
@@ -609,16 +832,16 @@ def replan_fleet_pools(
         return step, pstate0
 
     def replay(cadence: int, which: str, step_policy: pol.Policy):
-        active0 = jnp.zeros((num_pools, num_opts), jnp.float32)
-        rolloff0 = jnp.zeros((num_pools, num_opts, sched_len), jnp.float32)
+        active0 = jnp.zeros((num_rows, num_opts), jnp.float32)
+        rolloff0 = jnp.zeros((num_rows, num_opts, sched_len), jnp.float32)
         if which == "scan":
             step, pstate0 = make_step(cadence, fc.solve_prefix, step_policy)
             carry0 = (active0, rolloff0, pstate0)
             if conv_opts is not None:
                 carry0 = carry0 + (
-                    jnp.zeros((num_clouds, num_conv), jnp.float32),
+                    jnp.zeros((num_cloud_rows, num_conv), jnp.float32),
                     jnp.zeros(
-                        (num_clouds, num_conv, sched_len), jnp.float32
+                        (num_cloud_rows, num_conv, sched_len), jnp.float32
                     ),
                 )
             ws = jnp.arange(start_weeks, total_weeks)
@@ -632,8 +855,10 @@ def replan_fleet_pools(
         carry0 = (active0, rolloff0, pstate0)
         if conv_opts is not None:
             carry0 = carry0 + (
-                jnp.zeros((num_clouds, num_conv), jnp.float32),
-                jnp.zeros((num_clouds, num_conv, sched_len), jnp.float32),
+                jnp.zeros((num_cloud_rows, num_conv), jnp.float32),
+                jnp.zeros(
+                    (num_cloud_rows, num_conv, sched_len), jnp.float32
+                ),
             )
         carry, outs = carry0, []
         for w in range(start_weeks, total_weeks):
@@ -657,7 +882,11 @@ def replan_fleet_pools(
     # replays the scan's realized post-purchase stack instead.
     targets_full = np.zeros((num_pools, total_weeks, num_opts), np.float32)
     dec = ys.pop("is_dec").astype(bool)    # the policy's decision weeks
-    book_targets = ys["target"] if conv_opts is None else ys["active"]
+    # Books always replay scenario 0 — the realized trace, i.e. the first
+    # P rows of the flattened batch (the whole batch on single-path runs).
+    book_targets = (
+        ys["target"] if conv_opts is None else ys["active"]
+    )[:, :num_pools]
     targets_full[:, weeks[dec]] = np.swapaxes(book_targets[dec], 0, 1)
     term_hours = np.asarray(
         [o.term_weeks * HOURS_PER_WEEK for o in options]
@@ -673,6 +902,44 @@ def replan_fleet_pools(
         total += float(ys["conv_committed"].sum())
     eval_demand = demand[:, start_weeks * HOURS_PER_WEEK:]
     all_od = od * float(eval_demand.sum())
+    scen_cost = None
+    if scen is not None:
+        # Per-scenario replay cost, sliced row-block by row-block in the
+        # same summation order as the single-path totals — so the N=1
+        # realized batch reproduces them bit for bit — and the scalar
+        # aggregates become means over scenarios.
+        def _srows(a, s, rows=num_pools):
+            return a[:, s * rows:(s + 1) * rows]
+
+        def _scen_total(s):
+            cs = float(
+                _srows(ys["committed"], s).sum() + _srows(ys["od"], s).sum()
+            )
+            if sp_res is not None:
+                cs += float(_srows(ys["spot"], s).sum())
+            if conv_opts is not None:
+                cs += float(
+                    _srows(ys["conv_committed"], s, num_clouds).sum()
+                )
+            return cs
+
+        scen_cost = np.asarray([_scen_total(s) for s in range(num_scen)])
+        scen_all_od = np.asarray([
+            od * float(
+                eval_demand[s * num_pools:(s + 1) * num_pools].sum()
+            )
+            for s in range(num_scen)
+        ])
+        total = float(scen_cost.mean())
+        all_od = float(scen_all_od.mean())
+
+    def _rep(a, rows=num_pools):
+        """Report view of a per-week (S, R, ...) array: insert the N axis
+        on true scenario batches, pass through otherwise."""
+        if not scen_axis:
+            return a
+        return a.reshape(a.shape[0], num_scen, rows, *a.shape[2:])
+
     report = RollingPlanReport(
         keys=pools.keys,
         options=options,
@@ -680,29 +947,33 @@ def replan_fleet_pools(
         start_weeks=start_weeks,
         horizon_weeks=horizon_weeks,
         weeks=weeks,
-        targets=ys["target"],
-        increments=ys["inc"],
-        active=ys["active"],
-        committed_cost=ys["committed"],
-        on_demand_cost=ys["od"],
-        utilization=ys["util"],
+        targets=_rep(ys["target"]),
+        increments=_rep(ys["inc"]),
+        active=_rep(ys["active"]),
+        committed_cost=_rep(ys["committed"]),
+        on_demand_cost=_rep(ys["od"]),
+        utilization=_rep(ys["util"]),
         ladders=ladders,
         total_cost=total,
         all_on_demand_cost=all_od,
         savings_vs_on_demand=1.0 - total / all_od if all_od > 0 else 0.0,
         policy_name=pcy.name,
+        n_scenarios=num_scen,
+        scenario_family=scen.family if scen is not None else None,
+        scenario_cost=scen_cost,
     )
     if sp_res is not None:
         report.spot_config = s_cfg
         report.spot_lines = s_lines
-        report.spot_floor = ys["floor"]
-        report.spot_cost = ys["spot"]
-        report.spot_volume = ys["spot_vol"]
+        report.spot_floor = _rep(ys["floor"])
+        report.spot_cost = _rep(ys["spot"])
+        report.spot_volume = _rep(ys["spot_vol"])
         # The fast half of the split as a tranche book: spot is a ladder
         # whose every tranche lasts exactly one period (re-decided, never
-        # carried), sized at the week's peak spot usage.
+        # carried), sized at the week's peak spot usage (scenario 0).
         report.spot_ladders = ld.spot_ladder_book(
-            ys["spot_peak"], pools.keys, start_week=start_weeks
+            ys["spot_peak"][:, :num_pools], pools.keys,
+            start_week=start_weeks,
         )
     if use_mig:
         report.migration_config = mig_cfg
@@ -710,19 +981,19 @@ def replan_fleet_pools(
     if conv_opts is not None:
         report.conv_options = conv_opts
         report.conv_clouds = tuple(conv_clouds)
-        report.conv_targets = ys["conv_target"]
-        report.conv_increments = ys["conv_inc"]
-        report.conv_active = ys["conv_active"]
-        report.conv_alloc = ys["conv_alloc"]
-        report.conv_committed_cost = ys["conv_committed"]
+        report.conv_targets = _rep(ys["conv_target"], num_clouds)
+        report.conv_increments = _rep(ys["conv_inc"], num_clouds)
+        report.conv_active = _rep(ys["conv_active"], num_clouds)
+        report.conv_alloc = _rep(ys["conv_alloc"])
+        report.conv_committed_cost = _rep(ys["conv_committed"], num_clouds)
         # The cloud-level tranche book: same increment-only semantics as
         # the pool book, so its live widths must reconcile with the scan's
-        # carried cloud-level stack every week (tested).
+        # carried cloud-level stack every week (tested).  Scenario 0 rows.
         conv_full = np.zeros(
             (len(conv_clouds), total_weeks, len(conv_opts)), np.float32
         )
         conv_full[:, weeks[dec]] = np.swapaxes(
-            ys["conv_target"][dec], 0, 1
+            ys["conv_target"][:, :num_clouds][dec], 0, 1
         )
         report.conv_ladders = ld.convertible_ladder_book(
             conv_full,
@@ -740,13 +1011,23 @@ def replan_fleet_pools(
     # driven by the standard rolling policy so a custom ``policy=`` is
     # still scored against the paper's reference points.
     one = replay(0, "scan", pol.RollingPortfolioPolicy())
-    one_weekly = np.asarray(one["committed"] + one["od"]).sum(-1)
+    one_weekly = _rep(np.asarray(one["committed"] + one["od"])).sum(-1)
     if sp_res is not None:
-        one_weekly = one_weekly + np.asarray(one["spot"]).sum(-1)
+        one_weekly = one_weekly + _rep(np.asarray(one["spot"])).sum(-1)
     if conv_opts is not None:
-        one_weekly = one_weekly + np.asarray(one["conv_committed"]).sum(-1)
+        one_weekly = one_weekly + _rep(
+            np.asarray(one["conv_committed"]), num_clouds
+        ).sum(-1)
     report.one_shot_weekly_cost = one_weekly
-    report.one_shot_cost = float(one_weekly.sum())
+    if scen is not None:
+        scen_one = (
+            one_weekly.sum(0) if scen_axis
+            else np.asarray([one_weekly.sum()])
+        )
+        report.scenario_one_shot_cost = scen_one
+        report.one_shot_cost = float(scen_one.mean())
+    else:
+        report.one_shot_cost = float(one_weekly.sum())
     report.savings_vs_one_shot = (
         1.0 - total / report.one_shot_cost
         if report.one_shot_cost > 0 else 0.0
@@ -756,21 +1037,37 @@ def replan_fleet_pools(
     # (billing lines, i.e. term_weighting=0: every active tranche bills its
     # rate; expiring short tranches are repurchased back-to-back).
     al0, be0, _ = pf.pool_option_lines(
-        options, pools.clouds, term_weighting=0.0, od_rate=od
+        options, row_clouds, term_weighting=0.0, od_rate=od
     )
     hs = jax.vmap(
         lambda f_, a_, b_: pf.optimal_portfolio_stack(f_, a_, b_, od_rate=od)
     )(eval_demand, al0, be0)
     hs_widths = np.asarray(hs.widths)
     hs_level = hs_widths.sum(-1)
-    ed_wk = np.asarray(eval_demand).reshape(num_pools, len(weeks),
+    ed_wk = np.asarray(eval_demand).reshape(num_rows, len(weeks),
                                             HOURS_PER_WEEK)
     hs_over = np.maximum(ed_wk - hs_level[:, None, None], 0.0).sum(-1)
     hs_committed = (np.asarray(rates) * hs_widths).sum(-1) * HOURS_PER_WEEK
-    hs_weekly = hs_committed[:, None] + od * hs_over      # (P, S)
+    hs_weekly = hs_committed[:, None] + od * hs_over      # (R, S)
     report.hindsight_widths = hs_widths
     report.hindsight_weekly_cost = hs_weekly.sum(0)
     report.hindsight_cost = float(hs_weekly.sum())
+    if scen is not None:
+        scen_hind = np.asarray([
+            float(hs_weekly[s * num_pools:(s + 1) * num_pools].sum())
+            for s in range(num_scen)
+        ])
+        report.scenario_hindsight_cost = scen_hind
+        report.hindsight_cost = float(scen_hind.mean())
+        report.scenario_cr = scen_cost / scen_hind
+        report.scenario_regret = scen_cost - scen_hind
+        if scen_axis:
+            report.hindsight_widths = hs_widths.reshape(
+                num_scen, num_pools, num_opts
+            )
+            report.hindsight_weekly_cost = hs_weekly.reshape(
+                num_scen, num_pools, len(weeks)
+            ).sum(1).T                                    # (S, N)
     report.regret_vs_hindsight = (
         total / report.hindsight_cost - 1.0
         if report.hindsight_cost > 0 else 0.0

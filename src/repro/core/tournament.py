@@ -44,6 +44,7 @@ from repro.core import policy as pol
 from repro.core import portfolio as pf
 from repro.core.demand import HOURS_PER_WEEK
 from repro.data import scenarios as sc
+from repro.launch import mesh as mesh_mod
 
 pricing.validate_tables()
 
@@ -226,9 +227,12 @@ def run_tournament(
         for f in families
     ])                                      # (F, N, P, T)
     num_f = len(families)
-    flat = jnp.asarray(
+    # Shard the (F*N) path axis across local devices when available (no-op
+    # on one device): the vmapped replays are embarrassingly parallel per
+    # path, so placing the batch once shards every policy's program.
+    flat = mesh_mod.shard_rows(jnp.asarray(
         paths.reshape(num_f * num_seeds, num_pools, -1), jnp.float32
-    )
+    ))
 
     solve_fn = (
         fc.solve_prefix if backend == "scan" else fc.solve_prefix_direct

@@ -27,6 +27,8 @@ trend sign, ...), and every path is a pure function of
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import numpy as np
 
@@ -36,6 +38,25 @@ from repro.core.demand import HOURS_PER_WEEK
 FAMILIES: tuple[str, ...] = (
     "steady", "burst", "cyclic", "declining", "unpredictable",
 )
+
+#: Perturbation families for :func:`scenario_batch` — transforms of the
+#: *realized* trace (scenario 0 is always the realized path verbatim):
+#:
+#:     realized   N identical copies of the realized trace (the batching
+#:                identity: ``n_scenarios=1`` IS today's single-path replay)
+#:     burst      rare short multiplicative spikes (the §2 burst transform)
+#:     regime     piecewise-constant level shifts (the unpredictable
+#:                transform) — demand migrates without warning
+#:     growth     a seeded exponential drift ramp, up or down
+#:     scale      one lognormal level multiplier per pool — "our forecast
+#:                of absolute fleet size is off by x%"
+PERTURBATIONS: tuple[str, ...] = (
+    "realized", "burst", "regime", "growth", "scale",
+)
+
+# Growth/scale perturbation knobs (annualized drift range, level sigma).
+GROWTH_RANGE = (-0.35, 0.45)
+SCALE_SIGMA = 0.20
 
 _CLOUDS = ("aws", "azure", "gcp")
 
@@ -120,6 +141,99 @@ def _transform(
         )
         return y * levels
     return y
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Scenario axis of the batched rolling replay (``scenarios=`` on
+    ``replan_fleet_pools`` / ``PlanRequest.scenarios``).
+
+    ``n_scenarios`` demand futures are derived from the realized trace by
+    the ``family`` perturbation (:data:`PERTURBATIONS`); scenario 0 is
+    always the realized path itself, so ladders and goldens anchor on it
+    and ``n_scenarios=1`` with the default ``"realized"`` family is
+    *bit-identical* to the unbatched replay.  ``chunk`` bounds how many
+    scenarios one compiled replay program carries (memory relief on a
+    single host; ``None`` runs all N in one program)."""
+
+    n_scenarios: int = 1
+    family: str = "realized"
+    seed: int = 0
+    chunk: int | None = None
+
+    def __post_init__(self):
+        if self.n_scenarios < 1:
+            raise ValueError(
+                f"n_scenarios must be >= 1, got {self.n_scenarios}"
+            )
+        if self.family not in PERTURBATIONS:
+            raise ValueError(
+                f"unknown scenario family {self.family!r}; "
+                f"known: {PERTURBATIONS}"
+            )
+        if self.chunk is not None and self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1 or None, got {self.chunk}")
+
+
+def resolve_scenarios(
+    spec: "ScenarioConfig | int | None",
+) -> "ScenarioConfig | None":
+    """Normalize the ``scenarios=`` spelling: ``None`` stays off,
+    an int means ``ScenarioConfig(n_scenarios=int)``."""
+    if spec is None or isinstance(spec, ScenarioConfig):
+        return spec
+    if isinstance(spec, bool):
+        raise TypeError("scenarios= takes an int or ScenarioConfig, not bool")
+    if isinstance(spec, int):
+        return ScenarioConfig(n_scenarios=spec)
+    raise TypeError(
+        f"scenarios= takes None, an int, or a ScenarioConfig, "
+        f"got {type(spec).__name__}"
+    )
+
+
+def _perturb(family: str, y: np.ndarray, rng: np.random.Generator):
+    """One perturbed copy of one pool's realized hourly series."""
+    t = y.shape[-1]
+    if family == "burst":
+        return _transform("burst", y, rng)
+    if family == "regime":
+        return _transform("unpredictable", y, rng)
+    if family == "growth":
+        g = rng.uniform(*GROWTH_RANGE)
+        ramp = np.exp(g * np.arange(t) / (52.0 * HOURS_PER_WEEK))
+        return y * ramp
+    if family == "scale":
+        return y * rng.lognormal(0.0, SCALE_SIGMA)
+    return y
+
+
+def scenario_batch(demand: np.ndarray, cfg: ScenarioConfig) -> np.ndarray:
+    """(N, P, T) scenario batch derived from the realized ``demand`` (P, T).
+
+    Scenario 0 is the realized trace verbatim; scenarios ``s >= 1`` apply
+    the ``cfg.family`` perturbation with a generator seeded on
+    ``(family, cfg.seed, s, pool)`` — every batch is a pure function of
+    (demand, cfg), reproducibility being part of the contract exactly as
+    for :func:`scenario_path`."""
+    demand = np.asarray(demand, np.float32)
+    if demand.ndim != 2:
+        raise ValueError(f"demand must be (P, T), got shape {demand.shape}")
+    if cfg.family == "realized":
+        return np.broadcast_to(
+            demand[None], (cfg.n_scenarios,) + demand.shape
+        ).copy()
+    fam_idx = PERTURBATIONS.index(cfg.family)
+    out = [demand]
+    for s in range(1, cfg.n_scenarios):
+        rows = []
+        for p in range(demand.shape[0]):
+            rng = np.random.default_rng(
+                (1_000_003 * fam_idx, cfg.seed, s, p)
+            )
+            rows.append(_perturb(cfg.family, demand[p], rng))
+        out.append(np.stack(rows).astype(np.float32))
+    return np.stack(out)
 
 
 def scenario_keys(num_pools: int) -> tuple[dm.PoolKey, ...]:

@@ -25,6 +25,61 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+#: VMEM budget for the kernel's (bp, bg, bt) broadcast temporary, bytes.
+#: Well under the ~16 MB/core so the f/w/c blocks and double-buffering fit.
+SWEEP_VMEM_BUDGET = 4 * 1024 * 1024
+
+#: HBM-pass budget per sweep: each candidate tile beyond the first
+#: re-streams the (P, T) demand trace from HBM (the t grid axis re-runs per
+#: g tile), so a replanned week costs ``ceil(G / bg)`` trace passes.  The
+#: fleet-scale replay (P ~ 1000 rows x 52 candidate levels per refine
+#: stage, every cadence week) caps that re-read factor here and grows the
+#: candidate tile ``bg`` instead.
+SWEEP_HBM_PASS_BUDGET = 8
+
+
+def sweep_block_plan(
+    p: int,
+    g: int,
+    t: int,
+    *,
+    vmem_budget: int = SWEEP_VMEM_BUDGET,
+    pass_budget: int = SWEEP_HBM_PASS_BUDGET,
+) -> tuple[int, int, int]:
+    """Choose kernel block sizes (bp, bg, bt) for a (P, G, T) sweep.
+
+    Invariants (the R3 kernel contract plus the budgets):
+
+    - every block is a lane/sublane multiple (bp of 8, bg/bt of 128) and
+      divides its padded dim by construction (ops pads up to the block);
+    - HBM passes over the trace, ``ceil(G / bg)``, stay <= ``pass_budget``:
+      bg grows in lane multiples until the whole candidate grid fits in
+      ``pass_budget`` tiles;
+    - the (bp, bg, bt) fp32 broadcast temporary stays <= ``vmem_budget``:
+      bt shrinks (to the 128 lane minimum) to pay for a wider bg.
+
+    For every shape the planner issued before the fleet-scale work
+    (G <= 128 * pass_budget) this returns exactly the historical
+    ``(8, min(128, G_pad), min(512, T_pad))`` choice, so accumulation
+    order — and the kernel's bit-exact outputs — are unchanged there.
+    """
+    bp = 8
+    # Candidate tile: at least 128 (one lane row), grown so the padded
+    # grid fits the pass budget.  VMEM is the hard constraint: bg never
+    # exceeds what fits next to a minimum (128) time tile, even if that
+    # costs extra HBM passes on a pathologically wide candidate grid.
+    bg = max(128, 128 * -(-g // (128 * pass_budget)))
+    bg = min(bg, _round_up(g, 128))
+    bg_max = vmem_budget // (bp * 128 * 4) // 128 * 128
+    bg = min(bg, max(bg_max, 128))
+    # Time tile: historical 512 cap, shrunk while the broadcast tmp
+    # overflows the VMEM budget (floor 128 — one lane row).
+    bt = min(512, _round_up(t, 128))
+    while bt > 128 and bp * bg * bt * 4 > vmem_budget:
+        bt -= 128
+    return bp, bg, bt
+
+
 def commitment_sweep_over_under(
     f: jnp.ndarray,
     cs: jnp.ndarray,
@@ -52,10 +107,9 @@ def commitment_sweep_over_under(
     if w is None:
         w = jnp.ones_like(f)
 
-    # Block sizes: keep the (bp, bg, bt) broadcast tile < ~4 MB of VMEM.
-    bp = 8
-    bg = min(128, _round_up(g, 128))
-    bt = min(512, _round_up(t, 128))
+    # Block sizes: VMEM + HBM-pass budgeted (historical choices for every
+    # pre-fleet-scale shape; see sweep_block_plan).
+    bp, bg, bt = sweep_block_plan(p, g, t)
 
     pp, gg, tt = _round_up(p, bp), _round_up(g, bg), _round_up(t, bt)
     f_pad = jnp.zeros((pp, tt), f.dtype).at[:p, :t].set(f)

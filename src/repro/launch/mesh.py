@@ -30,3 +30,23 @@ def make_host_mesh():
     return compat.make_mesh(
         (n,), ("data",), axis_types=compat.auto_axis_types(1)
     )
+
+
+def shard_rows(*arrays):
+    """Shard each array's leading axis across the local 1-D "data" mesh.
+
+    The fleet-scale replay flattens (N scenarios x P pools) into one row
+    axis and every per-row op is elementwise along it, so placing the rows
+    once lets XLA's computation-follows-data propagation shard the whole
+    scan.  On a single-device host (or when the row count doesn't divide
+    the device count) this is a no-op, so the compiled program — and its
+    bit-exact outputs — are unchanged.  Returns the arrays in order (a
+    single array when called with one argument)."""
+    n = len(jax.devices())
+    if n > 1 and all(a.shape[0] % n == 0 for a in arrays):
+        mesh = make_host_mesh()
+        spec = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("data")
+        )
+        arrays = tuple(jax.device_put(a, spec) for a in arrays)
+    return arrays[0] if len(arrays) == 1 else arrays

@@ -1,0 +1,14 @@
+"""Planted R5 violations: an optional `scenarios=` kwarg and a
+`PlanRequest` surface class, with no golden test anywhere under tests/."""
+
+
+class PlanRequest:
+    def __init__(self, demand, scenarios=None):
+        self.demand = demand
+        self.scenarios = scenarios
+
+
+def replay(demand, scenarios=None):
+    if scenarios is None:
+        return demand
+    return [demand for _ in range(scenarios)]

@@ -39,6 +39,7 @@ CASES = {
     "r4": "R4",
     "r5": "R5",
     "r5_policy": "R5",
+    "r5_scenarios": "R5",
     "r6": "R6",
 }
 

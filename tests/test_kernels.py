@@ -7,9 +7,12 @@ import pytest
 
 from repro.core import commitment as cm
 from repro.kernels.commitment_sweep.ops import (
+    SWEEP_HBM_PASS_BUDGET,
+    SWEEP_VMEM_BUDGET,
     commitment_sweep,
     commitment_sweep_oracle,
     optimal_commitment_sweep,
+    sweep_block_plan,
 )
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -91,6 +94,66 @@ class TestCommitmentSweep:
             assert float(cm.commitment_cost(f[i], c_gr[i])) <= float(
                 cm.commitment_cost(f[i], c_ex[i])
             ) * (1 + 1e-3)
+
+
+class TestSweepBlockPlan:
+    """Budgeted block-size chooser: historical defaults preserved, the
+    R3 divisor/lane invariants hold, and both budgets bind."""
+
+    @pytest.mark.parametrize("p,g,t", [
+        (8, 128, 24 * 7 * 156),   # 3-year trace, one candidate tile
+        (3, 52, 3360),            # the rolling replay's weekly shape
+        (8, 64, 100),             # tiny everything
+        (16, 1024, 24 * 7 * 40),
+    ])
+    def test_historical_defaults_preserved(self, p, g, t):
+        """Every pre-fleet-scale shape gets exactly the old
+        (8, min(128, G_pad), min(512, T_pad)) choice — accumulation order
+        (and bit-exact kernel output) unchanged."""
+        def rup(x, m):
+            return (x + m - 1) // m * m
+        expect = (8, min(128, rup(g, 128)), min(512, rup(t, 128)))
+        assert sweep_block_plan(p, g, t) == expect
+
+    @pytest.mark.parametrize("p,g,t", [
+        (1024, 4096, 24 * 7 * 156),   # P~1000 fleet, wide refine grid
+        (1024, 2048, 8736),
+        (16, 10_000, 500),            # pathologically wide grid
+        (8, 128, 128),
+    ])
+    def test_budgets_and_lane_invariants(self, p, g, t):
+        bp, bg, bt = sweep_block_plan(p, g, t)
+        assert bp % 8 == 0 and bg % 128 == 0 and bt % 128 == 0
+        # VMEM is the hard constraint (broadcast tmp, fp32).
+        assert bp * bg * bt * 4 <= SWEEP_VMEM_BUDGET
+        # The pass budget binds whenever VMEM allows it.
+        bg_max = SWEEP_VMEM_BUDGET // (bp * 128 * 4) // 128 * 128
+        if -(-g // bg_max) <= SWEEP_HBM_PASS_BUDGET:
+            assert -(-g // bg) <= SWEEP_HBM_PASS_BUDGET
+
+    def test_blocks_divide_padded_dims(self):
+        """ops.py pads each dim up to its block, so grid = padded//block
+        is exact — the R3 contract's divisor property by construction."""
+        def rup(x, m):
+            return (x + m - 1) // m * m
+        for (p, g, t) in [(9, 513, 129), (1000, 3000, 26280), (1, 1, 1)]:
+            bp, bg, bt = sweep_block_plan(p, g, t)
+            assert rup(p, bp) % bp == 0
+            assert rup(g, bg) % bg == 0
+            assert rup(t, bt) % bt == 0
+
+    def test_wide_grid_matches_oracle(self):
+        """A G > 1024 sweep (multi-tile candidate grids at a grown bg)
+        still matches the reference bit-for-bit-close."""
+        f = jnp.asarray(RNG.gamma(2, 50, (5, 700)).astype(np.float32))
+        cs = jnp.asarray(
+            np.sort(RNG.uniform(0, 300, (5, 1500))).astype(np.float32)
+        )
+        np.testing.assert_allclose(
+            commitment_sweep(f, cs),
+            commitment_sweep_oracle(f, cs),
+            rtol=2e-4, atol=1e-2,
+        )
 
 
 if HAVE_HYPOTHESIS:

@@ -135,3 +135,96 @@ class TestGeneratorContract:
         )
         assert ps.keys == sc.scenario_keys(3)
         assert set(ps.configs) == set(ps.keys)
+
+
+class TestScenarioBatch:
+    """The perturbation families behind ``scenarios=`` on the rolling
+    replay: scenario 0 is the realized trace verbatim, every batch is a
+    pure function of (demand, config), and each family moves the paths
+    the way its name says."""
+
+    def _demand(self):
+        rng = np.random.default_rng(7)
+        return rng.gamma(2.0, 40.0, (3, 6 * WK)).astype(np.float32)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="n_scenarios"):
+            sc.ScenarioConfig(n_scenarios=0)
+        with pytest.raises(ValueError, match="unknown scenario family"):
+            sc.ScenarioConfig(family="chaotic")
+        with pytest.raises(ValueError, match="chunk"):
+            sc.ScenarioConfig(chunk=0)
+
+    def test_resolve_spellings(self):
+        assert sc.resolve_scenarios(None) is None
+        cfg = sc.resolve_scenarios(5)
+        assert cfg == sc.ScenarioConfig(n_scenarios=5)
+        assert sc.resolve_scenarios(cfg) is cfg
+        with pytest.raises(TypeError, match="bool"):
+            sc.resolve_scenarios(True)
+        with pytest.raises(TypeError):
+            sc.resolve_scenarios("many")
+
+    @pytest.mark.parametrize("family", sc.PERTURBATIONS)
+    def test_scenario0_is_realized_verbatim(self, family):
+        d = self._demand()
+        batch = sc.scenario_batch(d, sc.ScenarioConfig(
+            n_scenarios=3, family=family
+        ))
+        assert batch.shape == (3,) + d.shape
+        np.testing.assert_array_equal(batch[0], d)
+
+    @pytest.mark.parametrize("family", sc.PERTURBATIONS)
+    def test_batch_is_deterministic(self, family):
+        d = self._demand()
+        cfg = sc.ScenarioConfig(n_scenarios=3, family=family, seed=2)
+        np.testing.assert_array_equal(
+            sc.scenario_batch(d, cfg), sc.scenario_batch(d, cfg)
+        )
+
+    def test_seed_moves_perturbed_scenarios(self):
+        d = self._demand()
+        a = sc.scenario_batch(
+            d, sc.ScenarioConfig(n_scenarios=3, family="regime", seed=0)
+        )
+        b = sc.scenario_batch(
+            d, sc.ScenarioConfig(n_scenarios=3, family="regime", seed=1)
+        )
+        np.testing.assert_array_equal(a[0], b[0])
+        assert not np.array_equal(a[1:], b[1:])
+
+    def test_realized_family_is_copies(self):
+        d = self._demand()
+        batch = sc.scenario_batch(d, sc.ScenarioConfig(n_scenarios=4))
+        for s in range(4):
+            np.testing.assert_array_equal(batch[s], d)
+
+    def test_growth_is_exponential_ramp(self):
+        d = self._demand()
+        batch = sc.scenario_batch(d, sc.ScenarioConfig(
+            n_scenarios=2, family="growth", seed=3
+        ))
+        ratio = batch[1] / np.maximum(d, 1e-9)
+        # One multiplicative ramp per pool: log-ratio is linear in t.
+        lr = np.log(ratio)
+        slope = lr[:, -1] - lr[:, 0]
+        t = np.arange(d.shape[-1]) / (d.shape[-1] - 1)
+        np.testing.assert_allclose(
+            lr, lr[:, :1] + slope[:, None] * t[None], atol=1e-4
+        )
+
+    def test_scale_is_single_multiplier_per_pool(self):
+        d = self._demand()
+        batch = sc.scenario_batch(d, sc.ScenarioConfig(
+            n_scenarios=2, family="scale", seed=5
+        ))
+        ratio = batch[1] / np.maximum(d, 1e-9)
+        np.testing.assert_allclose(
+            ratio, ratio[:, :1].repeat(d.shape[-1], axis=1), rtol=1e-5
+        )
+
+    def test_bad_demand_shape(self):
+        with pytest.raises(ValueError, match="P, T"):
+            sc.scenario_batch(
+                np.zeros(10, np.float32), sc.ScenarioConfig(n_scenarios=2)
+            )

@@ -24,6 +24,30 @@ import numpy as np
 Row = tuple[str, float, str]
 
 
+def commitment_sweep_kernel_stats(quick: bool = False) -> dict:
+    """Structured launch accounting (``repro.obs.kernelstats``) for the
+    commitment-sweep shapes this module benches — block plan, padded
+    dims, HBM trace passes, VMEM temp, FLOP estimate.  Stamped into the
+    BENCH_ci.json payload by ``benchmarks/run.py`` so kernel-shape
+    regressions (a block plan drifting past its budgets) are visible in
+    the CI artifact trajectory."""
+    from repro.obs.kernelstats import sweep_kernel_stats
+
+    shapes = {
+        # (p, t, g) mirrors bench_commitment_sweep / bench_pool_portfolio_sweep.
+        "commitment_sweep": (
+            (4, 24 * 28, 32) if quick else (32, 24 * 365, 128)
+        ),
+        "pool_portfolio_sweep": (
+            (4, 24 * 7 * 8, 32) if quick else (12, 24 * 365 * 3, 128)
+        ),
+    }
+    return {
+        name: sweep_kernel_stats(p, g, t).to_dict()
+        for name, (p, t, g) in shapes.items()
+    }
+
+
 def _time(fn, *args, iters=3, warmup=1) -> float:
     for _ in range(warmup):
         out = fn(*args)

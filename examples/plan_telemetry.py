@@ -1,0 +1,105 @@
+"""Telemetry walkthrough: where every dollar of a rolling plan went.
+
+    PYTHONPATH=src python examples/plan_telemetry.py \
+        [--ledger-out LEDGER.jsonl] [--spans-out SPANS.json]
+
+`telemetry=True` on a rolling :class:`~repro.core.api.PlanRequest` makes
+the replay scan emit its own billing decomposition alongside the plan —
+per-week x per-pool x per-source (commitment SKUs, on-demand overflow,
+spot market/requeue/fallback, convertible re-pins) — materialized as a
+:class:`repro.obs.CostLedger`.  The ledger's weekly row-sums must
+reconcile with the report's weekly costs to f32 machine precision; this
+example **exits nonzero on reconciliation drift**, which is exactly the
+gate the CI bench-smoke job runs.
+
+Wall time is recorded caller-side with the span profiler
+(`repro.obs.spans`) — the planner core itself never reads a clock
+(analysis rules R2/R7).
+
+The exported JSONL round-trips through the CLI:
+
+    python -m repro.obs report LEDGER.jsonl
+    python -m repro.obs diff  A.jsonl B.jsonl --fail-above 1.0
+"""
+
+import argparse
+import sys
+
+from repro.core import api
+from repro.data import traces
+from repro.obs import SpanRecorder
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ledger-out", default=None, metavar="PATH",
+                    help="export the cost ledger as JSONL")
+    ap.add_argument("--spans-out", default=None, metavar="PATH",
+                    help="export the wall-clock span report as JSON")
+    args = ap.parse_args()
+
+    rec = SpanRecorder()
+    with rec.span("example/pools", phase="host"):
+        pools = traces.synthetic_pool_set(
+            num_pools=4, num_hours=24 * 7 * 20, migration=True,
+        )
+
+    # All bands on: spot floor, migration-aware forecaster, cloud-level
+    # convertible commitments — the richest bill the planner can produce.
+    with rec.span("example/plan", phase="execute"):
+        rep = api.plan(api.PlanRequest(
+            pools=pools, mode="rolling",
+            rolling=api.RollingConfig(cadence_weeks=2, start_weeks=6,
+                                      compare=False),
+            horizon_weeks=4,
+            spot=True, migration=True, convertible=True,
+            telemetry=True,
+        ))
+    led = rep.ledger
+
+    print("== cost attribution (weeks "
+          f"{int(led.weeks[0])}..{int(led.weeks[-1])}) ==")
+    print("spend by source:")
+    for s, v in sorted(led.by_source().items(), key=lambda kv: -kv[1]):
+        print(f"  {s:24s} {v:14,.2f}")
+    print("spend by entity:")
+    for e, v in sorted(led.by_entity().items(), key=lambda kv: -kv[1]):
+        print(f"  {e:28s} {v:14,.2f}")
+
+    econ = led.unit_economics()
+    print("\n== unit economics ==")
+    print(f"  total cost              {econ['total_cost']:14,.2f}")
+    print(f"  idle committed hours    {econ['idle_committed_hours']:14,.0f}"
+          f"  ({econ['idle_fraction']:.1%} of committed)")
+    print(f"  mean pool utilization   {econ['utilization_mean']:14.1%}")
+    print(f"  cost per used chip-hour "
+          f"{econ['cost_per_used_chip_hour']:14.4f}")
+
+    one_cell = led.attribute(week=int(led.weeks[-1]),
+                             pool=led.entities[0])
+    print(f"\none cell of the bill — week {int(led.weeks[-1])}, "
+          f"{led.entities[0]}: {one_cell:,.2f}")
+
+    with rec.span("example/export", phase="host"):
+        if args.ledger_out:
+            led.to_jsonl(args.ledger_out)
+            print(f"wrote {args.ledger_out}")
+        if args.spans_out:
+            rec.to_json(args.spans_out)
+            print(f"wrote {args.spans_out}")
+
+    print("\n== wall-clock spans ==")
+    print(rec.report())
+
+    # The CI gate: ledger row-sums must reconcile with the report.
+    res = led.reconcile(rep)
+    print(f"\nreconciliation: max_rel {res['max_rel']:.2e} "
+          f"(gate {res['rtol']:.0e}) -> "
+          f"{'OK' if res['ok'] else 'DRIFT'}")
+    if not res["ok"]:
+        print(f"reconciliation drift: {res}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

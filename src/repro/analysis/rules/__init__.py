@@ -9,6 +9,7 @@ from repro.analysis.rules import (
     r4_pricing_guard,
     r5_golden_coverage,
     r6_doc_drift,
+    r7_telemetry,
 )
 
 ALL_RULES = [
@@ -18,6 +19,7 @@ ALL_RULES = [
     r4_pricing_guard.rule,
     r5_golden_coverage.rule,
     r6_doc_drift.rule,
+    r7_telemetry.rule,
 ]
 
 RULES_BY_ID = {r.id: r for r in ALL_RULES}

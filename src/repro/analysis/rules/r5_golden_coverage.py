@@ -1,8 +1,8 @@
 """R5 — golden coverage for optional subsystems.
 
 Every optional-subsystem keyword the planner stack exposes (``spot=``,
-``migration=``, ``convertible=``, ``policy=``, ``scenarios=``) shipped
-with a hard guarantee: the
+``migration=``, ``convertible=``, ``policy=``, ``scenarios=``,
+``telemetry=``) shipped with a hard guarantee: the
 disabled path stays bit-identical to the pre-subsystem planner, proven by
 hardcoded golden tests.  This rule keeps that guarantee alive: for each
 watched kwarg that actually appears as a defaulted parameter somewhere in
@@ -24,7 +24,8 @@ import re
 
 from repro.analysis.engine import Finding, Rule
 
-WATCHED = ("spot", "migration", "convertible", "policy", "scenarios")
+WATCHED = ("spot", "migration", "convertible", "policy", "scenarios",
+           "telemetry")
 
 #: Redesigned entry-point classes that must keep a construct-it golden
 #: test proving parity with the legacy spelling.

@@ -26,6 +26,7 @@ from repro.capacity import generations as gn
 from repro.capacity import preemption as pe
 from repro.capacity import pricing
 from repro.capacity.pricing import on_demand_premium
+from repro.data import scenarios as sc
 from repro.models.model import build
 
 pricing.validate_tables()
@@ -366,6 +367,7 @@ def replay_spot_plan(
     *,
     num_draws: int = 32,
     seed: int = 0,
+    scenario: int = 0,
 ) -> SpotReplayReport:
     """Replay a spot-enabled rolling plan against sampled revocation paths.
 
@@ -374,15 +376,56 @@ def replay_spot_plan(
     spot floors are broadcast back to hours, ``num_draws`` revocation paths
     are sampled from the per-cloud two-state process, and the realized
     three-way bill (committed / on-demand / spot + fallback + requeue) is
-    accounted per draw."""
+    accounted per draw.
+
+    On a scenario-batched report (``scenarios=`` on the plan request)
+    ``scenario`` selects which demand future to replay: its floors and
+    base costs are sliced off the report's N axis, and for ``scenario >
+    0`` the demand path itself is regenerated from the report's
+    ``scenario_config`` (scenario batches are pure functions of the
+    realized trace + config, so the replayed path is exactly the one the
+    scan billed).  Scenario 0 — the realized trace — is the default and
+    the only valid index on unbatched reports."""
     if report.spot_floor is None:
         raise ValueError("report has no spot band; re-plan with spot=...")
     cfg, lines = report.spot_config, report.spot_lines
-    s, p = report.spot_floor.shape
     wk = dm.HOURS_PER_WEEK
+    batched = np.asarray(report.spot_floor).ndim == 3    # (S, N, P)
+    n_scen = report.n_scenarios if batched else 1
+    if not 0 <= scenario < n_scen:
+        raise ValueError(
+            f"scenario index {scenario} out of range for a report with "
+            f"{n_scen} scenario(s)"
+        )
+
+    def _pick(a):
+        """Scenario view of a per-week report array."""
+        a = np.asarray(a)
+        return a[:, scenario] if batched else a
+
+    spot_floor = _pick(report.spot_floor)
+    s, p = spot_floor.shape
+    if batched:
+        # The report's spot lines were built for the flattened (N x P)
+        # row axis; every leaf is per-row, so one tree-slice recovers
+        # this scenario's (P,) block.
+        blk = slice(scenario * p, (scenario + 1) * p)
+        lines = jax.tree_util.tree_map(lambda a: a[blk], lines)
     t0 = report.start_weeks * wk
-    demand = np.asarray(pools.demand[:, t0: t0 + s * wk], np.float32)
-    floor = np.repeat(np.asarray(report.spot_floor).T, wk, axis=1)
+    if scenario == 0:
+        demand = np.asarray(pools.demand[:, t0: t0 + s * wk], np.float32)
+    else:
+        # Re-derive the scenario's demand path: scenario_batch is a pure
+        # function of (realized trace, config) and scenario 0 is the
+        # trace verbatim, so this reproduces the exact rows the scan saw.
+        t_hist = (pools.num_hours // wk) * wk
+        batch = sc.scenario_batch(
+            pools.demand[:, :t_hist], report.scenario_config
+        )
+        demand = np.asarray(
+            batch[scenario][:, t0: t0 + s * wk], np.float32
+        )
+    floor = np.repeat(spot_floor.T, wk, axis=1)
     spot_dem = np.maximum(demand - floor, 0.0)            # (P, T)
 
     paths = pe.simulate_revocations(
@@ -411,13 +454,17 @@ def replay_spot_plan(
     # independent — read it off the report rather than re-deriving the
     # replanner's billing here.
     base = float(
-        np.asarray(report.committed_cost).sum()
-        + np.asarray(report.on_demand_cost).sum()
+        _pick(report.committed_cost).sum()
+        + _pick(report.on_demand_cost).sum()
     )
     if report.conv_committed_cost is not None:
-        base += float(np.asarray(report.conv_committed_cost).sum())
+        base += float(_pick(report.conv_committed_cost).sum())
     realized = base + float(
         (spot_bill + fallback_bill + requeue_bill).sum(-1).mean()
+    )
+    planned = (
+        float(report.scenario_cost[scenario]) if batched
+        else report.total_cost
     )
     mean_avail = avail.mean(0)
     return SpotReplayReport(
@@ -428,7 +475,7 @@ def replay_spot_plan(
         fleet_availability=fleet_avail,
         meets_target=bool(mean_avail.min() >= cfg.availability_target),
         shortfall_chip_hours=float(fallback.sum((-1, -2)).mean()),
-        planned_cost=report.total_cost,
+        planned_cost=planned,
         realized_cost=realized,
         realized_spot_cost=float(spot_bill.sum(-1).mean()),
         fallback_on_demand_cost=float(fallback_bill.sum(-1).mean()),

@@ -33,11 +33,13 @@ from typing import Any, Literal
 from repro.core import forecast as fc
 from repro.core import policy as pol
 from repro.data.scenarios import ScenarioConfig, resolve_scenarios
+from repro.obs.config import TelemetryConfig, resolve_telemetry
 
 __all__ = [
     "PlanRequest",
     "RollingConfig",
     "ScenarioConfig",
+    "TelemetryConfig",
     "plan",
 ]
 
@@ -118,6 +120,7 @@ class PlanRequest:
     convertible: Any = None     # list[PurchaseOption] | bool | None
     policy: Any = None          # Policy | str | None
     scenarios: "ScenarioConfig | int | None" = None
+    telemetry: "TelemetryConfig | bool | None" = None
     rolling: RollingConfig = dataclasses.field(default_factory=RollingConfig)
 
     def __post_init__(self):
@@ -157,12 +160,18 @@ class PlanRequest:
                 f"known: {tuple(pol.POLICIES)}"
             )
         resolve_scenarios(self.scenarios)
+        resolve_telemetry(self.telemetry)
         if self.mode == "one_shot":
             if self.policy is not None:
                 raise ValueError("policy= applies to mode='rolling' only")
             if self.scenarios is not None:
                 raise ValueError(
                     "scenarios= applies to mode='rolling' only"
+                )
+            if resolve_telemetry(self.telemetry) is not None:
+                raise ValueError(
+                    "telemetry= applies to mode='rolling' only (the "
+                    "ledger decomposes the weekly replay)"
                 )
             if self.rolling != RollingConfig():
                 raise ValueError(
@@ -208,5 +217,6 @@ def plan(request: PlanRequest):
     return replan.replan_fleet_pools(
         request.pools, request.options, **common,
         policy=request.policy, scenarios=request.scenarios,
+        telemetry=request.telemetry,
         **request.rolling_kwargs(),
     )

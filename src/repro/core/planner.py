@@ -347,6 +347,7 @@ def plan_fleet_pools(
     migration: "gn.MigrationConfig | bool | None" = None,
     convertible: "list[pf.PurchaseOption] | bool | None" = None,
     policy=None,
+    telemetry=None,
     **rolling_kw,
 ):
     """Algorithm 1 + the portfolio solver over every pool in ONE batched
@@ -395,6 +396,12 @@ def plan_fleet_pools(
     loop.  ``policy=None`` (default) keeps the replay bit-identical to
     the pre-policy planner (golden-tested).
 
+    ``telemetry`` (rolling mode only; True or a
+    :class:`repro.obs.config.TelemetryConfig`) attaches the observability
+    layer — the per-week x per-pool x per-source cost ledger and kernel
+    stats (``repro.obs``).  ``telemetry=None`` (default) keeps the replay
+    bit-identical to the telemetry-free planner (golden-tested).
+
     This is the *legacy* spelling, kept as a thin shim over the unified
     request API: it builds the equivalent :class:`repro.core.api.PlanRequest`
     and calls :func:`repro.core.api.plan`, so both spellings are
@@ -412,6 +419,8 @@ def plan_fleet_pools(
             )
         if policy is not None:
             raise TypeError("policy= applies to mode='rolling' only")
+        if telemetry is not None:
+            raise TypeError("telemetry= applies to mode='rolling' only")
         request = api.PlanRequest(
             pools=pools, options=options, mode="one_shot",
             horizon_weeks=horizon_weeks, od_rate=od_rate,
@@ -441,7 +450,8 @@ def plan_fleet_pools(
         horizon_weeks=horizon_weeks, od_rate=od_rate,
         term_weighting=term_weighting, forecast=cfg, spot=spot,
         migration=migration, convertible=convertible, policy=policy,
-        scenarios=scenarios, rolling=api.RollingConfig(**rolling_kw),
+        scenarios=scenarios, telemetry=telemetry,
+        rolling=api.RollingConfig(**rolling_kw),
     )
     return api.plan(request)
 

@@ -87,6 +87,9 @@ from repro.core.planner import (
 from repro.core.portfolio import allocate_convertible  # noqa: F401  (API)
 from repro.data import scenarios as sc
 from repro.launch import mesh as mesh_mod
+from repro.obs import config as obs_config
+from repro.obs import kernelstats as obs_kstats
+from repro.obs import ledger as obs_ledger
 
 pricing.validate_tables()
 
@@ -167,6 +170,22 @@ class RollingPlanReport:
     scenario_hindsight_cost: np.ndarray | None = None  # (N,)
     scenario_cr: np.ndarray | None = None              # (N,) cost/hindsight
     scenario_regret: np.ndarray | None = None          # (N,) cost-hindsight
+    # Request provenance (always set by the replay): the resolved on-demand
+    # rate and scenario config, so downstream consumers (spot replay,
+    # ledger) need no side-channel.
+    od_rate: float | None = None
+    scenario_config: "sc.ScenarioConfig | None" = None
+    # Telemetry (``repro.obs``; all None on telemetry=None replays —
+    # the scan emits no extra outputs at all, so those paths stay
+    # bit-identical, golden-tested).  The usage arrays are scan outputs;
+    # ``ledger`` / ``kernel_stats`` are the materialized obs objects.
+    telemetry: "obs_config.TelemetryConfig | None" = None
+    committed_by_sku: np.ndarray | None = None         # (S, P, K) spend
+    conv_committed_by_sku: np.ndarray | None = None    # (S, C, Kc) spend
+    used_hours: np.ndarray | None = None               # (S, P) chip-hours
+    od_volume: np.ndarray | None = None                # (S, P) chip-hours
+    ledger: "obs_ledger.CostLedger | None" = None
+    kernel_stats: "obs_kstats.KernelStats | None" = None
 
     @property
     def weekly_cost(self) -> np.ndarray:
@@ -268,6 +287,10 @@ def _merge_scenario_reports(
         conv_active=cat("conv_active", 1),
         conv_alloc=cat("conv_alloc", 1),
         conv_committed_cost=cat("conv_committed_cost", 1),
+        committed_by_sku=cat("committed_by_sku", 1),
+        conv_committed_by_sku=cat("conv_committed_by_sku", 1),
+        used_hours=cat("used_hours", 1),
+        od_volume=cat("od_volume", 1),
         one_shot_weekly_cost=cat("one_shot_weekly_cost", 1),
         hindsight_weekly_cost=cat("hindsight_weekly_cost", 1),
         hindsight_widths=cat("hindsight_widths", 0),
@@ -333,6 +356,7 @@ def replan_fleet_pools(
     policy: "pol.Policy | str | None" = None,
     scenarios: "sc.ScenarioConfig | int | None" = None,
     irls_carry: bool = False,
+    telemetry: "obs_config.TelemetryConfig | bool | None" = None,
     _scen_slice: tuple[int, int] | None = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
@@ -401,6 +425,16 @@ def replan_fleet_pools(
     ``irls_carry`` makes ``irls_iters > 0`` cheap inside the replay by
     carrying the asymmetric-weight moments in the scan state (frozen-
     weights incremental IRLS) instead of full masked passes per week.
+
+    ``telemetry`` (``repro.obs``; None/False default, True, or a
+    :class:`~repro.obs.config.TelemetryConfig`) turns on the cost-
+    attribution layer: the scan additionally emits per-SKU committed
+    spend and usage hours — still trace-pure, still deterministic — and
+    the report gains a :class:`~repro.obs.ledger.CostLedger` whose weekly
+    row-sums reconcile with ``weekly_cost`` plus, for the grid solver,
+    the :class:`~repro.obs.kernelstats.KernelStats` of the sweep shape.
+    With ``telemetry=None`` no extra scan outputs exist, so every replay
+    compiles the exact pre-telemetry program (golden-tested).
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -409,6 +443,7 @@ def replan_fleet_pools(
         start_weeks = min(max(horizon_weeks, total_weeks // 4),
                           max(total_weeks - 1, 1))
     _validate(total_weeks, start_weeks, cadence_weeks)
+    tele = obs_config.resolve_telemetry(telemetry)
 
     scen = sc.resolve_scenarios(scenarios)
     if (
@@ -426,6 +461,7 @@ def replan_fleet_pools(
                 irls_iters=irls_iters, backend=backend, compare=compare,
                 spot=spot, migration=migration, convertible=convertible,
                 policy=policy, scenarios=scen, irls_carry=irls_carry,
+                telemetry=tele,
                 _scen_slice=(lo, min(lo + scen.chunk, scen.n_scenarios)),
             )
             for lo in range(0, scen.n_scenarios, scen.chunk)
@@ -819,6 +855,15 @@ def replan_fleet_pools(
                     "spot": s_lines.rate * spot_over.sum(-1),
                     "spot_peak": spot_over.max(-1),
                 }
+            if tele is not None and tele.ledger:
+                # Ledger-only outputs, emitted ONLY when telemetry is on:
+                # per-SKU committed spend plus the usage split the ledger
+                # turns into idle hours and on-demand volume.  With
+                # telemetry=None these keys do not exist and the compiled
+                # program is the exact pre-telemetry one (golden-tested).
+                out["committed_k"] = rates * active * HOURS_PER_WEEK
+                out["used"] = used
+                out["od_vol"] = over
             if conv_opts is None:
                 return (active, rolloff, pstate), out
             out.update({
@@ -828,6 +873,10 @@ def replan_fleet_pools(
                     (conv_rates * active_c).sum(-1) * HOURS_PER_WEEK
                 ),
             })
+            if tele is not None and tele.ledger:
+                out["conv_committed_k"] = (
+                    conv_rates * active_c * HOURS_PER_WEEK
+                )
             return (active, rolloff, pstate, active_c, rolloff_c), out
         return step, pstate0
 
@@ -961,6 +1010,8 @@ def replan_fleet_pools(
         n_scenarios=num_scen,
         scenario_family=scen.family if scen is not None else None,
         scenario_cost=scen_cost,
+        od_rate=float(od),
+        scenario_config=scen,
     )
     if sp_res is not None:
         report.spot_config = s_cfg
@@ -1002,6 +1053,24 @@ def replan_fleet_pools(
             ),
             conv_clouds,
         )
+    if tele is not None:
+        report.telemetry = tele
+        if tele.kernel_stats and solver == "grid":
+            # The batched sweep shape the grid solver launches each
+            # decision week: horizon prefixes fold into the row axis
+            # (see ``grid_prefix_levels``).
+            report.kernel_stats = obs_kstats.sweep_kernel_stats(
+                num_rows * horizon_weeks, num_grid, horizon_hours,
+            )
+        if tele.ledger:
+            report.committed_by_sku = _rep(ys["committed_k"])
+            report.used_hours = _rep(ys["used"])
+            report.od_volume = _rep(ys["od_vol"])
+            if conv_opts is not None:
+                report.conv_committed_by_sku = _rep(
+                    ys["conv_committed_k"], num_clouds
+                )
+            report.ledger = obs_ledger.ledger_from_report(report)
     if not compare:
         return report
 

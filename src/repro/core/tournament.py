@@ -45,6 +45,7 @@ from repro.core import portfolio as pf
 from repro.core.demand import HOURS_PER_WEEK
 from repro.data import scenarios as sc
 from repro.launch import mesh as mesh_mod
+from repro.obs import spans as obs_spans
 
 pricing.validate_tables()
 
@@ -205,6 +206,7 @@ def run_tournament(
     od_rate: float | None = None,
     cfg: fc.ForecastConfig = fc.ForecastConfig(),
     backend: Literal["scan", "loop"] = "scan",
+    spans: "obs_spans.SpanRecorder | None" = None,
 ) -> TournamentReport:
     """Run the policy tournament: ONE compiled replay program per policy
     over every (family x seed) path, scored against per-path hindsight.
@@ -212,7 +214,13 @@ def run_tournament(
     Paths come from :func:`repro.data.scenarios.scenario_paths` (N >= 32
     seeds per family by default); clouds cycle aws/azure/gcp exactly as
     the synthetic artifact's pools do, so the Table-2 purchase options
-    apply unchanged."""
+    apply unchanged.
+
+    ``spans`` (a :class:`repro.obs.spans.SpanRecorder`) brackets the
+    hindsight pass and each policy's compiled replay with caller-side
+    wall-clock spans; the clock read stays in ``repro.obs.spans``, so the
+    tournament core itself remains clock-free (rules R2/R7) and
+    ``spans=None`` does no timing work at all."""
     resolved = [pol.get_policy(p) for p in policies]
     families = tuple(families)
     options = options if options is not None else pf.options_from_pricing()
@@ -248,22 +256,26 @@ def run_tournament(
             return _lean_replay(policy, ctx, backend)
         return path_cost
 
-    hs = jax.jit(jax.vmap(
-        lambda d: _hindsight_cost(
-            d, options=options, clouds=clouds, od=od,
-            start_weeks=start_weeks,
-        )
-    ))(flat)
-    hindsight = np.asarray(hs, np.float64).reshape(num_f, num_seeds)
+    with obs_spans.span(spans, "tournament/hindsight", phase="execute"):
+        hs = jax.jit(jax.vmap(
+            lambda d: _hindsight_cost(
+                d, options=options, clouds=clouds, od=od,
+                start_weeks=start_weeks,
+            )
+        ))(flat)
+        hindsight = np.asarray(hs, np.float64).reshape(num_f, num_seeds)
 
     cost = np.empty((len(resolved), num_f, num_seeds), np.float64)
     for i, policy in enumerate(resolved):
         # One compiled program per policy: the vmap batches every
         # family's every seed through the same replay.
-        totals = jax.jit(jax.vmap(make_path_cost(policy)))(flat)
-        cost[i] = np.asarray(totals, np.float64).reshape(
-            num_f, num_seeds
-        )
+        with obs_spans.span(
+            spans, f"tournament/{policy.name}", phase="execute"
+        ):
+            totals = jax.jit(jax.vmap(make_path_cost(policy)))(flat)
+            cost[i] = np.asarray(totals, np.float64).reshape(
+                num_f, num_seeds
+            )
 
     return TournamentReport(
         policies=tuple(p.name for p in resolved),

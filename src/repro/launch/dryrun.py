@@ -26,8 +26,8 @@ Usage:
 """  # noqa: E402
 
 import argparse     # noqa: E402
+import contextlib   # noqa: E402
 import json         # noqa: E402
-import time         # noqa: E402
 import traceback    # noqa: E402
 
 import jax          # noqa: E402
@@ -39,6 +39,7 @@ from repro.launch.cells import (                        # noqa: E402
     make_cell,
 )
 from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.obs.spans import SpanRecorder                # noqa: E402
 
 MEM_BUDGET_BYTES = 16 * 1024**3  # v5e HBM per chip
 
@@ -75,7 +76,15 @@ def run_cell(
     """
     mesh = make_production_mesh(multi_pod=multi_pod)
     nchips = mesh.size
-    t0 = time.time()
+    # Clock reads live in repro.obs.spans (rule R7); the cell's whole
+    # lower+compile+analyze pass is one "compile" span, closed just before
+    # the record is assembled so compile_seconds covers exactly what the
+    # old inline timer did.
+    rec = SpanRecorder()
+    timer = contextlib.ExitStack()
+    sp = timer.enter_context(
+        rec.span(f"dryrun/{arch}/{shape}", phase="compile")
+    )
 
     from repro import configs as _configs
 
@@ -136,6 +145,7 @@ def run_cell(
     tpu_projected = (
         mem.argument_size_in_bytes + mem.output_size_in_bytes + tpu_temp
     )
+    timer.close()
     record = {
         "arch": arch,
         "shape": shape,
@@ -143,7 +153,7 @@ def run_cell(
         "mesh_axes": list(mesh.axis_names),
         "chips": nchips,
         "compile_ok": True,
-        "compile_seconds": round(time.time() - t0, 1),
+        "compile_seconds": round(sp.duration_s, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
             "temp_bytes_cpu_backend": mem.temp_size_in_bytes,

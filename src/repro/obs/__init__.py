@@ -1,0 +1,38 @@
+"""Observability layer: cost-attribution ledger, span profiler, kernel
+stats.
+
+Three layers, all strictly outside the traced planning core (rules
+R2/R7):
+
+- ``obs.ledger`` — :class:`~repro.obs.ledger.CostLedger`, the per-week x
+  per-pool x per-source billing decomposition materialized from a
+  telemetry-enabled rolling replay; JSONL export, ``diff`` comparator,
+  unit-economics summaries.
+- ``obs.spans`` — :class:`~repro.obs.spans.SpanRecorder`, the sanctioned
+  caller-side wall clock (compile / execute / host phases).
+- ``obs.kernelstats`` — :class:`~repro.obs.kernelstats.KernelStats` for
+  the Pallas commitment-sweep launch shapes.
+
+Enable per request: ``api.PlanRequest(..., telemetry=True)`` or
+``telemetry=obs.TelemetryConfig(spans=rec)``; ``telemetry=None`` (the
+default) keeps every plan path bit-identical.  ``python -m repro.obs``
+reports/diffs exported ledgers.
+"""
+
+from repro.obs.config import TelemetryConfig, resolve_telemetry
+from repro.obs.kernelstats import KernelStats, sweep_kernel_stats
+from repro.obs.ledger import CostLedger, LedgerDiff, ledger_from_report
+from repro.obs.spans import Span, SpanRecorder, span
+
+__all__ = [
+    "TelemetryConfig",
+    "resolve_telemetry",
+    "KernelStats",
+    "sweep_kernel_stats",
+    "CostLedger",
+    "LedgerDiff",
+    "ledger_from_report",
+    "Span",
+    "SpanRecorder",
+    "span",
+]

@@ -1,0 +1,58 @@
+"""Telemetry configuration for plan requests.
+
+``PlanRequest.telemetry`` (and the ``telemetry=`` kwarg on the legacy
+``plan_fleet_pools`` shim) takes one of:
+
+    None / False        no telemetry — the default; every plan path stays
+                        bit-identical to a build without this subsystem
+                        (the rolling scan emits no extra outputs at all)
+    True                TelemetryConfig() — ledger + kernel stats on
+    TelemetryConfig(...)  pick layers individually, attach a SpanRecorder
+
+Kept separate from ``core.api`` so the obs package has no import cycle
+with the planner: core imports ``obs.config``/``obs.ledger``, while obs
+duck-types the report objects it receives and never imports core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+if typing.TYPE_CHECKING:  # pragma: no cover
+    from repro.obs.spans import SpanRecorder
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Which telemetry layers a plan request materializes.
+
+    ``ledger``       emit per-week x per-pool x per-source billing rows
+                     from the rolling scan and attach a ``CostLedger``
+    ``kernel_stats`` attach ``KernelStats`` for the grid-solver sweep
+                     shape (no-op for the quantile solver)
+    ``spans``        optional ``SpanRecorder`` for caller-side wall-clock
+                     phases; never read inside traced code
+    """
+
+    ledger: bool = True
+    kernel_stats: bool = True
+    spans: "SpanRecorder | None" = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.ledger or self.kernel_stats or self.spans is not None
+
+
+def resolve_telemetry(spec) -> TelemetryConfig | None:
+    """Normalize a user telemetry spec to ``TelemetryConfig | None``."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return TelemetryConfig()
+    if isinstance(spec, TelemetryConfig):
+        return spec if spec.enabled else None
+    raise TypeError(
+        "telemetry must be None, a bool, or a TelemetryConfig, "
+        f"got {type(spec).__name__}"
+    )

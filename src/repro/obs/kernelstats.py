@@ -1,0 +1,96 @@
+"""Structured kernel accounting for the Pallas commitment sweep.
+
+``sweep_block_plan`` already *chooses* block sizes against a VMEM budget
+and an HBM-pass budget; this module surfaces the resulting accounting —
+the chosen tile, the padded problem, how many times the demand trace
+streams from HBM, how big the broadcast temporary is, and a FLOP
+estimate on the bench convention (4·P·T·G: over/under compare +
+accumulate per cell) — as a frozen :class:`KernelStats` record that
+benches attach to their JSON rows and the telemetry layer attaches to
+the plan ledger.
+
+The arithmetic here mirrors ``kernels.commitment_sweep.ops`` exactly
+(same ``_round_up``, same temp-size formula) but never imports JAX and
+never runs the kernel: stats for a shape are a pure host-side function
+of (p, g, t) and the budgets, so they are free to compute anywhere —
+including inside CI on machines with no accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.commitment_sweep.ops import (
+    SWEEP_HBM_PASS_BUDGET,
+    SWEEP_VMEM_BUDGET,
+    sweep_block_plan,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelStats:
+    """Accounting for one commitment-sweep launch shape."""
+
+    kernel: str          # kernel name, e.g. "commitment_sweep"
+    p: int               # problem rows (pools, or pools x horizon weeks)
+    g: int               # candidate-grid levels
+    t: int               # trace hours
+    block: tuple[int, int, int]        # (bp, bg, bt) chosen tile
+    padded: tuple[int, int, int]       # (P_pad, G_pad, T_pad)
+    hbm_passes: int      # trace re-reads per sweep: ceil(G_pad / bg)
+    vmem_temp_bytes: int  # fp32 (bp, bg, bt) broadcast temporary
+    vmem_budget: int
+    pass_budget: int
+    flops: int           # estimate, bench convention: 4 * P * T * G
+
+    @property
+    def vmem_utilization(self) -> float:
+        return self.vmem_temp_bytes / self.vmem_budget
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of the padded launch volume that is padding."""
+        pad = self.padded[0] * self.padded[1] * self.padded[2]
+        return 1.0 - (self.p * self.g * self.t) / pad
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["block"] = list(d["block"])
+        d["padded"] = list(d["padded"])
+        d["vmem_utilization"] = self.vmem_utilization
+        d["padding_waste"] = self.padding_waste
+        return d
+
+
+def sweep_kernel_stats(
+    p: int,
+    g: int,
+    t: int,
+    *,
+    vmem_budget: int = SWEEP_VMEM_BUDGET,
+    pass_budget: int = SWEEP_HBM_PASS_BUDGET,
+) -> KernelStats:
+    """Stats for one (P, G, T) commitment-sweep shape.
+
+    Uses the real ``sweep_block_plan`` so the reported tile is exactly the
+    tile a launch would use; padding mirrors ``ops.commitment_sweep``
+    (rows to bp, grid/time to their lane tiles)."""
+    bp, bg, bt = sweep_block_plan(
+        p, g, t, vmem_budget=vmem_budget, pass_budget=pass_budget
+    )
+    p_pad, g_pad, t_pad = _round_up(p, bp), _round_up(g, bg), _round_up(t, bt)
+    return KernelStats(
+        kernel="commitment_sweep",
+        p=p, g=g, t=t,
+        block=(bp, bg, bt),
+        padded=(p_pad, g_pad, t_pad),
+        hbm_passes=-(-g_pad // bg),
+        vmem_temp_bytes=bp * bg * bt * 4,
+        vmem_budget=vmem_budget,
+        pass_budget=pass_budget,
+        flops=4 * p * t * g,
+    )

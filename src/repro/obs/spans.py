@@ -1,0 +1,162 @@
+"""Caller-side wall-clock span profiler (the observability layer's host
+timer).
+
+The planner core is wall-clock-free by contract — analysis rule R2 bans
+clock reads from ``core/``/``capacity/``/``kernels/``/``data/``/``serve/``,
+and rule R7 extends the ban to the whole of ``src/repro`` — so *this
+module* is the single sanctioned place a wall-clock is read.  Everything
+that wants timing (benchmarks, examples, the tournament scoreboard, CI
+artifacts) records **spans** through a :class:`SpanRecorder` owned by the
+caller:
+
+    rec = SpanRecorder()
+    with rec.span("tournament/rolling_portfolio", phase="execute"):
+        report = tn.run_tournament(...)
+    print(rec.report())
+
+Spans nest (the recorder keeps a stack, so ``report()`` renders a tree)
+and carry a coarse *phase* tag — ``"compile"`` (tracing + XLA compile),
+``"execute"`` (device compute), ``"host"`` (numpy/report assembly, I/O) —
+the three buckets a JAX program's wall time actually splits into.  The
+recorder never touches traced values: it brackets *host* calls, so R2's
+determinism guarantee (goldens are pure functions of their inputs) is
+untouched — a span changes when the machine does, a golden never.
+
+Core modules that optionally accept a recorder (``run_tournament(...,
+spans=...)``, ``TelemetryConfig.spans``) take it as an opaque object and
+call only :func:`span` / :meth:`SpanRecorder.span`; the clock read stays
+here.  ``span(None, ...)`` is a zero-cost no-op, so ``spans=None`` paths
+do no timing work at all.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+
+PHASES = ("compile", "execute", "host")
+
+
+@dataclasses.dataclass
+class Span:
+    """One recorded interval.  ``parent`` indexes into the recorder's span
+    list (-1 for roots); ``depth`` is the nesting level at entry."""
+
+    name: str
+    phase: str
+    start_s: float
+    duration_s: float = 0.0
+    depth: int = 0
+    parent: int = -1
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "phase": self.phase,
+            "start_s": self.start_s,
+            "duration_s": self.duration_s,
+            "depth": self.depth,
+            "parent": self.parent,
+        }
+
+
+class SpanRecorder:
+    """Append-only wall-clock span log with a nesting stack.
+
+    The clock defaults to ``time.perf_counter`` (monotonic, high
+    resolution); tests inject a fake clock to keep themselves
+    deterministic."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.spans: list[Span] = []
+        self._stack: list[int] = []
+
+    @contextlib.contextmanager
+    def span(self, name: str, phase: str = "host"):
+        """Record ``name`` for the duration of the ``with`` body."""
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r}; known: {PHASES}")
+        idx = len(self.spans)
+        self.spans.append(Span(
+            name=name, phase=phase, start_s=self._clock(),
+            depth=len(self._stack),
+            parent=self._stack[-1] if self._stack else -1,
+        ))
+        self._stack.append(idx)
+        try:
+            yield self.spans[idx]
+        finally:
+            self._stack.pop()
+            self.spans[idx].duration_s = (
+                self._clock() - self.spans[idx].start_s
+            )
+
+    # -- summaries ---------------------------------------------------------
+
+    @property
+    def total_s(self) -> float:
+        """Wall time covered by root spans (nested spans not double-counted)."""
+        return sum(s.duration_s for s in self.spans if s.parent == -1)
+
+    def summary(self) -> dict[str, dict]:
+        """name -> {count, total_s, mean_s, phase} over all spans."""
+        out: dict[str, dict] = {}
+        for s in self.spans:
+            agg = out.setdefault(
+                s.name, {"count": 0, "total_s": 0.0, "phase": s.phase}
+            )
+            agg["count"] += 1
+            agg["total_s"] += s.duration_s
+        for agg in out.values():
+            agg["mean_s"] = agg["total_s"] / agg["count"]
+        return out
+
+    def by_phase(self) -> dict[str, float]:
+        """phase -> total seconds (nested spans attributed to their own
+        phase; a parent's *self* time is its duration minus its children)."""
+        child_time: dict[int, float] = {}
+        for s in self.spans:
+            if s.parent >= 0:
+                child_time[s.parent] = (
+                    child_time.get(s.parent, 0.0) + s.duration_s
+                )
+        out = {p: 0.0 for p in PHASES}
+        for i, s in enumerate(self.spans):
+            self_s = s.duration_s - child_time.get(i, 0.0)
+            out[s.phase] += max(self_s, 0.0)
+        return out
+
+    def report(self) -> str:
+        """The span tree, one line per span, indented by nesting depth."""
+        lines = ["span                                   phase     seconds"]
+        for s in self.spans:
+            label = "  " * s.depth + s.name
+            lines.append(f"{label:38s} {s.phase:9s} {s.duration_s:9.4f}")
+        for p, t in self.by_phase().items():
+            lines.append(f"{'total ' + p:38s} {'':9s} {t:9.4f}")
+        return "\n".join(lines)
+
+    def to_dicts(self) -> list[dict]:
+        return [s.to_dict() for s in self.spans]
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(
+                {"spans": self.to_dicts(), "by_phase": self.by_phase()},
+                f, indent=2,
+            )
+
+
+@contextlib.contextmanager
+def span(recorder: SpanRecorder | None, name: str, phase: str = "host"):
+    """``recorder.span(...)`` when a recorder is present, a no-op
+    otherwise — the one-liner call sites use so ``spans=None`` costs
+    nothing (and reads no clock at all)."""
+    if recorder is None:
+        yield None
+        return
+    with recorder.span(name, phase=phase) as s:
+        yield s

@@ -19,7 +19,6 @@ Fault-tolerance model (single-host container, cluster-shaped logic):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -27,6 +26,7 @@ import jax
 from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import TokenPipeline
 from repro.models.model import Model
+from repro.obs.spans import SpanRecorder
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import build_train_step, init_train_state
 
@@ -85,6 +85,11 @@ class Trainer:
         self.watchdog = StragglerWatchdog(
             cfg.straggler_factor, cfg.straggler_ema
         )
+        # Per-step wall times come from the obs span profiler — the one
+        # sanctioned clock entry point (analysis rule R7) — so the trainer
+        # itself never reads a clock and the full step timeline is
+        # inspectable after fit() via `self.spans.report()`.
+        self.spans = SpanRecorder()
         step_fn = build_train_step(model, cfg.opt)
         jit_kw = {}
         if donate:
@@ -133,13 +138,12 @@ class Trainer:
                     )
                 batch_np = self.pipeline.next_batch()
                 batch = jax.tree.map(jax.numpy.asarray, batch_np)
-                t0 = time.perf_counter()
-                loss, self.params, self.opt_state = self.step_fn(
-                    self.params, self.opt_state, batch
-                )
-                loss = float(loss)
-                dt = time.perf_counter() - t0
-                self.watchdog.observe(self.step, dt)
+                with self.spans.span("train/step", phase="execute") as sp:
+                    loss, self.params, self.opt_state = self.step_fn(
+                        self.params, self.opt_state, batch
+                    )
+                    loss = float(loss)  # blocks on the device result
+                self.watchdog.observe(self.step, sp.duration_s)
                 self.losses.append(loss)
                 self.step += 1
                 if self.step % self.cfg.ckpt_every == 0:

@@ -1,0 +1,8 @@
+"""Planted R5 violation: an optional `telemetry=` kwarg with no
+disabled-path golden test anywhere under tests/."""
+
+
+def replay(demand, telemetry=None):
+    if telemetry is None:
+        return demand
+    return demand, {"ledger": list(demand)}

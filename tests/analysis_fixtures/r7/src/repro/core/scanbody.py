@@ -1,0 +1,14 @@
+"""Planted R7 violation: a print() inside a scan body — it fires once at
+trace time, not per step, so it looks like telemetry but measures nothing."""
+
+import jax
+import jax.numpy as jnp
+
+
+def body(carry, x):
+    print("step", carry)  # planted: trace-time side channel
+    return carry + x, x
+
+
+def run(xs):
+    return jax.lax.scan(body, jnp.float32(0.0), xs)

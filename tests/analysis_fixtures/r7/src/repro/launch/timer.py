@@ -1,0 +1,10 @@
+"""Planted R7 violation: an ad-hoc wall-clock pair outside
+``repro.obs.spans`` (and outside R2's determinism scopes)."""
+
+import time
+
+
+def timed(fn, *args):
+    t0 = time.perf_counter()  # planted: use repro.obs.spans.SpanRecorder
+    out = fn(*args)
+    return out, time.perf_counter() - t0

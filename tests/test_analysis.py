@@ -40,7 +40,9 @@ CASES = {
     "r5": "R5",
     "r5_policy": "R5",
     "r5_scenarios": "R5",
+    "r5_telemetry": "R5",
     "r6": "R6",
+    "r7": "R7",
 }
 
 

@@ -74,6 +74,19 @@ class TestExamples:
         assert "served 10 requests" in out
         assert "free-pool sizing" in out
 
+    def test_plan_telemetry(self, tmp_path, capsys):
+        ledger = tmp_path / "LEDGER.jsonl"
+        spans = tmp_path / "SPANS.json"
+        run_example(
+            "examples/plan_telemetry.py",
+            ["--ledger-out", str(ledger), "--spans-out", str(spans)],
+        )
+        out = capsys.readouterr().out
+        assert "cost attribution" in out
+        assert "unit economics" in out
+        assert "reconciliation" in out and "OK" in out
+        assert ledger.exists() and spans.exists()
+
 
 class TestDataTraces:
     def test_synthetic_pools_schema(self):

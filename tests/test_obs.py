@@ -1,0 +1,485 @@
+"""Observability layer (``repro.obs``): telemetry goldens, the
+cost-attribution ledger, span profiler, kernel stats, scenario replay,
+the CLI, and bench provenance.
+
+The load-bearing guarantee is bit-identity: ``telemetry=None`` (the
+default) must reproduce the pre-telemetry planner exactly — the scan
+only emits its extra ledger outputs when telemetry is on, so the
+disabled program is the same compiled program.  The hardcoded golden
+outputs below were captured *before* the telemetry plumbing landed, for
+every registry policy and every spot/migration/convertible band
+combination the planner exposes; ``telemetry=True`` must then reproduce
+the same totals bitwise (extra scan outputs, same billing math), and the
+ledger it materializes must reconcile with the report's weekly costs to
+f32 machine precision.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.capacity import simulator as sim
+from repro.core import api
+from repro.core import planner as pl
+from repro.core import replan
+from repro.data import scenarios as sc
+from repro.data import traces
+from repro.obs import (
+    CostLedger,
+    KernelStats,
+    SpanRecorder,
+    TelemetryConfig,
+    ledger_from_report,
+    resolve_telemetry,
+    sweep_kernel_stats,
+)
+from repro.obs.__main__ import main as obs_cli
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+ROLLING = dict(cadence_weeks=2, start_weeks=6, horizon_weeks=4,
+               compare=False)
+
+#: policy:s<spot>m<migration>c<convertible> -> [total_cost, targets.sum()]
+#: captured at the pre-telemetry HEAD with the harness in ``_run_case``.
+GOLDENS = {
+    "deterministic_hedge:s0m0c0": [585213.1875, 2579.50830078125],
+    "hindsight:s0m0c0": [538106.5625, 2979.73193359375],
+    "one_shot:s0m0c0": [546055.125, 2829.31884765625],
+    "one_shot:s0m0c1": [426567.0625, 2130.490234375],
+    "one_shot:s0m1c0": [426558.40625, 2129.86767578125],
+    "one_shot:s0m1c1": [426558.40625, 2129.86767578125],
+    "one_shot:s1m0c0": [516133.1875, 2273.6552734375],
+    "one_shot:s1m0c1": [402879.8515625, 1680.738037109375],
+    "one_shot:s1m1c0": [396272.78125, 1679.398193359375],
+    "one_shot:s1m1c1": [402877.0859375, 1679.398193359375],
+    "randomized_hedge:s0m0c0": [547963.8125, 2849.55029296875],
+    "rolling_portfolio:s0m0c0": [538633.8125, 2829.31884765625],
+    "rolling_portfolio:s0m0c1": [421820.84375, 2130.490234375],
+    "rolling_portfolio:s0m1c0": [421817.5, 2129.86767578125],
+    "rolling_portfolio:s0m1c1": [421817.5, 2129.86767578125],
+    "rolling_portfolio:s1m0c0": [494227.5, 2273.6552734375],
+    "rolling_portfolio:s1m0c1": [395715.2265625, 1680.738037109375],
+    "rolling_portfolio:s1m1c0": [385695.0078125, 1679.398193359375],
+    "rolling_portfolio:s1m1c1": [395719.5859375, 1679.398193359375],
+}
+
+_POOLS_CACHE: dict[bool, object] = {}
+
+
+def _pools(migration_fleet: bool):
+    """The golden fleets: migration fleets need an even pool count."""
+    if migration_fleet not in _POOLS_CACHE:
+        _POOLS_CACHE[migration_fleet] = (
+            traces.synthetic_pool_set(num_pools=4, num_hours=24 * 7 * 20,
+                                      migration=True)
+            if migration_fleet
+            else traces.synthetic_pool_set(num_pools=3,
+                                           num_hours=24 * 7 * 20)
+        )
+    return _POOLS_CACHE[migration_fleet]
+
+
+def _run_case(policy, s, m, c, **extra):
+    pools = _pools(bool(m or c))
+    return replan.replan_fleet_pools(
+        pools, policy=policy, spot=bool(s), migration=bool(m),
+        convertible=bool(c), **ROLLING, **extra,
+    )
+
+
+class TestTelemetryNoneGolden:
+    """telemetry=None keeps every policy x band path bit-identical to the
+    pre-telemetry planner: hardcoded golden outputs for the full grid."""
+
+    @pytest.mark.parametrize("case", sorted(GOLDENS))
+    def test_default_path_matches_pre_telemetry_golden(self, case):
+        policy, bands = case.split(":")
+        s, m, c = int(bands[1]), int(bands[3]), int(bands[5])
+        rep = _run_case(policy, s, m, c, telemetry=None)
+        want = GOLDENS[case]
+        np.testing.assert_allclose(rep.total_cost, want[0], rtol=1e-6)
+        np.testing.assert_allclose(
+            float(np.asarray(rep.targets).sum()), want[1], rtol=1e-6
+        )
+        # The disabled path must carry no telemetry artifacts at all.
+        assert rep.ledger is None
+        assert rep.committed_by_sku is None
+        assert rep.kernel_stats is None
+
+    def test_telemetry_on_is_bitwise_identical(self):
+        off = _run_case("rolling_portfolio", 1, 1, 1, telemetry=None)
+        on = _run_case("rolling_portfolio", 1, 1, 1, telemetry=True)
+        assert on.total_cost == off.total_cost  # bitwise, not approx
+        np.testing.assert_array_equal(
+            np.asarray(on.targets), np.asarray(off.targets)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(on.weekly_cost), np.asarray(off.weekly_cost)
+        )
+        assert on.ledger is not None and off.ledger is None
+
+
+@pytest.fixture(scope="module")
+def rep_full():
+    """All-bands telemetry-enabled report on the drifting migration
+    fleet — the acceptance configuration."""
+    return _run_case("rolling_portfolio", 1, 1, 1, telemetry=True)
+
+
+class TestCostLedger:
+    def test_reconciles_with_report_weekly_costs(self, rep_full):
+        res = rep_full.ledger.reconcile(rep_full)
+        assert res["ok"], res
+        assert res["max_rel"] <= 1e-5
+        np.testing.assert_allclose(
+            res["total_ledger"], rep_full.total_cost, rtol=1e-6
+        )
+
+    def test_sources_cover_every_band(self, rep_full):
+        led = rep_full.ledger
+        srcs = set(led.sources)
+        assert "on_demand" in srcs
+        assert {"spot_market", "spot_requeue", "spot_fallback"} <= srcs
+        assert any(s.startswith("commit:") for s in srcs)
+        assert any(s.startswith("convertible:") for s in srcs)
+        assert any(e.startswith("cloud:") for e in led.entities)
+
+    def test_attribute_slices_sum_to_total(self, rep_full):
+        led = rep_full.ledger
+        total = led.attribute()
+        np.testing.assert_allclose(total, led.total, rtol=1e-12)
+        by_week = sum(
+            led.attribute(week=int(w)) for w in led.weeks
+        )
+        np.testing.assert_allclose(by_week, total, rtol=1e-9)
+        by_entity = sum(led.attribute(pool=e) for e in led.entities)
+        np.testing.assert_allclose(by_entity, total, rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(led.by_source().values()), total, rtol=1e-9
+        )
+
+    def test_attribute_unknown_selectors_raise(self, rep_full):
+        led = rep_full.ledger
+        with pytest.raises(KeyError):
+            led.attribute(pool="not/a/pool")
+        with pytest.raises(KeyError):
+            led.attribute(source="not_a_source")
+        with pytest.raises(KeyError):
+            led.attribute(week=10**6)
+
+    def test_unit_economics_shape(self, rep_full):
+        econ = rep_full.ledger.unit_economics()
+        np.testing.assert_allclose(
+            econ["total_cost"], rep_full.ledger.total, rtol=1e-12
+        )
+        assert 0.0 <= econ["idle_fraction"] <= 1.0
+        assert 0.0 < econ["utilization_mean"] <= 1.0
+        assert econ["cost_per_used_chip_hour"] > 0.0
+        parts = (econ["committed_cost"] + econ["convertible_cost"]
+                 + econ["on_demand_cost"] + econ["spot_cost"])
+        np.testing.assert_allclose(parts, econ["total_cost"], rtol=1e-9)
+
+    def test_jsonl_roundtrip_is_exact(self, rep_full, tmp_path):
+        led = rep_full.ledger
+        path = str(tmp_path / "ledger.jsonl")
+        led.to_jsonl(path)
+        back = CostLedger.from_jsonl(path)
+        assert back.entities == led.entities
+        assert back.sources == led.sources
+        np.testing.assert_array_equal(back.cost, led.cost)
+        np.testing.assert_array_equal(back.volume, led.volume)
+        np.testing.assert_array_equal(back.used_hours, led.used_hours)
+        assert led.diff(back).max_abs_delta == 0.0
+
+    def test_diff_pinpoints_a_perturbed_cell(self, rep_full, tmp_path):
+        import dataclasses
+
+        led = rep_full.ledger
+        cost2 = led.cost.copy()
+        ei = 0
+        mi = led.sources.index("on_demand")
+        cost2[:, ei, mi] += 100.0
+        other = dataclasses.replace(led, cost=cost2)
+        diff = other.diff(led)
+        n_weeks = len(led.weeks)
+        np.testing.assert_allclose(diff.total_delta, 100.0 * n_weeks)
+        e, s, d = diff.top_movers(1)[0]
+        assert (e, s) == (led.entities[ei], "on_demand")
+        np.testing.assert_allclose(d, 100.0 * n_weeks)
+        assert "on_demand" in diff.report()
+
+    def test_ledger_requires_telemetry(self):
+        rep = _run_case("rolling_portfolio", 0, 0, 0, telemetry=None)
+        with pytest.raises(ValueError, match="telemetry"):
+            ledger_from_report(rep)
+
+
+class TestRequestSurfaces:
+    def test_plan_request_threads_telemetry(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        req = api.PlanRequest(
+            pools=pools, mode="rolling", telemetry=True,
+            rolling=api.RollingConfig(cadence_weeks=2, start_weeks=4,
+                                      compare=False),
+            horizon_weeks=4,
+        )
+        rep = api.plan(req)
+        assert rep.ledger is not None
+        assert rep.ledger.reconcile(rep)["ok"]
+
+    def test_one_shot_telemetry_is_a_construction_error(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        with pytest.raises(ValueError, match="rolling"):
+            api.PlanRequest(pools=pools, mode="one_shot", telemetry=True)
+        with pytest.raises(TypeError, match="rolling"):
+            pl.plan_fleet_pools(pools, mode="one_shot", telemetry=True)
+
+    def test_resolve_telemetry_spellings(self):
+        assert resolve_telemetry(None) is None
+        assert resolve_telemetry(False) is None
+        cfg = resolve_telemetry(True)
+        assert isinstance(cfg, TelemetryConfig) and cfg.ledger
+        same = TelemetryConfig(ledger=True, kernel_stats=False)
+        assert resolve_telemetry(same) is same
+        assert resolve_telemetry(
+            TelemetryConfig(ledger=False, kernel_stats=False)
+        ) is None
+        with pytest.raises(TypeError):
+            resolve_telemetry(1.5)
+
+
+class TestSpans:
+    def _fake_clock(self):
+        state = {"t": 0.0}
+
+        def clock():
+            state["t"] += 1.0
+            return state["t"]
+
+        return clock
+
+    def test_nesting_and_durations(self):
+        rec = SpanRecorder(clock=self._fake_clock())
+        with rec.span("outer", phase="execute"):
+            with rec.span("inner"):
+                pass
+        outer, inner = rec.spans
+        assert (outer.name, outer.depth, outer.parent) == ("outer", 0, -1)
+        assert (inner.name, inner.depth, inner.parent) == ("inner", 1, 0)
+        # clock ticks: outer@1, inner@2, inner ends@3, outer ends@4
+        assert inner.duration_s == 1.0
+        assert outer.duration_s == 3.0
+        assert rec.total_s == 3.0  # roots only, no double-count
+
+    def test_summary_and_by_phase(self):
+        rec = SpanRecorder(clock=self._fake_clock())
+        with rec.span("a", phase="execute"):
+            with rec.span("b", phase="host"):
+                pass
+        summ = rec.summary()
+        assert summ["a"]["count"] == 1 and summ["b"]["count"] == 1
+        phases = rec.by_phase()
+        # a's self time excludes b
+        assert phases["execute"] == 2.0 and phases["host"] == 1.0
+        assert phases["compile"] == 0.0
+        assert "a" in rec.report() and "total execute" in rec.report()
+
+    def test_unknown_phase_rejected(self):
+        rec = SpanRecorder()
+        with pytest.raises(ValueError, match="phase"):
+            with rec.span("x", phase="gpu"):
+                pass
+
+    def test_module_span_noops_on_none(self):
+        from repro.obs import span
+
+        with span(None, "anything") as s:
+            assert s is None
+
+    def test_to_json(self, tmp_path):
+        rec = SpanRecorder(clock=self._fake_clock())
+        with rec.span("a"):
+            pass
+        path = tmp_path / "spans.json"
+        rec.to_json(str(path))
+        payload = json.loads(path.read_text())
+        assert payload["spans"][0]["name"] == "a"
+        assert set(payload["by_phase"]) == {"compile", "execute", "host"}
+
+
+class TestKernelStats:
+    def test_stats_respect_budgets(self):
+        # The planner's own shape: g is the candidate grid (num_grid).
+        st = sweep_kernel_stats(12, 128, 24 * 365)
+        assert isinstance(st, KernelStats)
+        assert st.vmem_temp_bytes <= st.vmem_budget
+        assert st.hbm_passes <= st.pass_budget
+        assert st.flops == 4 * 12 * 128 * 24 * 365
+        assert 0.0 < st.vmem_utilization <= 1.0
+        assert st.padding_waste >= 0.0
+        d = st.to_dict()
+        assert d["kernel"] == "commitment_sweep"
+        assert d["block"] == list(st.block)
+
+    def test_grid_solver_report_carries_stats(self):
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+        rep = replan.replan_fleet_pools(
+            pools, cadence_weeks=2, start_weeks=4, horizon_weeks=4,
+            compare=False, solver="grid", telemetry=True,
+        )
+        assert rep.kernel_stats is not None
+        assert rep.kernel_stats.hbm_passes >= 1
+        assert rep.ledger.meta["kernel_stats"]["kernel"] == \
+            "commitment_sweep"
+
+
+class TestTelemetryOverhead:
+    def test_ledger_overhead_within_budget(self):
+        """telemetry=True costs <= 1.3x the quick-bench scan runtime —
+        the extra scan outputs are tiny arrays, not extra compute."""
+        pools = traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 10)
+        kw = dict(cadence_weeks=2, start_weeks=4, horizon_weeks=4,
+                  compare=False)
+
+        def timed(**extra):
+            replan.replan_fleet_pools(pools, **kw, **extra)  # warmup
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                replan.replan_fleet_pools(pools, **kw, **extra)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        base = timed(telemetry=None)
+        tele = timed(telemetry=True)
+        assert tele <= 1.3 * base + 0.05, (
+            f"telemetry overhead {tele / base:.2f}x exceeds 1.3x "
+            f"({tele:.3f}s vs {base:.3f}s)"
+        )
+
+
+class TestScenarioReplay:
+    @pytest.fixture(scope="class")
+    def pools(self):
+        return traces.synthetic_pool_set(num_pools=2, num_hours=24 * 7 * 12)
+
+    @pytest.fixture(scope="class")
+    def batched(self, pools):
+        # A perturbing family, so scenarios 1.. are genuinely different
+        # demand futures (the int spelling's "realized" family replays
+        # the same trace N times).
+        return replan.replan_fleet_pools(
+            pools, spot=True,
+            scenarios=sc.ScenarioConfig(n_scenarios=3, family="growth"),
+            cadence_weeks=2, start_weeks=4, horizon_weeks=4,
+            compare=False,
+        )
+
+    def test_scenario0_matches_unbatched_replay(self, pools, batched):
+        unbatched = replan.replan_fleet_pools(
+            pools, spot=True, cadence_weeks=2, start_weeks=4,
+            horizon_weeks=4, compare=False,
+        )
+        a = sim.replay_spot_plan(pools, batched, num_draws=8, seed=0,
+                                 scenario=0)
+        b = sim.replay_spot_plan(pools, unbatched, num_draws=8, seed=0)
+        assert a.realized_cost == b.realized_cost
+        np.testing.assert_array_equal(a.availability, b.availability)
+
+    def test_nonzero_scenario_replays_its_own_future(self, pools, batched):
+        rep1 = sim.replay_spot_plan(pools, batched, num_draws=8, seed=0,
+                                    scenario=1)
+        assert np.isfinite(rep1.realized_cost)
+        np.testing.assert_allclose(
+            rep1.planned_cost, float(batched.scenario_cost[1]), rtol=1e-6
+        )
+        rep0 = sim.replay_spot_plan(pools, batched, num_draws=8, seed=0,
+                                    scenario=0)
+        assert rep1.realized_cost != rep0.realized_cost
+
+    def test_out_of_range_scenario_raises(self, pools, batched):
+        with pytest.raises(ValueError, match="out of range"):
+            sim.replay_spot_plan(pools, batched, scenario=3)
+        unbatched = replan.replan_fleet_pools(
+            pools, spot=True, cadence_weeks=2, start_weeks=4,
+            horizon_weeks=4, compare=False,
+        )
+        with pytest.raises(ValueError, match="out of range"):
+            sim.replay_spot_plan(pools, unbatched, scenario=1)
+
+
+class TestObsCli:
+    @pytest.fixture(scope="class")
+    def ledger_paths(self, rep_full, tmp_path_factory):
+        tmp = tmp_path_factory.mktemp("obs_cli")
+        a = str(tmp / "a.jsonl")
+        b = str(tmp / "b.jsonl")
+        led = rep_full.ledger
+        led.to_jsonl(a)
+        import dataclasses
+
+        bumped = dataclasses.replace(led, cost=led.cost + 1.0)
+        bumped.to_jsonl(b)
+        return a, b
+
+    def test_report(self, ledger_paths, tmp_path, capsys):
+        a, _ = ledger_paths
+        out_json = str(tmp_path / "report.json")
+        assert obs_cli(["report", a, "--json", out_json]) == 0
+        assert "spend by source" in capsys.readouterr().out
+        payload = json.loads(Path(out_json).read_text())
+        assert "unit_economics" in payload and "by_source" in payload
+
+    def test_diff_gate(self, ledger_paths, capsys):
+        a, b = ledger_paths
+        assert obs_cli(["diff", a, a]) == 0
+        assert obs_cli(["diff", a, b]) == 0          # no gate: report only
+        assert obs_cli(["diff", a, b, "--fail-above", "0.5"]) == 1
+        assert "FAIL" in capsys.readouterr().err
+
+    def test_top(self, ledger_paths, capsys):
+        a, b = ledger_paths
+        assert obs_cli(["top", a, "-n", "3"]) == 0
+        assert obs_cli(["top", a, b, "--fail-above", "0.5"]) == 1
+        out = capsys.readouterr().out
+        assert "top 3 spend cells" in out
+
+
+class TestBenchProvenance:
+    def test_quick_bench_json_is_stamped(self, tmp_path):
+        if str(REPO_ROOT) not in sys.path:
+            sys.path.insert(0, str(REPO_ROOT))
+        from benchmarks import run as bench_run
+
+        out = str(tmp_path / "BENCH.json")
+        spans = str(tmp_path / "SPANS.json")
+        bench_run.main([
+            "--quick", "--json", out, "--spans", spans,
+            "--filter", "commitment_sweep",
+        ])
+        payload = json.loads(Path(out).read_text())
+        assert payload["schema_version"] == bench_run.BENCH_SCHEMA_VERSION
+        assert payload["git_sha"] and payload["git_sha"] != ""
+        assert payload["quick"] is True and payload["seed"] == 0
+        for key in ("jax", "numpy", "backend", "python", "platform"):
+            assert payload[key]
+        assert payload["rows"] and not payload["failures"]
+        assert payload["spans"]  # per-bench wall-clock breakdown
+        assert "commitment_sweep" in payload["kernel_stats"]
+        span_payload = json.loads(Path(spans).read_text())
+        assert span_payload["spans"]
+
+    def test_unknown_filter_exits_nonzero(self):
+        if str(REPO_ROOT) not in sys.path:
+            sys.path.insert(0, str(REPO_ROOT))
+        from benchmarks import run as bench_run
+
+        with pytest.raises(SystemExit):
+            bench_run.main(["--quick", "--filter", "no_such_bench"])

@@ -2,14 +2,17 @@
 
 Every optional-subsystem keyword the planner stack exposes (``spot=``,
 ``migration=``, ``convertible=``, ``policy=``, ``scenarios=``,
-``telemetry=``) shipped with a hard guarantee: the
+``telemetry=``, the telemetry knobs ``calibration=``/``provenance=``,
+and the replan ``cadence=`` mode) shipped with a hard guarantee: the
 disabled path stays bit-identical to the pre-subsystem planner, proven by
 hardcoded golden tests.  This rule keeps that guarantee alive: for each
-watched kwarg that actually appears as a defaulted parameter somewhere in
-``src/repro``, some top-level test file must (a) reference the disabled
-spelling (``<kw>=None`` or ``<kw>=False``) and (b) carry golden assertions
-(``golden`` in its text).  Drop the golden test and the next refactor can
-shift the disabled path without anything noticing.
+watched kwarg that actually appears as a defaulted parameter (or
+annotated config-dataclass field) somewhere in ``src/repro``, some
+top-level test file must (a) reference the disabled spelling —
+``<kw>=None``/``<kw>=False``, or the per-kwarg override in
+:data:`DISABLED_SPELLINGS` (``cadence="weekly"``) — and (b) carry golden
+assertions (``golden`` in its text).  Drop the golden test and the next
+refactor can shift the disabled path without anything noticing.
 
 The same contract extends to *request surfaces*: redesigned entry points
 (:class:`~repro.core.api.PlanRequest`) promise bit-identity with the
@@ -25,7 +28,15 @@ import re
 from repro.analysis.engine import Finding, Rule
 
 WATCHED = ("spot", "migration", "convertible", "policy", "scenarios",
-           "telemetry")
+           "telemetry", "calibration", "provenance", "cadence")
+
+#: Disabled spelling per watched kwarg: most subsystems disable with
+#: ``None``/``False``, but ``cadence=`` is a string mode whose default
+#: ("weekly") is the bit-identical pre-cadence path.
+DISABLED_SPELLINGS = {
+    "cadence": r"""(['"])weekly\1""",
+}
+_DEFAULT_DISABLED = r"(None|False)\b"
 
 #: Redesigned entry-point classes that must keep a construct-it golden
 #: test proving parity with the legacy spelling.
@@ -33,19 +44,34 @@ WATCHED_SURFACES = ("PlanRequest",)
 
 
 def _kwargs_in_repo(ctx) -> dict[str, str]:
-    """watched kwarg -> file where it first appears as a defaulted param."""
+    """watched kwarg -> file where it first appears as a defaulted param.
+
+    Both spellings of an optional subsystem knob count: a defaulted
+    function parameter (``def replan(..., cadence="weekly")``) and an
+    annotated dataclass field with a default (``calibration: bool =
+    False`` on :class:`~repro.obs.config.TelemetryConfig`) — config
+    dataclasses are how the telemetry knobs ship."""
     found: dict[str, str] = {}
     for info in ctx.modules.values():
         for node in ast.walk(info.tree):
-            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                continue
-            args = node.args
-            defaulted = [
-                a.arg for a in args.args[len(args.args) - len(args.defaults):]
-            ] + [
-                a.arg for a, d in zip(args.kwonlyargs, args.kw_defaults)
-                if d is not None
-            ]
+            defaulted: list[str] = []
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                defaulted = [
+                    a.arg
+                    for a in args.args[len(args.args) - len(args.defaults):]
+                ] + [
+                    a.arg for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                    if d is not None
+                ]
+            elif isinstance(node, ast.ClassDef):
+                defaulted = [
+                    stmt.target.id
+                    for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and stmt.value is not None
+                ]
             for kw in WATCHED:
                 if kw in defaulted and kw not in found:
                     found[kw] = ctx.relpath(info.path)
@@ -70,7 +96,8 @@ def run(ctx) -> list[Finding]:
     findings: list[Finding] = []
     present = _kwargs_in_repo(ctx)
     for kw, where in sorted(present.items()):
-        pat = re.compile(rf"\b{kw}\s*=\s*(None|False)\b")
+        disabled = DISABLED_SPELLINGS.get(kw, _DEFAULT_DISABLED)
+        pat = re.compile(rf"\b{kw}\s*=\s*{disabled}")
         covered = any(
             pat.search(t.source) and "golden" in t.source.lower()
             for t in ctx.tests.values()
@@ -82,8 +109,9 @@ def run(ctx) -> list[Finding]:
                 message=(
                     f"optional subsystem kwarg `{kw}=` (first seen in "
                     f"{where}) has no disabled-path golden test: no test "
-                    f"file references `{kw}=None`/`{kw}=False` alongside "
-                    "golden assertions"
+                    f"file references the disabled spelling "
+                    f"(`{kw}={DISABLED_SPELLINGS.get(kw, 'None/False')}`) "
+                    "alongside golden assertions"
                 ),
             ))
     for name, where in sorted(_surfaces_in_repo(ctx).items()):

@@ -67,11 +67,46 @@ class RollingConfig:
     irls_carry: bool = False
     backend: Literal["scan", "loop"] = "scan"
     compare: bool = True
+    #: "weekly" re-solves on the ``cadence_weeks`` grid (the default,
+    #: bit-identical to pre-cadence builds); "breach" re-solves only in
+    #: weeks where last week's realized demand exited the forecast band
+    #: held since the previous decision (forecasting policies only).
+    cadence: Literal["weekly", "breach"] = "weekly"
+    #: (q_lo, q_hi) forecast fractiles framing the breach band.
+    breach_band: tuple = (0.05, 0.95)
+    #: a week breaches when more than ``tolerance x nominal miss mass``
+    #: of its 168 hours exit the band (exact integer hour budget).
+    breach_tolerance: float = 4.0
 
     def __post_init__(self):
         if self.cadence_weeks < 1:
             raise ValueError(
                 f"cadence_weeks must be >= 1, got {self.cadence_weeks}"
+            )
+        if self.cadence not in ("weekly", "breach"):
+            raise ValueError(
+                f"unknown cadence {self.cadence!r}; "
+                "known: ('weekly', 'breach')"
+            )
+        if self.cadence == "breach" and self.cadence_weeks != 1:
+            raise ValueError(
+                "cadence='breach' evaluates every week and masks "
+                "decisions itself; combine it with cadence_weeks=1, "
+                f"got cadence_weeks={self.cadence_weeks}"
+            )
+        if len(self.breach_band) != 2:
+            raise ValueError(
+                f"breach_band must be a (lo, hi) pair, got {self.breach_band}"
+            )
+        lo, hi = self.breach_band
+        if not 0.0 < lo < hi < 1.0:
+            raise ValueError(
+                "breach_band must be an increasing fractile pair inside "
+                f"(0, 1), got {self.breach_band}"
+            )
+        if self.breach_tolerance <= 0.0:
+            raise ValueError(
+                f"breach_tolerance must be > 0, got {self.breach_tolerance}"
             )
         if self.start_weeks is not None and self.start_weeks < 1:
             raise ValueError(

@@ -105,6 +105,19 @@ class PolicyContext:
     targets_for: Callable | None = None
     # migration hook: (yhat, week) -> recomposed yhat
     compose_forecast: Callable | None = None
+    #: "weekly" (the harness cadence rule) or "breach": re-solve only in
+    #: weeks where last week's realized demand exited the forecast band
+    #: held since the previous decision (plus the mandatory start week).
+    cadence_mode: str = "weekly"
+    #: (q_lo, q_hi) forecast fractile pair that frames the breach band.
+    breach_band: tuple = (0.05, 0.95)
+    #: hour-budget multiplier: a week breaches when more than
+    #: ``tolerance x nominal miss mass`` of its 168 hours exit the band.
+    breach_tolerance: float = 4.0
+    #: scenario-batched replays flatten (N, P) -> R demand rows; breach
+    #: decisions are fleet-wide *per scenario*, so the mask is reduced
+    #: over each block of ``num_pools / scenario_blocks`` rows.
+    scenario_blocks: int = 1
 
     @property
     def num_pools(self) -> int:
@@ -127,6 +140,10 @@ class Observation(NamedTuple):
     d_prev: jnp.ndarray | None   # (P, 168) last week's realized demand
     #  (None unless the policy sets ``needs_prev_demand`` — the default
     #  harness program must not gain even a dead gather)
+    #: (P, TRAIL_WEEKS*168) trailing realized demand window, the spread
+    #: anchor for ``fc.anchored_fractile_levels``; gathered only under
+    #: ``cadence_mode="breach"`` or calibration telemetry, None otherwise.
+    d_trail: Any = None
 
 
 class Decision(NamedTuple):
@@ -135,7 +152,14 @@ class Decision(NamedTuple):
     targets: jnp.ndarray         # (P, K) absolute stack widths to hold
     floor: jnp.ndarray | None    # (P,) spot floor (forecasting + spot only)
     yhat: jnp.ndarray | None     # (P, H) forecast (None = non-forecasting)
-    is_decision: jnp.ndarray     # scalar bool: may this week buy?
+    is_decision: jnp.ndarray     # bool: may this week buy?  scalar, or a
+    #  per-row (P,) vector under ``cadence_mode="breach"`` (uniform
+    #  within each scenario block)
+    #: optional dict of extra per-week arrays the harness forwards into
+    #: the scan outputs verbatim (breach mode emits the active band as
+    #: ``band_lo``/``band_hi``); None on the default paths so the weekly
+    #: compiled program is unchanged.
+    extras: Any = None
 
 
 class Policy:
@@ -175,22 +199,47 @@ class RollingPortfolioPolicy(Policy):
 
     def setup(self, ctx: PolicyContext):
         carry_irls = ctx.irls_carry and ctx.irls_iters > 0
+        breach = ctx.cadence_mode == "breach"
         # Incremental IRLS: seed the scan state with the exact adjustment
         # moments on the start prefix; each week then solves against
         # prefix + carried moments and appends only the newest week's
         # block.  Off (the default) the pstate stays () and the compiled
         # program is unchanged.
-        pstate0 = (
+        inner0 = (
             fc.irls_carry_init(ctx.state, ctx.start_weeks, ctx.irls_iters)
             if carry_irls else ()
         )
+        if breach:
+            q_lo, q_hi = ctx.breach_band
+            # Integer hour budgets: a week breaches when strictly MORE
+            # than tolerance x the nominal miss mass of its 168 hours
+            # exit the band.  Counts and thresholds are exact ints so a
+            # host-side python-loop oracle over the emitted bands
+            # reproduces the decision mask bit-for-bit.
+            allow_above = int(
+                ctx.breach_tolerance * (1.0 - q_hi) * HOURS_PER_WEEK
+            )
+            allow_below = int(ctx.breach_tolerance * q_lo * HOURS_PER_WEEK)
+            blocks = ctx.scenario_blocks
+            rows_per = ctx.num_pools // blocks
+            band0 = (
+                jnp.zeros((ctx.num_pools,), jnp.float32),
+                jnp.zeros((ctx.num_pools,), jnp.float32),
+            )
+            pstate0 = (inner0, band0)
+        else:
+            pstate0 = inner0
 
         def decide(pstate, obs: Observation):
             w = obs.week
+            if breach:
+                inner, (lo, hi) = pstate
+            else:
+                inner = pstate
             if carry_irls:
-                g_adj, r_adj = pstate
+                g_adj, r_adj = inner
                 beta = fc.solve_prefix_adjusted(ctx.state, w, g_adj, r_adj)
-                pstate = fc.irls_carry_extend(
+                inner = fc.irls_carry_extend(
                     ctx.state, beta, g_adj, r_adj, w
                 )
             else:
@@ -202,8 +251,27 @@ class RollingPortfolioPolicy(Policy):
             if ctx.compose_forecast is not None:
                 yhat = ctx.compose_forecast(yhat, w)
             targets, floor = ctx.targets_for(yhat)
-            return pstate, Decision(
-                targets, floor, yhat, self._is_decision(ctx, w)
+            if not breach:
+                return inner, Decision(
+                    targets, floor, yhat, self._is_decision(ctx, w)
+                )
+            # Band breach on the most recent completed week: the band
+            # held in the carry is the fractile pair of the forecast made
+            # at the last decision week.
+            above = (obs.d_prev > hi[:, None]).sum(-1)       # (R,) int
+            below = (obs.d_prev < lo[:, None]).sum(-1)
+            breach_row = (above > allow_above) | (below > allow_below)
+            is_dec = (w == ctx.start_weeks) | breach_row
+            # Fleet-wide per scenario: any pool breaching re-solves its
+            # whole scenario block (blocks == 1 -> the whole fleet).
+            scen = is_dec.reshape(blocks, rows_per).any(axis=1)
+            is_dec = jnp.repeat(scen, rows_per)              # (R,) bool
+            band = fc.anchored_fractile_levels(obs.d_trail, (q_lo, q_hi))
+            lo = jnp.where(is_dec, band[:, 0], lo)
+            hi = jnp.where(is_dec, band[:, 1], hi)
+            return (inner, (lo, hi)), Decision(
+                targets, floor, yhat, is_dec,
+                {"band_lo": lo, "band_hi": hi},
             )
 
         return pstate0, decide

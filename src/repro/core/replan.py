@@ -87,9 +87,11 @@ from repro.core.planner import (
 from repro.core.portfolio import allocate_convertible  # noqa: F401  (API)
 from repro.data import scenarios as sc
 from repro.launch import mesh as mesh_mod
+from repro.obs import calibration as obs_calib
 from repro.obs import config as obs_config
 from repro.obs import kernelstats as obs_kstats
 from repro.obs import ledger as obs_ledger
+from repro.obs import provenance as obs_prov
 
 pricing.validate_tables()
 
@@ -186,6 +188,25 @@ class RollingPlanReport:
     od_volume: np.ndarray | None = None                # (S, P) chip-hours
     ledger: "obs_ledger.CostLedger | None" = None
     kernel_stats: "obs_kstats.KernelStats | None" = None
+    # Decision cadence.  "weekly" is the harness grid (the default, the
+    # pre-cadence program bit for bit); "breach" re-solves only in weeks
+    # where realized demand exited the forecast band held since the last
+    # decision.  ``decision_mask`` records which evaluated weeks decided —
+    # (S,) bool, (S, N) on scenario batches (uniform within a scenario);
+    # the breach bands ride along so a host-side oracle can replay the
+    # mask exactly.
+    cadence: str = "weekly"
+    decision_mask: np.ndarray | None = None            # (S,) / (S, N)
+    breach_band_lo: np.ndarray | None = None           # (S, P) / (S, N, P)
+    breach_band_hi: np.ndarray | None = None
+    # Calibration telemetry (``TelemetryConfig(calibration=True)``): the
+    # per-week forecast fractile levels the scan emitted and the scored
+    # CalibrationCube (hits / coverage / pinball vs realized demand).
+    fractile_levels: np.ndarray | None = None      # (S, P, Q) / (S, N, P, Q)
+    calibration: "obs_calib.CalibrationCube | None" = None
+    # Decision provenance (``provenance=True``): queryable per-week record
+    # of buys, roll-offs and binding constraints on scenario 0.
+    decision_log: "obs_prov.DecisionLog | None" = None
 
     @property
     def weekly_cost(self) -> np.ndarray:
@@ -205,6 +226,14 @@ class RollingPlanReport:
             "total_cost": self.total_cost,
             "savings_vs_on_demand": self.savings_vs_on_demand,
         }
+        if self.cadence != "weekly":
+            out["cadence"] = self.cadence
+        if self.decision_mask is not None:
+            dm0 = (
+                self.decision_mask if self.decision_mask.ndim == 1
+                else self.decision_mask[:, 0]
+            )
+            out["decision_weeks"] = int(dm0.sum())
         if self.spot_cost is not None:
             out["spot_cost"] = float(self.spot_cost.sum())
             out["spot_chip_hours"] = float(self.spot_volume.sum())
@@ -291,6 +320,9 @@ def _merge_scenario_reports(
         conv_committed_by_sku=cat("conv_committed_by_sku", 1),
         used_hours=cat("used_hours", 1),
         od_volume=cat("od_volume", 1),
+        breach_band_lo=cat("breach_band_lo", 1),
+        breach_band_hi=cat("breach_band_hi", 1),
+        fractile_levels=cat("fractile_levels", 1),
         one_shot_weekly_cost=cat("one_shot_weekly_cost", 1),
         hindsight_weekly_cost=cat("hindsight_weekly_cost", 1),
         hindsight_widths=cat("hindsight_widths", 0),
@@ -301,6 +333,27 @@ def _merge_scenario_reports(
         scenario_regret=cat("scenario_regret", 0),
         n_scenarios=int(ns.sum()),
     )
+    if first.decision_mask is not None:
+        # Weekly-mode masks are (S,) and identical across chunks; breach
+        # masks carry the scenario axis and concatenate along it.
+        rep.decision_mask = (
+            first.decision_mask if first.decision_mask.ndim == 1
+            else np.concatenate([p.decision_mask for p in parts], axis=1)
+        )
+    if first.calibration is not None:
+        cubes = [p.calibration for p in parts]
+        rep.calibration = dataclasses.replace(
+            cubes[0],
+            levels=np.concatenate([c.levels for c in cubes], axis=1),
+            hits=np.concatenate([c.hits for c in cubes], axis=1),
+            pinball=np.concatenate([c.pinball for c in cubes], axis=1),
+            realized_mean=np.concatenate(
+                [c.realized_mean for c in cubes], axis=1
+            ),
+            realized_peak=np.concatenate(
+                [c.realized_peak for c in cubes], axis=1
+            ),
+        )
     rep.total_cost = float(rep.scenario_cost.mean())
     rep.all_on_demand_cost = float(np.average(
         [p.all_on_demand_cost for p in parts], weights=ns
@@ -357,6 +410,9 @@ def replan_fleet_pools(
     scenarios: "sc.ScenarioConfig | int | None" = None,
     irls_carry: bool = False,
     telemetry: "obs_config.TelemetryConfig | bool | None" = None,
+    cadence: Literal["weekly", "breach"] = "weekly",
+    breach_band: tuple = (0.05, 0.95),
+    breach_tolerance: float = 4.0,
     _scen_slice: tuple[int, int] | None = None,
 ) -> RollingPlanReport:
     """Replay the rolling re-planning loop over ``pools``.
@@ -435,6 +491,28 @@ def replan_fleet_pools(
     the :class:`~repro.obs.kernelstats.KernelStats` of the sweep shape.
     With ``telemetry=None`` no extra scan outputs exist, so every replay
     compiles the exact pre-telemetry program (golden-tested).
+
+    ``TelemetryConfig(calibration=True)`` additionally emits each week's
+    forecast fractile levels (``tele.fractiles``) from the scan and
+    scores them against realized demand as a
+    :class:`~repro.obs.calibration.CalibrationCube` — per (week x pool x
+    fractile) hit indicators, empirical coverage vs nominal, interval
+    widths and pinball loss, with per-scenario-family distributions when
+    scenario-batched.  ``provenance=True`` emits per-week decision
+    records (buys per SKU, roll-offs, binding constraint: envelope vs
+    spot cap vs convertible suppression) materialized as a
+    :class:`~repro.obs.provenance.DecisionLog`.  Both require a
+    forecasting policy (calibration scores the forecast) and, like the
+    ledger, add ZERO scan outputs when off.
+
+    ``cadence="breach"`` (with ``cadence_weeks=1``) replaces the weekly
+    decision grid with band-breach triggering: the policy re-solves only
+    in weeks where last week's realized demand spent more than
+    ``breach_tolerance x`` the nominal miss mass of its hours outside
+    the ``breach_band`` fractile pair of the forecast made at the last
+    decision (plus the mandatory start week).  The mask is computed
+    in-scan through the policy ``Decision.is_decision`` carry; the
+    default ``cadence="weekly"`` path stays bit-identical.
     """
     options = options if options is not None else pf.options_from_pricing()
     od = od_rate if od_rate is not None else pricing.on_demand_premium()
@@ -443,6 +521,15 @@ def replan_fleet_pools(
         start_weeks = min(max(horizon_weeks, total_weeks // 4),
                           max(total_weeks - 1, 1))
     _validate(total_weeks, start_weeks, cadence_weeks)
+    if cadence not in ("weekly", "breach"):
+        raise ValueError(
+            f"unknown cadence {cadence!r}; known: ('weekly', 'breach')"
+        )
+    if cadence == "breach" and cadence_weeks != 1:
+        raise ValueError(
+            "cadence='breach' evaluates every week and masks decisions "
+            f"itself; use cadence_weeks=1, got {cadence_weeks}"
+        )
     tele = obs_config.resolve_telemetry(telemetry)
 
     scen = sc.resolve_scenarios(scenarios)
@@ -461,7 +548,8 @@ def replan_fleet_pools(
                 irls_iters=irls_iters, backend=backend, compare=compare,
                 spot=spot, migration=migration, convertible=convertible,
                 policy=policy, scenarios=scen, irls_carry=irls_carry,
-                telemetry=tele,
+                telemetry=tele, cadence=cadence, breach_band=breach_band,
+                breach_tolerance=breach_tolerance,
                 _scen_slice=(lo, min(lo + scen.chunk, scen.n_scenarios)),
             )
             for lo in range(0, scen.n_scenarios, scen.chunk)
@@ -585,6 +673,18 @@ def replan_fleet_pools(
                 f"{'/'.join(bands)} bands key on the weekly forecast; "
                 "use a forecasting policy or disable the bands"
             )
+        if tele is not None and tele.calibration:
+            raise ValueError(
+                f"policy {pcy.name!r} does not forecast, but "
+                "TelemetryConfig(calibration=True) scores the weekly "
+                "forecast fractiles; use a forecasting policy"
+            )
+        if cadence == "breach":
+            raise ValueError(
+                f"policy {pcy.name!r} does not forecast, but "
+                "cadence='breach' triggers on the forecast band; use a "
+                "forecasting policy"
+            )
 
     state = fc.prefix_fit_state(
         fit_demand, cfg, horizon_hours=horizon_hours,
@@ -697,23 +797,41 @@ def replan_fleet_pools(
     else:
         compose_forecast = None
 
-    def make_ctx(cadence: int, solve_fn) -> pol.PolicyContext:
+    def make_ctx(
+        cadence_wk: int, solve_fn, mode: str = "weekly"
+    ) -> pol.PolicyContext:
         """The full-harness policy context: ``targets_for`` carries the
         configured solver (quantile or grid sweep) and the spot floors;
-        ``compose_forecast`` the migration recomposition."""
+        ``compose_forecast`` the migration recomposition.  ``mode`` is
+        "weekly" for every baseline replay — only the main replay runs
+        the requested cadence."""
         return pol.PolicyContext(
             demand=demand, options=options, clouds=row_clouds, od=od,
             rates=rates, term_weeks=term_weeks, avail=avail_p, qs=qs,
             w_hours=w_hours, start_weeks=start_weeks,
-            cadence_weeks=cadence, horizon_weeks=horizon_weeks,
+            cadence_weeks=cadence_wk, horizon_weeks=horizon_weeks,
             total_weeks=total_weeks, state=state, solve_fn=solve_fn,
             irls_iters=irls_iters, irls_carry=irls_carry,
             targets_for=targets_for,
             compose_forecast=compose_forecast,
+            cadence_mode=mode, breach_band=breach_band,
+            breach_tolerance=breach_tolerance, scenario_blocks=num_scen,
         )
 
-    def make_step(cadence: int, solve_fn, step_policy: pol.Policy):
-        pstate0, decide = step_policy.setup(make_ctx(cadence, solve_fn))
+    def make_step(
+        cadence_wk: int, solve_fn, step_policy: pol.Policy,
+        mode: str = "weekly",
+    ):
+        pstate0, decide = step_policy.setup(
+            make_ctx(cadence_wk, solve_fn, mode)
+        )
+        needs_prev = step_policy.needs_prev_demand or mode == "breach"
+        # The trailing realized window anchoring the fractile bands
+        # (spread from realized hours, level from the forecast).  Only
+        # breach cadence and calibration telemetry pay for the gather.
+        needs_trail = mode == "breach" or (
+            tele is not None and tele.calibration
+        )
 
         def step(carry, w):
             if conv_opts is None:
@@ -736,16 +854,46 @@ def replan_fleet_pools(
                 jax.lax.dynamic_index_in_dim(
                     demand_wk, w - 1, axis=1, keepdims=False
                 )
-                if step_policy.needs_prev_demand else None
+                if needs_prev else None
             )
+            d_trail = None
+            if needs_trail:
+                # (R, TRAIL_WEEKS, 168) -> (R, TRAIL_WEEKS*168); the
+                # dynamic-slice start clamps, so the first replayed weeks
+                # of a short start simply see a shifted-but-valid window.
+                d_trail = jax.lax.dynamic_slice_in_dim(
+                    demand_wk, w - fc.TRAIL_WEEKS, fc.TRAIL_WEEKS, axis=1
+                ).reshape(demand_wk.shape[0], -1)
             pstate, dec = decide(
-                pstate, pol.Observation(week=w, active=active, d_prev=d_prev)
+                pstate,
+                pol.Observation(
+                    week=w, active=active, d_prev=d_prev, d_trail=d_trail
+                ),
             )
-            widths, floor, yhat, is_dec = dec
+            widths, floor, yhat, is_dec = (
+                dec.targets, dec.floor, dec.yhat, dec.is_decision
+            )
+            # Weekly cadences emit a scalar is_dec and the masks below
+            # broadcast it exactly as before; breach mode emits a per-row
+            # (R,) vector, lifted to a column at trace time so the weekly
+            # compiled program is untouched.
+            vec_dec = getattr(is_dec, "ndim", 0) >= 1
+            dec_p = is_dec[:, None] if vec_dec else is_dec
+            if conv_opts is not None:
+                # Cloud-row view of the mask: breach decisions are
+                # uniform within a scenario block, so each scenario's
+                # pool-row flag replicates onto its cloud rows.
+                dec_c = (
+                    jnp.repeat(
+                        is_dec.reshape(num_scen, num_pools)[:, 0],
+                        num_clouds,
+                    )[:, None]
+                    if vec_dec else is_dec
+                )
             if conv_opts is None:
                 inc = jnp.maximum(widths - active, 0.0)
                 inc = jnp.where(
-                    is_dec & (inc > ld.PURCHASE_EPS), inc, 0.0
+                    dec_p & (inc > ld.PURCHASE_EPS), inc, 0.0
                 )
                 active = active + inc
             else:
@@ -772,7 +920,7 @@ def replan_fleet_pools(
                 widths_c = conv_targets_for(yhat, pool_top)
                 inc_c = jnp.maximum(widths_c - active_c, 0.0)
                 inc_c = jnp.where(
-                    is_dec & (inc_c > ld.PURCHASE_EPS), inc_c, 0.0
+                    dec_c & (inc_c > ld.PURCHASE_EPS), inc_c, 0.0
                 )
                 active_c = active_c + inc_c
                 expiry_c = jax.nn.one_hot(
@@ -809,7 +957,7 @@ def replan_fleet_pools(
                 )
                 inc = desired * scale[:, None]
                 inc = jnp.where(
-                    is_dec & (inc > ld.PURCHASE_EPS), inc, 0.0
+                    dec_p & (inc > ld.PURCHASE_EPS), inc, 0.0
                 )
                 active = active + inc
             expiry = jax.nn.one_hot(
@@ -864,6 +1012,27 @@ def replan_fleet_pools(
                 out["committed_k"] = rates * active * HOURS_PER_WEEK
                 out["used"] = used
                 out["od_vol"] = over
+            if tele is not None and tele.calibration:
+                # Calibration-only output: the anchored fractile levels
+                # of this week's forecast over the week being billed,
+                # scored host-side against that week's realized demand.
+                out["calib_levels"] = fc.anchored_fractile_levels(
+                    d_trail, tele.fractiles
+                )
+            if tele is not None and tele.provenance:
+                # Provenance-only outputs: the roll-offs this week and
+                # the spot-cap binding flag (the stack top hit the spot
+                # floor, so the floor — not the envelope — sized it).
+                out["prov_expired"] = expired
+                if sp_res is not None:
+                    out["prov_spot_bound"] = (
+                        widths.sum(-1) >= floor - 1e-3
+                    )
+            if dec.extras is not None:
+                # Policy-authored per-week extras (breach mode emits the
+                # active band as band_lo/band_hi); None on the default
+                # paths, so weekly programs gain nothing.
+                out.update(dec.extras)
             if conv_opts is None:
                 return (active, rolloff, pstate), out
             out.update({
@@ -877,14 +1046,27 @@ def replan_fleet_pools(
                 out["conv_committed_k"] = (
                     conv_rates * active_c * HOURS_PER_WEEK
                 )
+            if tele is not None and tele.provenance:
+                out["prov_conv_expired"] = expired_c
+                # Convertible suppression: this pool wanted a standard
+                # buy (lift) and live convertible capacity was allocated
+                # over it, scaling the purchase down.
+                out["prov_conv_sup"] = (
+                    (alloc > ld.PURCHASE_EPS) & (lift > ld.PURCHASE_EPS)
+                )
             return (active, rolloff, pstate, active_c, rolloff_c), out
         return step, pstate0
 
-    def replay(cadence: int, which: str, step_policy: pol.Policy):
+    def replay(
+        cadence_wk: int, which: str, step_policy: pol.Policy,
+        mode: str = "weekly",
+    ):
         active0 = jnp.zeros((num_rows, num_opts), jnp.float32)
         rolloff0 = jnp.zeros((num_rows, num_opts, sched_len), jnp.float32)
         if which == "scan":
-            step, pstate0 = make_step(cadence, fc.solve_prefix, step_policy)
+            step, pstate0 = make_step(
+                cadence_wk, fc.solve_prefix, step_policy, mode
+            )
             carry0 = (active0, rolloff0, pstate0)
             if conv_opts is not None:
                 carry0 = carry0 + (
@@ -899,7 +1081,7 @@ def replan_fleet_pools(
         # Naive python-level replay: one full prefix re-accumulation and
         # one host dispatch per week (what the scan path replaces).
         step, pstate0 = make_step(
-            cadence, fc.solve_prefix_direct, step_policy
+            cadence_wk, fc.solve_prefix_direct, step_policy, mode
         )
         carry0 = (active0, rolloff0, pstate0)
         if conv_opts is not None:
@@ -918,7 +1100,8 @@ def replan_fleet_pools(
         }
 
     ys = replay(
-        cadence_weeks, "scan" if backend == "scan" else "loop", pcy
+        cadence_weeks, "scan" if backend == "scan" else "loop", pcy,
+        cadence,
     )
     ys = {k_: np.asarray(v) for k_, v in ys.items()}
     weeks = np.arange(start_weeks, total_weeks)
@@ -930,9 +1113,12 @@ def replan_fleet_pools(
     # convertible capacity suppresses standard purchases), so the book
     # replays the scan's realized post-purchase stack instead.
     targets_full = np.zeros((num_pools, total_weeks, num_opts), np.float32)
-    dec = ys.pop("is_dec").astype(bool)    # the policy's decision weeks
-    # Books always replay scenario 0 — the realized trace, i.e. the first
-    # P rows of the flattened batch (the whole batch on single-path runs).
+    dec_raw = ys.pop("is_dec").astype(bool)  # the policy's decision weeks
+    # Weekly cadences emit one scalar flag per week; breach mode emits a
+    # per-row (R,) vector, uniform within each scenario block.  Books and
+    # baselines key on scenario 0 — the realized trace, i.e. the first P
+    # rows of the flattened batch (the whole batch on single-path runs).
+    dec = dec_raw[:, 0] if dec_raw.ndim == 2 else dec_raw
     book_targets = (
         ys["target"] if conv_opts is None else ys["active"]
     )[:, :num_pools]
@@ -1013,6 +1199,20 @@ def replan_fleet_pools(
         od_rate=float(od),
         scenario_config=scen,
     )
+    report.cadence = cadence
+    if dec_raw.ndim == 1:
+        report.decision_mask = dec_raw                   # (S,)
+    elif scen_axis:
+        # Breach masks are uniform within a scenario block, so one flag
+        # per (week, scenario) is the whole story.
+        report.decision_mask = dec_raw.reshape(
+            len(weeks), num_scen, num_pools
+        )[:, :, 0]                                       # (S, N)
+    else:
+        report.decision_mask = dec                       # (S,)
+    if "band_lo" in ys:
+        report.breach_band_lo = _rep(ys["band_lo"])
+        report.breach_band_hi = _rep(ys["band_hi"])
     if sp_res is not None:
         report.spot_config = s_cfg
         report.spot_lines = s_lines
@@ -1071,6 +1271,58 @@ def replan_fleet_pools(
                     ys["conv_committed_k"], num_clouds
                 )
             report.ledger = obs_ledger.ledger_from_report(report)
+        if tele.calibration:
+            # Score the scan-emitted fractile levels against the demand
+            # the scan actually billed — every scenario out of one scan.
+            report.fractile_levels = _rep(ys["calib_levels"])
+            realized = np.swapaxes(
+                np.asarray(demand_wk)[:, start_weeks:, :], 0, 1
+            )                                            # (S, R, 168)
+            report.calibration = obs_calib.calibration_from_arrays(
+                weeks, ["/".join(k) for k in pools.keys], tele.fractiles,
+                ys["calib_levels"], realized,
+                n_scenarios=num_scen,
+                meta={
+                    "policy": pcy.name,
+                    "cadence": cadence,
+                    "scenario_family": (
+                        scen.family if scen is not None else None
+                    ),
+                },
+            )
+        if tele.provenance:
+            # Queryable decision records on scenario 0, matching the
+            # tranche books and the ledger.
+            prov_kw = {}
+            if sp_res is not None:
+                prov_kw["spot_bound"] = (
+                    ys["prov_spot_bound"][:, :num_pools]
+                )
+            if conv_opts is not None:
+                prov_kw.update(
+                    conv_suppressed=ys["prov_conv_sup"][:, :num_pools],
+                    conv_clouds=conv_clouds,
+                    conv_skus=[o.name for o in conv_opts],
+                    conv_term_weeks=[o.term_weeks for o in conv_opts],
+                    conv_increments=ys["conv_inc"][:, :num_clouds],
+                    conv_rolloffs=(
+                        ys["prov_conv_expired"][:, :num_clouds]
+                    ),
+                    conv_active=ys["conv_active"][:, :num_clouds],
+                )
+            report.decision_log = obs_prov.decision_log_from_arrays(
+                weeks, ["/".join(k) for k in pools.keys],
+                [o.name for o in options],
+                [o.term_weeks for o in options],
+                is_decision=dec,
+                targets=ys["target"][:, :num_pools],
+                increments=ys["inc"][:, :num_pools],
+                rolloffs=ys["prov_expired"][:, :num_pools],
+                active=ys["active"][:, :num_pools],
+                purchase_eps=float(ld.PURCHASE_EPS),
+                meta={"policy": pcy.name, "cadence": cadence},
+                **prov_kw,
+            )
     if not compare:
         return report
 

@@ -1,11 +1,15 @@
-"""CLI over exported cost ledgers.
+"""CLI over exported cost ledgers and calibration cubes.
 
     python -m repro.obs report LEDGER.jsonl            totals + economics
     python -m repro.obs diff A.jsonl B.jsonl           regression compare
     python -m repro.obs top A.jsonl [B.jsonl]          top spend (movers)
+    python -m repro.obs calib C.jsonl [B.jsonl]        coverage vs nominal
 
 ``diff``/``top`` exit 1 when ``--fail-above`` is set and the largest
 per-cell spend delta exceeds it — the CI reconciliation/drift gate.
+``calib`` gates on coverage drift instead: with one cube,
+``--fail-above`` bounds max |empirical - nominal| coverage; with two,
+the max per-fractile |coverage delta| between them.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ import argparse
 import json
 import sys
 
+from repro.obs.calibration import CalibrationCube
 from repro.obs.ledger import CostLedger
 
 
@@ -92,6 +97,39 @@ def cmd_top(args) -> int:
     return 0
 
 
+def cmd_calib(args) -> int:
+    cube = CalibrationCube.from_jsonl(args.a)
+    if args.b is None:
+        print(cube.report())
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(cube.summary(), f, indent=2)
+        drift = cube.max_coverage_drift
+        if args.fail_above is not None and drift > args.fail_above:
+            print(
+                f"FAIL: max |coverage drift| {drift:.4f} > "
+                f"{args.fail_above:.4f}", file=sys.stderr,
+            )
+            return 1
+        return 0
+    diff = cube.diff(CalibrationCube.from_jsonl(args.b))
+    print(diff.report())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(diff.to_dict(), f, indent=2)
+    if (
+        args.fail_above is not None
+        and diff.max_abs_coverage_delta > args.fail_above
+    ):
+        print(
+            f"FAIL: max |coverage delta| "
+            f"{diff.max_abs_coverage_delta:.4f} > {args.fail_above:.4f}",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.obs")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -117,6 +155,20 @@ def main(argv=None) -> int:
     p.add_argument("--fail-above", type=float, default=None,
                    help="with two ledgers: exit 1 on a larger mover")
     p.set_defaults(fn=cmd_top)
+
+    p = sub.add_parser(
+        "calib",
+        help="calibration coverage report (one cube) or delta (two)",
+    )
+    p.add_argument("a")
+    p.add_argument("b", nargs="?", default=None)
+    p.add_argument("--json", help="also write the summary/diff as JSON")
+    p.add_argument(
+        "--fail-above", type=float, default=None,
+        help="exit 1 when coverage drift (one cube) or the coverage "
+             "delta (two cubes) exceeds this",
+    )
+    p.set_defaults(fn=cmd_calib)
 
     args = ap.parse_args(argv)
     return args.fn(args)

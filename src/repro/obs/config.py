@@ -23,6 +23,11 @@ if typing.TYPE_CHECKING:  # pragma: no cover
     from repro.obs.spans import SpanRecorder
 
 
+#: Forecast fractiles the calibration layer scores each week; the outer
+#: pair doubles as the default breach band (``RollingConfig.breach_band``).
+DEFAULT_FRACTILES = (0.05, 0.25, 0.5, 0.75, 0.95)
+
+
 @dataclasses.dataclass(frozen=True)
 class TelemetryConfig:
     """Which telemetry layers a plan request materializes.
@@ -31,17 +36,43 @@ class TelemetryConfig:
                      from the rolling scan and attach a ``CostLedger``
     ``kernel_stats`` attach ``KernelStats`` for the grid-solver sweep
                      shape (no-op for the quantile solver)
+    ``calibration``  emit each week's forecast fractile levels from the
+                     scan and score them against realized demand as a
+                     ``CalibrationCube`` (forecasting policies only)
+    ``provenance``   emit per-week decision records (buys, roll-offs,
+                     binding constraints) and attach a ``DecisionLog``
+    ``fractiles``    the forecast fractiles the calibration layer scores
     ``spans``        optional ``SpanRecorder`` for caller-side wall-clock
                      phases; never read inside traced code
     """
 
     ledger: bool = True
     kernel_stats: bool = True
+    calibration: bool = False
+    provenance: bool = False
+    fractiles: tuple[float, ...] = DEFAULT_FRACTILES
     spans: "SpanRecorder | None" = None
+
+    def __post_init__(self):
+        fr = tuple(float(q) for q in self.fractiles)
+        if not fr:
+            raise ValueError("fractiles must be non-empty")
+        if any(not 0.0 < q < 1.0 for q in fr):
+            raise ValueError(
+                f"fractiles must lie strictly inside (0, 1), got {fr}"
+            )
+        if list(fr) != sorted(set(fr)):
+            raise ValueError(
+                f"fractiles must be strictly increasing, got {fr}"
+            )
+        object.__setattr__(self, "fractiles", fr)
 
     @property
     def enabled(self) -> bool:
-        return self.ledger or self.kernel_stats or self.spans is not None
+        return (
+            self.ledger or self.kernel_stats or self.calibration
+            or self.provenance or self.spans is not None
+        )
 
 
 def resolve_telemetry(spec) -> TelemetryConfig | None:

@@ -23,8 +23,10 @@ only divergence is f32-in-scan vs f64-here summation order, ~1e-7
 relative (:meth:`CostLedger.reconcile` enforces 1e-5).
 
 On scenario-batched reports the ledger covers **scenario 0** — the
-realized trace — matching the tranche books; reconciliation compares
-against ``weekly_cost[:, 0]``.
+realized trace — by default, matching the tranche books;
+``ledger_from_report(report, scenario=k)`` bills any sampled future
+instead, and :meth:`CostLedger.reconcile` then compares against
+``weekly_cost[:, k]`` automatically.
 
 This module imports only numpy: it duck-types the report (core imports
 obs, never the reverse), so it can also round-trip ledgers from JSONL in
@@ -42,13 +44,13 @@ SCHEMA_VERSION = 1
 HOURS_PER_WEEK = 168
 
 
-def _s0(a, nd: int):
-    """Scenario-0 view of a per-week report array: batched reports carry
-    an N axis at position 1 (nd is the unbatched rank)."""
+def _sview(a, nd: int, scenario: int = 0):
+    """Scenario-``scenario`` view of a per-week report array: batched
+    reports carry an N axis at position 1 (nd is the unbatched rank)."""
     if a is None:
         return None
     a = np.asarray(a)
-    return a if a.ndim == nd else a[:, 0]
+    return a if a.ndim == nd else a[:, scenario]
 
 
 @dataclasses.dataclass
@@ -158,22 +160,48 @@ class CostLedger:
                 idle / committed_hours if committed_hours > 0 else 0.0
             ),
             "utilization_mean": float(self.utilization[:, :p_n].mean()),
+            # Zero served hours (a fleet that only ever idled) must not
+            # poison downstream aggregation with inf/NaN: report 0.0 and
+            # flag the degenerate case instead.
             "cost_per_used_chip_hour": (
-                self.total / used if used > 0 else float("inf")
+                self.total / used if used > 0 else 0.0
             ),
+            "idle_only": bool(used <= 0.0),
         }
 
     # -- reconciliation ----------------------------------------------------
 
-    def reconcile(self, report, *, rtol: float = 1e-5) -> dict:
+    def reconcile(
+        self, report, *, rtol: float = 1e-5,
+        scenario: "int | None" = None,
+    ) -> dict:
         """Check ledger row-sums against ``report.weekly_cost`` week by
         week.  The ledger re-sums the scan's own f32 billing terms in
         f64, so the residual is pure summation-order noise — ``max_rel``
         lands around 1e-7 and the default 1e-5 gate (f32 machine
-        precision across a K-term sum) is generous."""
+        precision across a K-term sum) is generous.
+
+        ``scenario`` picks which column of a batched report's (S, N)
+        weekly cost to reconcile against; the default is the scenario
+        this ledger was materialized from (``meta["scenario"]``, 0 for
+        pre-scenario ledgers), so a ``ledger_from_report(rep, scenario=k)``
+        ledger reconciles against its own scenario automatically."""
+        k = (
+            int(self.meta.get("scenario", 0))
+            if scenario is None else int(scenario)
+        )
         wc = np.asarray(report.weekly_cost, np.float64)
-        if wc.ndim == 2:           # scenario-batched: ledger is scenario 0
-            wc = wc[:, 0]
+        if wc.ndim == 2:           # scenario-batched: slice the N axis
+            if not 0 <= k < wc.shape[1]:
+                raise ValueError(
+                    f"scenario index {k} out of range for a report of "
+                    f"{wc.shape[1]} scenario(s)"
+                )
+            wc = wc[:, k]
+        elif k != 0:
+            raise ValueError(
+                f"scenario index {k} out of range for an unbatched report"
+            )
         mine = self.weekly_totals()
         if mine.shape != wc.shape:
             raise ValueError(
@@ -185,6 +213,7 @@ class CostLedger:
         return {
             "ok": bool(rel.max() <= rtol),
             "rtol": rtol,
+            "scenario": k,
             "max_abs": float(err.max()),
             "max_rel": float(rel.max()),
             "worst_week": int(self.weeks[int(rel.argmax())]),
@@ -311,11 +340,15 @@ class LedgerDiff:
     cell_deltas: dict[tuple[str, str], float]
 
     def top_movers(self, n: int = 10) -> list[tuple[str, str, float]]:
-        """The n largest |spend delta| (entity, source) cells."""
-        ranked = sorted(
-            self.cell_deltas.items(), key=lambda kv: -abs(kv[1])
-        )
-        return [(e, s, d) for (e, s), d in ranked[:n] if d != 0.0]
+        """The n largest |spend delta| (entity, source) cells.  Zero
+        deltas are dropped BEFORE ranking so an empty or all-equal diff
+        returns [] instead of zero-padded rows."""
+        movers = [
+            (e, s, d) for (e, s), d in self.cell_deltas.items()
+            if d != 0.0
+        ]
+        movers.sort(key=lambda t: -abs(t[2]))
+        return movers[:n]
 
     def to_dict(self) -> dict:
         return {
@@ -346,17 +379,30 @@ class LedgerDiff:
         return "\n".join(lines)
 
 
-def ledger_from_report(report) -> CostLedger:
+def ledger_from_report(report, *, scenario: int = 0) -> CostLedger:
     """Materialize the ledger off a telemetry-enabled rolling report.
 
     Needs the scan's telemetry outputs (``committed_by_sku``,
     ``used_hours``, ``od_volume``); a report replayed with
-    ``telemetry=None`` has none and raises."""
+    ``telemetry=None`` has none and raises.  ``scenario`` slices the N
+    axis of a scenario-batched report the way ``replay_spot_plan``'s
+    ``scenario=`` does — the default 0 is the realized trace; nonzero
+    indices bill one sampled future."""
     if getattr(report, "committed_by_sku", None) is None:
         raise ValueError(
             "report carries no telemetry outputs — re-run the plan with "
             "telemetry=True (or a TelemetryConfig) to build a CostLedger"
         )
+    n = int(getattr(report, "n_scenarios", 1) or 1)
+    if not 0 <= scenario < n:
+        raise ValueError(
+            f"scenario index {scenario} out of range for a report of "
+            f"{n} scenario(s)"
+        )
+
+    def _sv(a, nd):
+        return _sview(a, nd, scenario)
+
     weeks = np.asarray(report.weeks)
     s_n = len(weeks)
     pool_names = ["/".join(k) for k in report.keys]
@@ -377,15 +423,15 @@ def ledger_from_report(report) -> CostLedger:
     src_i = {s: i for i, s in enumerate(sources)}
 
     # Standard commitment bands: the scan's own per-SKU weekly spend.
-    committed_k = _s0(report.committed_by_sku, 3).astype(np.float64)
-    active = _s0(report.active, 3).astype(np.float64)
+    committed_k = _sv(report.committed_by_sku, 3).astype(np.float64)
+    active = _sv(report.active, 3).astype(np.float64)
     cost[:, :p_n, :k_n] = committed_k
     volume[:, :p_n, :k_n] = active * HOURS_PER_WEEK
 
     # On-demand overflow: the report arrays verbatim.
-    od_cost = _s0(report.on_demand_cost, 2).astype(np.float64)
+    od_cost = _sv(report.on_demand_cost, 2).astype(np.float64)
     cost[:, :p_n, src_i["on_demand"]] = od_cost
-    od_vol = _s0(report.od_volume, 2)
+    od_vol = _sv(report.od_volume, 2)
     if od_vol is not None:
         volume[:, :p_n, src_i["on_demand"]] = od_vol
 
@@ -400,10 +446,15 @@ def ledger_from_report(report) -> CostLedger:
         lines = report.spot_lines
         a = np.asarray(lines.availability, np.float64)
         hazard = np.asarray(lines.params.hazard, np.float64)
+        if a.shape[0] == n * p_n:
+            # Batched replays keep spot lines per flattened (N x P) row;
+            # take this scenario's block to match the (S, P) views above.
+            a = a[scenario * p_n:(scenario + 1) * p_n]
+            hazard = hazard[scenario * p_n:(scenario + 1) * p_n]
         od = float(report.od_rate)
         rq = float(report.spot_config.requeue_hours)
-        vol = _s0(report.spot_volume, 2).astype(np.float64)
-        spot_cost = _s0(report.spot_cost, 2).astype(np.float64)
+        vol = _sv(report.spot_volume, 2).astype(np.float64)
+        spot_cost = _sv(report.spot_cost, 2).astype(np.float64)
         fallback = (1.0 - a)[None, :] * od * vol
         requeue = (a * hazard)[None, :] * rq * od * vol
         market = spot_cost - fallback - requeue
@@ -413,8 +464,8 @@ def ledger_from_report(report) -> CostLedger:
         volume[:, :p_n, src_i["spot_market"]] = vol
 
     if has_conv:
-        conv_k = _s0(report.conv_committed_by_sku, 3).astype(np.float64)
-        conv_active = _s0(report.conv_active, 3).astype(np.float64)
+        conv_k = _sv(report.conv_committed_by_sku, 3).astype(np.float64)
+        conv_active = _sv(report.conv_active, 3).astype(np.float64)
         for ci in range(len(report.conv_clouds)):
             for ki, o in enumerate(report.conv_options):
                 mi = src_i[f"convertible:{o.name}"]
@@ -423,14 +474,14 @@ def ledger_from_report(report) -> CostLedger:
                     conv_active[:, ci, ki] * HOURS_PER_WEEK
                 )
         # A pool's effective level includes its re-pinned allocation.
-        level = level + _s0(report.conv_alloc, 2).astype(np.float64)
+        level = level + _sv(report.conv_alloc, 2).astype(np.float64)
 
     used = np.zeros((s_n, e_n))
     idle = np.zeros((s_n, e_n))
     util = np.zeros((s_n, e_n))
-    used[:, :p_n] = _s0(report.used_hours, 2)
+    used[:, :p_n] = _sv(report.used_hours, 2)
     idle[:, :p_n] = np.maximum(level * HOURS_PER_WEEK - used[:, :p_n], 0.0)
-    util[:, :p_n] = _s0(report.utilization, 2)
+    util[:, :p_n] = _sv(report.utilization, 2)
 
     meta = {
         "policy": report.policy_name,
@@ -439,7 +490,7 @@ def ledger_from_report(report) -> CostLedger:
         "horizon_weeks": int(report.horizon_weeks),
         "od_rate": float(report.od_rate),
         "n_scenarios": int(report.n_scenarios),
-        "scenario": 0,
+        "scenario": int(scenario),
         "num_pools": p_n,
     }
     if getattr(report, "kernel_stats", None) is not None:

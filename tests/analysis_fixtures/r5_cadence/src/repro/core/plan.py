@@ -1,0 +1,9 @@
+"""Planted R5 violation: a `cadence=` replan mode whose disabled
+spelling is the string "weekly" (not None/False), with no disabled-path
+golden test anywhere under tests/."""
+
+
+def replay(demand, cadence="weekly"):
+    if cadence == "weekly":
+        return demand
+    return demand[::2]

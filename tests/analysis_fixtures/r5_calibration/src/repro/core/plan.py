@@ -1,0 +1,14 @@
+"""Planted R5 violation: a `calibration=` telemetry knob shipped as an
+annotated dataclass-field default, with no disabled-path golden test
+anywhere under tests/."""
+
+
+class TelemetryConfig:
+    ledger: bool = True
+    calibration: bool = False
+
+
+def replay(demand, config=None):
+    if config is None or not config.calibration:
+        return demand
+    return demand, {"levels": sorted(demand)}

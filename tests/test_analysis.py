@@ -38,7 +38,10 @@ CASES = {
     "r3": "R3",
     "r4": "R4",
     "r5": "R5",
+    "r5_cadence": "R5",
+    "r5_calibration": "R5",
     "r5_policy": "R5",
+    "r5_provenance": "R5",
     "r5_scenarios": "R5",
     "r5_telemetry": "R5",
     "r6": "R6",

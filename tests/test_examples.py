@@ -77,15 +77,19 @@ class TestExamples:
     def test_plan_telemetry(self, tmp_path, capsys):
         ledger = tmp_path / "LEDGER.jsonl"
         spans = tmp_path / "SPANS.json"
+        calib = tmp_path / "CALIB.jsonl"
         run_example(
             "examples/plan_telemetry.py",
-            ["--ledger-out", str(ledger), "--spans-out", str(spans)],
+            ["--ledger-out", str(ledger), "--spans-out", str(spans),
+             "--calib-out", str(calib)],
         )
         out = capsys.readouterr().out
         assert "cost attribution" in out
         assert "unit economics" in out
+        assert "forecast calibration" in out
+        assert "decision provenance" in out
         assert "reconciliation" in out and "OK" in out
-        assert ledger.exists() and spans.exists()
+        assert ledger.exists() and spans.exists() and calib.exists()
 
 
 class TestDataTraces:

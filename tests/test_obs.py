@@ -30,7 +30,9 @@ from repro.core import planner as pl
 from repro.core import replan
 from repro.data import scenarios as sc
 from repro.data import traces
+from repro.core import demand as dmnd
 from repro.obs import (
+    CalibrationCube,
     CostLedger,
     KernelStats,
     SpanRecorder,
@@ -43,8 +45,10 @@ from repro.obs.__main__ import main as obs_cli
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
+#: cadence="weekly" is the explicit disabled spelling of the breach
+#: cadence — the goldens below prove it stays bit-identical.
 ROLLING = dict(cadence_weeks=2, start_weeks=6, horizon_weeks=4,
-               compare=False)
+               compare=False, cadence="weekly")
 
 #: policy:s<spot>m<migration>c<convertible> -> [total_cost, targets.sum()]
 #: captured at the pre-telemetry HEAD with the harness in ``_run_case``.
@@ -112,6 +116,26 @@ class TestTelemetryNoneGolden:
         assert rep.ledger is None
         assert rep.committed_by_sku is None
         assert rep.kernel_stats is None
+        assert rep.calibration is None
+        assert rep.decision_log is None
+        assert rep.fractile_levels is None
+        assert rep.breach_band_lo is None and rep.breach_band_hi is None
+        assert rep.cadence == "weekly"
+
+    def test_calibration_provenance_off_is_bitwise_identical(self):
+        """The ledger-only telemetry spelling — calibration=False,
+        provenance=False — must match the goldens' telemetry=None path
+        bitwise; the new instruments only exist when asked for."""
+        off = _run_case("rolling_portfolio", 1, 1, 1, telemetry=None)
+        on = _run_case(
+            "rolling_portfolio", 1, 1, 1,
+            telemetry=TelemetryConfig(calibration=False, provenance=False),
+        )
+        assert on.total_cost == off.total_cost
+        np.testing.assert_array_equal(
+            np.asarray(on.weekly_cost), np.asarray(off.weekly_cost)
+        )
+        assert on.calibration is None and on.decision_log is None
 
     def test_telemetry_on_is_bitwise_identical(self):
         off = _run_case("rolling_portfolio", 1, 1, 1, telemetry=None)
@@ -363,6 +387,16 @@ class TestTelemetryOverhead:
             f"telemetry overhead {tele / base:.2f}x exceeds 1.3x "
             f"({tele:.3f}s vs {base:.3f}s)"
         )
+        # The full instrument set — ledger + calibration + provenance —
+        # stays inside the same budget: the extra scan outputs are small
+        # per-week arrays, not extra solver work.
+        full = timed(telemetry=TelemetryConfig(
+            calibration=True, provenance=True,
+        ))
+        assert full <= 1.3 * base + 0.05, (
+            f"calibration+provenance overhead {full / base:.2f}x exceeds "
+            f"1.3x ({full:.3f}s vs {base:.3f}s)"
+        )
 
 
 class TestScenarioReplay:
@@ -450,6 +484,525 @@ class TestObsCli:
         assert obs_cli(["top", a, b, "--fail-above", "0.5"]) == 1
         out = capsys.readouterr().out
         assert "top 3 spend cells" in out
+
+
+def _steady_fleet(family: str = "steady", num_seeds: int = 32,
+                  num_weeks: int = 20):
+    """N seeded single-pool paths of one family, flattened into an
+    N-pool fleet — the coverage test's unit of statistical power."""
+    arr = np.asarray(sc.scenario_paths(
+        family, num_pools=1, num_weeks=num_weeks, num_seeds=num_seeds,
+    )).reshape(num_seeds, -1)
+    return dmnd.PoolSet(keys=sc.scenario_keys(num_seeds), demand=arr)
+
+
+@pytest.fixture(scope="module")
+def calib_cubes():
+    """Calibration cubes for the steady and unpredictable families from
+    identically configured replays."""
+    tele = TelemetryConfig(calibration=True)
+    cubes = {}
+    for family in ("steady", "unpredictable"):
+        rep = replan.replan_fleet_pools(
+            _steady_fleet(family), cadence_weeks=1, start_weeks=8,
+            horizon_weeks=4, compare=False, telemetry=tele,
+        )
+        cubes[family] = rep.calibration
+    return cubes
+
+
+class TestCalibration:
+    def test_steady_coverage_within_3pp_of_nominal(self, calib_cubes):
+        cube = calib_cubes["steady"]
+        assert cube.max_coverage_drift <= 0.03, cube.report()
+
+    def test_unpredictable_family_degrades_detectably(self, calib_cubes):
+        steady = calib_cubes["steady"].max_coverage_drift
+        rough = calib_cubes["unpredictable"].max_coverage_drift
+        assert rough > 2.0 * steady, (
+            f"unpredictable drift {rough:.4f} not detectably worse than "
+            f"steady {steady:.4f}"
+        )
+
+    def test_cube_shape_and_summary(self, calib_cubes):
+        cube = calib_cubes["steady"]
+        s, n, p, q = cube.levels.shape
+        assert (n, p) == (1, 32)
+        assert cube.hits.shape == cube.pinball.shape == (s, n, p, q)
+        assert cube.realized_mean.shape == (s, n, p)
+        assert np.all((0.0 <= cube.hits) & (cube.hits <= 1.0))
+        assert np.all(cube.pinball >= 0.0)
+        assert np.all(np.diff(np.asarray(cube.fractiles)) > 0)
+        summ = cube.summary()
+        assert summ["weeks"] == s and summ["n_scenarios"] == 1
+        assert summ["max_coverage_drift"] == cube.max_coverage_drift
+        assert summ["interval_width"] > 0.0
+        assert "coverage" in summ and len(summ["coverage"]) == q
+        assert "fractile" in cube.report()
+
+    def test_report_carries_levels_and_mask(self, calib_cubes):
+        # fractile_levels ride the report next to the cube; the weekly
+        # decision mask reflects the cadence grid.
+        tele = TelemetryConfig(calibration=True)
+        rep = replan.replan_fleet_pools(
+            _steady_fleet(num_seeds=4), cadence_weeks=2, start_weeks=8,
+            horizon_weeks=4, compare=False, telemetry=tele,
+        )
+        s = len(np.asarray(rep.calibration.weeks))
+        assert np.asarray(rep.fractile_levels).shape == (s, 4, 5)
+        mask = np.asarray(rep.decision_mask)
+        assert mask.shape == (s,)
+        np.testing.assert_array_equal(mask, (np.arange(s) % 2) == 0)
+        assert rep.summary()["decision_weeks"] == int(mask.sum())
+
+    def test_jsonl_roundtrip_is_exact(self, calib_cubes, tmp_path):
+        cube = calib_cubes["steady"]
+        path = str(tmp_path / "calib.jsonl")
+        cube.to_jsonl(path)
+        back = CalibrationCube.from_jsonl(path)
+        assert back.entities == cube.entities
+        assert back.fractiles == cube.fractiles
+        np.testing.assert_array_equal(back.weeks, cube.weeks)
+        np.testing.assert_array_equal(back.levels, cube.levels)
+        np.testing.assert_array_equal(back.hits, cube.hits)
+        np.testing.assert_array_equal(back.pinball, cube.pinball)
+        np.testing.assert_array_equal(back.realized_mean,
+                                      cube.realized_mean)
+        np.testing.assert_array_equal(back.realized_peak,
+                                      cube.realized_peak)
+        assert back.diff(cube).max_abs_coverage_delta == 0.0
+
+    def test_diff_compares_families(self, calib_cubes):
+        diff = calib_cubes["unpredictable"].diff(calib_cubes["steady"])
+        assert diff.max_abs_coverage_delta > 0.0
+        assert diff.drift_a > diff.drift_b
+        assert set(diff.coverage_delta) == set(
+            float(q) for q in calib_cubes["steady"].fractiles
+        )
+        assert "d-coverage" in diff.report()
+        payload = diff.to_dict()
+        assert payload["max_abs_coverage_delta"] == \
+            diff.max_abs_coverage_delta
+        with pytest.raises(ValueError, match="fractile"):
+            import dataclasses as dc
+
+            other = dc.replace(
+                calib_cubes["steady"], fractiles=(0.1, 0.5, 0.9),
+                levels=calib_cubes["steady"].levels[..., :3],
+                hits=calib_cubes["steady"].hits[..., :3],
+                pinball=calib_cubes["steady"].pinball[..., :3],
+            )
+            calib_cubes["steady"].diff(other)
+
+    def test_scenario_batched_cube_from_one_scan(self):
+        pools = traces.synthetic_pool_set(num_pools=2,
+                                          num_hours=24 * 7 * 12)
+        rep = replan.replan_fleet_pools(
+            pools,
+            scenarios=sc.ScenarioConfig(n_scenarios=3, family="regime"),
+            cadence_weeks=1, start_weeks=6, horizon_weeks=4,
+            compare=False, telemetry=TelemetryConfig(calibration=True),
+        )
+        cube = rep.calibration
+        assert cube.n_scenarios == 3
+        per_scen = cube.scenario_coverage()
+        assert per_scen.shape == (3, len(cube.fractiles))
+        np.testing.assert_allclose(
+            per_scen[0], cube.coverage(scenario=0), rtol=1e-12
+        )
+        np.testing.assert_allclose(
+            per_scen.mean(axis=0), cube.coverage(), rtol=1e-12
+        )
+        # The regime scenarios perturb demand away from the realized
+        # trace, so their coverage genuinely differs from scenario 0.
+        assert np.abs(per_scen[1:] - per_scen[0]).max() > 0.0
+        with pytest.raises(ValueError, match="out of range"):
+            cube.coverage(scenario=3)
+
+    def test_interval_width_unknown_pair_raises(self, calib_cubes):
+        with pytest.raises(KeyError, match="not carried"):
+            calib_cubes["steady"].interval_width(0.123, 0.456)
+
+    def test_calibration_requires_forecasting_policy(self):
+        pools = traces.synthetic_pool_set(num_pools=2,
+                                          num_hours=24 * 7 * 12)
+        with pytest.raises(ValueError, match="forecast"):
+            replan.replan_fleet_pools(
+                pools, policy="deterministic_hedge", cadence_weeks=1,
+                start_weeks=6, horizon_weeks=4, compare=False,
+                telemetry=TelemetryConfig(calibration=True),
+            )
+
+    def test_fractile_validation(self):
+        with pytest.raises(ValueError, match="fractiles"):
+            TelemetryConfig(fractiles=())
+        with pytest.raises(ValueError, match="fractiles"):
+            TelemetryConfig(fractiles=(0.5, 0.25))
+        with pytest.raises(ValueError, match="fractiles"):
+            TelemetryConfig(fractiles=(0.0, 0.5))
+
+
+@pytest.fixture(scope="module")
+def prov_rep():
+    """All-bands replay with provenance telemetry on."""
+    return _run_case(
+        "rolling_portfolio", 1, 1, 1,
+        telemetry=TelemetryConfig(provenance=True),
+    )
+
+
+class TestDecisionLog:
+    def test_log_materializes_with_all_bands(self, prov_rep):
+        log = prov_rep.decision_log
+        assert log is not None
+        assert len(log.entities) == 4
+        assert log.conv_clouds is not None
+        assert log.increments.shape == log.targets.shape
+        assert set(np.unique(log.binding)) <= set(
+            ("convertible", "spot_cap", "envelope", "carry")
+        )
+
+    def test_decision_weeks_follow_cadence(self, prov_rep):
+        log = prov_rep.decision_log
+        mask = np.asarray(prov_rep.decision_mask)
+        np.testing.assert_array_equal(
+            log.decision_weeks, log.weeks[mask]
+        )
+        # cadence_weeks=2: every other evaluated week decides.
+        np.testing.assert_array_equal(log.is_decision, mask)
+        # Non-decision weeks never buy and always carry.
+        nondec = ~log.is_decision
+        assert float(log.increments[nondec].sum()) == 0.0
+        assert np.all(log.binding[nondec] == "carry")
+
+    def test_holdings_reconstruct_active_stack(self, prov_rep):
+        log = prov_rep.decision_log
+        for week in (int(log.weeks[0]), int(log.weeks[-1])):
+            si = int(np.flatnonzero(log.weeks == week)[0])
+            held = log.holdings(week)
+            for pi, pool in enumerate(log.entities):
+                tranche_sum = sum(t["width"] for t in held[pool])
+                np.testing.assert_allclose(
+                    tranche_sum, log.active[si, pi].sum(), rtol=1e-6,
+                    err_msg=f"week {week} pool {pool}",
+                )
+                for t in held[pool]:
+                    assert t["bought_week"] <= week < t["expires_week"]
+                    assert t["sku"] in log.skus
+
+    def test_explain_answers_why(self, prov_rep):
+        log = prov_rep.decision_log
+        w = int(log.decision_weeks[0])
+        rec = log.explain(w)
+        assert rec["week"] == w and rec["is_decision"]
+        pool = rec["pools"][log.entities[0]]
+        assert set(pool) == {"binding", "bought", "rolled_off",
+                             "target_top", "stack_top"}
+        assert "clouds" in rec
+        cloud = rec["clouds"][log.conv_clouds[0]]
+        assert set(cloud) == {"bought", "rolled_off", "stack_top"}
+        with pytest.raises(KeyError, match="not in log"):
+            log.explain(10 ** 6)
+
+    def test_summary_and_binding_counts(self, prov_rep):
+        log = prov_rep.decision_log
+        counts = log.binding_counts()
+        assert sum(counts.values()) == log.binding.size
+        summ = log.summary()
+        assert summ["decision_weeks"] == int(log.is_decision.sum())
+        assert summ["tranches_bought"] >= 1
+        assert summ["binding_counts"] == counts
+        assert "conv_width_bought" in summ
+        assert summ["policy"] == "rolling_portfolio"
+
+    def test_spot_free_replay_has_no_spot_cap(self):
+        rep = _run_case(
+            "rolling_portfolio", 0, 0, 0,
+            telemetry=TelemetryConfig(provenance=True),
+        )
+        log = rep.decision_log
+        assert log.conv_clouds is None
+        counts = log.binding_counts()
+        assert counts["spot_cap"] == 0 and counts["convertible"] == 0
+        assert counts["envelope"] >= 1
+
+
+class TestBreachCadence:
+    @pytest.fixture(scope="class")
+    def steady_pools(self):
+        return sc.scenario_pool_set("steady", num_pools=4, num_weeks=52)
+
+    @pytest.fixture(scope="class")
+    def weekly_rep(self, steady_pools):
+        return replan.replan_fleet_pools(
+            steady_pools, cadence_weeks=1, start_weeks=24,
+            horizon_weeks=4, compare=False,
+        )
+
+    @pytest.fixture(scope="class")
+    def breach_rep(self, steady_pools):
+        return replan.replan_fleet_pools(
+            steady_pools, cadence_weeks=1, cadence="breach",
+            start_weeks=24, horizon_weeks=4, compare=False,
+        )
+
+    def test_breach_skips_decisions_at_tiny_cost_delta(
+        self, weekly_rep, breach_rep,
+    ):
+        """The acceptance criterion: >= 60% fewer decision weeks than the
+        weekly cadence on a steady fleet, at <= 1% realized-cost delta."""
+        n_weekly = int(np.asarray(weekly_rep.decision_mask).sum())
+        n_breach = int(np.asarray(breach_rep.decision_mask).sum())
+        assert n_breach <= 0.4 * n_weekly, (
+            f"breach decided {n_breach}/{n_weekly} weeks"
+        )
+        cw = float(weekly_rep.total_cost)
+        cb = float(breach_rep.total_cost)
+        assert abs(cb - cw) / cw <= 0.01, (
+            f"cost delta {abs(cb - cw) / cw:.4%} exceeds 1%"
+        )
+
+    def test_python_loop_oracle_reproduces_mask_bitwise(
+        self, steady_pools, breach_rep,
+    ):
+        """The in-scan breach mask must equal a host-side python loop
+        over the emitted bands bit-for-bit — integer hour counts against
+        integer budgets, no float tolerance."""
+        start = 24
+        h = 168
+        demand = np.asarray(steady_pools.demand).reshape(
+            len(steady_pools.keys), -1, h
+        )
+        lo_all = np.asarray(breach_rep.breach_band_lo)
+        hi_all = np.asarray(breach_rep.breach_band_hi)
+        mask = np.asarray(breach_rep.decision_mask)
+        q_lo, q_hi, tol = 0.05, 0.95, 4.0
+        allow_above = int(tol * (1.0 - q_hi) * h)
+        allow_below = int(tol * q_lo * h)
+        want = np.zeros_like(mask)
+        lo = np.zeros(demand.shape[0])
+        hi = np.zeros(demand.shape[0])
+        for i in range(mask.shape[0]):
+            w = start + i
+            d_prev = demand[:, w - 1]
+            above = (d_prev > hi[:, None]).sum(-1)
+            below = (d_prev < lo[:, None]).sum(-1)
+            dec = bool(
+                ((above > allow_above) | (below > allow_below)).any()
+                or w == start
+            )
+            want[i] = dec
+            if dec:
+                lo, hi = lo_all[i], hi_all[i]
+        np.testing.assert_array_equal(want, mask)
+
+    def test_never_misses_a_breach_week(self, steady_pools, breach_rep):
+        """Every week whose realized demand exited the held band beyond
+        the hour budget IS a decision week (plus the mandatory start)."""
+        h = 168
+        demand = np.asarray(steady_pools.demand).reshape(
+            len(steady_pools.keys), -1, h
+        )
+        lo_all = np.asarray(breach_rep.breach_band_lo)
+        hi_all = np.asarray(breach_rep.breach_band_hi)
+        mask = np.asarray(breach_rep.decision_mask)
+        allow = int(4.0 * 0.05 * h)
+        lo = np.zeros(demand.shape[0])
+        hi = np.zeros(demand.shape[0])
+        for i in range(mask.shape[0]):
+            d_prev = demand[:, 24 + i - 1]
+            breached = (
+                ((d_prev > hi[:, None]).sum(-1) > allow)
+                | ((d_prev < lo[:, None]).sum(-1) > allow)
+            ).any()
+            if breached or i == 0:
+                assert mask[i], f"missed breach at step {i}"
+            if mask[i]:
+                lo, hi = lo_all[i], hi_all[i]
+
+    def test_report_carries_cadence_and_bands(self, breach_rep):
+        assert breach_rep.cadence == "breach"
+        assert breach_rep.summary()["cadence"] == "breach"
+        s = np.asarray(breach_rep.decision_mask).shape[0]
+        assert np.asarray(breach_rep.breach_band_lo).shape == (s, 4)
+        assert np.all(
+            np.asarray(breach_rep.breach_band_hi)
+            >= np.asarray(breach_rep.breach_band_lo)
+        )
+
+    def test_weekly_spelling_is_the_golden_path(self, steady_pools):
+        """cadence='weekly' (explicit) is the same compiled program as
+        the default — same costs bitwise."""
+        a = replan.replan_fleet_pools(
+            steady_pools, cadence_weeks=2, start_weeks=24,
+            horizon_weeks=4, compare=False,
+        )
+        b = replan.replan_fleet_pools(
+            steady_pools, cadence_weeks=2, start_weeks=24,
+            horizon_weeks=4, compare=False, cadence="weekly",
+        )
+        assert a.total_cost == b.total_cost
+        np.testing.assert_array_equal(
+            np.asarray(a.weekly_cost), np.asarray(b.weekly_cost)
+        )
+
+    def test_scenario_batched_breach_masks_per_scenario(self):
+        pools = traces.synthetic_pool_set(num_pools=2,
+                                          num_hours=24 * 7 * 16)
+        rep = replan.replan_fleet_pools(
+            pools, cadence_weeks=1, cadence="breach", start_weeks=8,
+            horizon_weeks=4, compare=False,
+            scenarios=sc.ScenarioConfig(n_scenarios=3, family="regime"),
+        )
+        mask = np.asarray(rep.decision_mask)
+        assert mask.ndim == 2 and mask.shape[1] == 3
+        # Scenario 0 is the realized trace: its mask matches the
+        # unbatched breach replay of the same pools.
+        solo = replan.replan_fleet_pools(
+            pools, cadence_weeks=1, cadence="breach", start_weeks=8,
+            horizon_weeks=4, compare=False,
+        )
+        np.testing.assert_array_equal(
+            mask[:, 0], np.asarray(solo.decision_mask)
+        )
+        # Regime scenarios shift demand, so at least one scenario's
+        # replan schedule must differ from the realized one.
+        assert np.any(mask[:, 1:] != mask[:, :1])
+
+    def test_breach_validation_errors(self, steady_pools):
+        with pytest.raises(ValueError, match="cadence"):
+            replan.replan_fleet_pools(
+                steady_pools, cadence_weeks=1, cadence="hourly",
+                start_weeks=24, horizon_weeks=4, compare=False,
+            )
+        with pytest.raises(ValueError, match="cadence_weeks=1"):
+            replan.replan_fleet_pools(
+                steady_pools, cadence_weeks=2, cadence="breach",
+                start_weeks=24, horizon_weeks=4, compare=False,
+            )
+        with pytest.raises(ValueError, match="forecast"):
+            replan.replan_fleet_pools(
+                steady_pools, cadence_weeks=1, cadence="breach",
+                policy="deterministic_hedge", start_weeks=24,
+                horizon_weeks=4, compare=False,
+            )
+        with pytest.raises(ValueError, match="cadence"):
+            api.RollingConfig(cadence="hourly")
+        with pytest.raises(ValueError, match="cadence_weeks=1"):
+            api.RollingConfig(cadence="breach", cadence_weeks=2)
+        with pytest.raises(ValueError, match="breach_band"):
+            api.RollingConfig(breach_band=(0.9, 0.1))
+        with pytest.raises(ValueError, match="breach_band"):
+            api.RollingConfig(breach_band=(0.05, 0.5, 0.95))
+        with pytest.raises(ValueError, match="breach_tolerance"):
+            api.RollingConfig(breach_tolerance=0.0)
+
+
+class TestLedgerScenarios:
+    @pytest.fixture(scope="class")
+    def batched_rep(self):
+        pools = traces.synthetic_pool_set(num_pools=2,
+                                          num_hours=24 * 7 * 12)
+        return replan.replan_fleet_pools(
+            pools, spot=True,
+            scenarios=sc.ScenarioConfig(n_scenarios=3, family="growth"),
+            cadence_weeks=2, start_weeks=4, horizon_weeks=4,
+            compare=False, telemetry=True,
+        )
+
+    def test_default_ledger_is_scenario_zero(self, batched_rep):
+        led = batched_rep.ledger
+        assert led.meta["scenario"] == 0
+        assert led.reconcile(batched_rep)["ok"]
+
+    def test_nonzero_scenario_ledger_reconciles_its_column(
+        self, batched_rep,
+    ):
+        led1 = ledger_from_report(batched_rep, scenario=1)
+        assert led1.meta["scenario"] == 1
+        res = led1.reconcile(batched_rep)          # k from meta
+        assert res["ok"], res
+        assert res["scenario"] == 1
+        np.testing.assert_allclose(
+            res["total_report"],
+            float(np.asarray(batched_rep.scenario_cost)[1]),
+            rtol=1e-6,
+        )
+        # A growth future genuinely re-prices the fleet.
+        assert led1.total != batched_rep.ledger.total
+        explicit = led1.reconcile(batched_rep, scenario=1)
+        assert explicit["ok"]
+
+    def test_cross_scenario_reconcile_mismatches(self, batched_rep):
+        led1 = ledger_from_report(batched_rep, scenario=1)
+        res = led1.reconcile(batched_rep, scenario=0)
+        assert not res["ok"]
+
+    def test_out_of_range_scenario_raises(self, batched_rep):
+        with pytest.raises(ValueError, match="out of range"):
+            ledger_from_report(batched_rep, scenario=3)
+        with pytest.raises(ValueError, match="out of range"):
+            batched_rep.ledger.reconcile(batched_rep, scenario=3)
+
+    def test_unbatched_report_rejects_nonzero_scenario(self, rep_full):
+        with pytest.raises(ValueError, match="out of range"):
+            ledger_from_report(rep_full, scenario=1)
+
+
+class TestLedgerEdgeCases:
+    def test_unit_economics_idle_only_fleet_is_inf_free(self, rep_full):
+        import dataclasses
+
+        led = rep_full.ledger
+        idle = dataclasses.replace(
+            led,
+            used_hours=np.zeros_like(led.used_hours),
+            idle_hours=led.idle_hours + led.used_hours,
+        )
+        econ = idle.unit_economics()
+        assert econ["idle_only"] is True
+        assert econ["cost_per_used_chip_hour"] == 0.0
+        for v in econ.values():
+            assert np.isfinite(float(v))
+        live = led.unit_economics()
+        assert live["idle_only"] is False
+        assert live["cost_per_used_chip_hour"] > 0.0
+
+    def test_top_movers_empty_diff(self, rep_full):
+        diff = rep_full.ledger.diff(rep_full.ledger)
+        assert diff.max_abs_delta == 0.0
+        assert diff.top_movers(10) == []
+        assert isinstance(diff.report(), str)
+
+
+class TestCalibCli:
+    @pytest.fixture(scope="class")
+    def cube_paths(self, calib_cubes, tmp_path_factory):
+        tmp = tmp_path_factory.mktemp("calib_cli")
+        a = str(tmp / "steady.jsonl")
+        b = str(tmp / "rough.jsonl")
+        calib_cubes["steady"].to_jsonl(a)
+        calib_cubes["unpredictable"].to_jsonl(b)
+        return a, b
+
+    def test_report_and_gate(self, cube_paths, tmp_path, capsys):
+        a, _ = cube_paths
+        out_json = str(tmp_path / "calib.json")
+        assert obs_cli(["calib", a, "--json", out_json]) == 0
+        assert "coverage" in capsys.readouterr().out
+        payload = json.loads(Path(out_json).read_text())
+        assert "max_coverage_drift" in payload
+        # Permissive gate passes, impossible gate fails with exit 1.
+        assert obs_cli(["calib", a, "--fail-above", "0.5"]) == 0
+        assert obs_cli(["calib", a, "--fail-above", "0.0"]) == 1
+        assert "FAIL" in capsys.readouterr().err
+
+    def test_diff_gate(self, cube_paths, capsys):
+        a, b = cube_paths
+        assert obs_cli(["calib", a, a]) == 0
+        assert obs_cli(["calib", a, b, "--fail-above", "1.0"]) == 0
+        assert obs_cli(["calib", a, b, "--fail-above", "0.0"]) == 1
+        assert "FAIL" in capsys.readouterr().err
 
 
 class TestBenchProvenance:

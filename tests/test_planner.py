@@ -67,6 +67,31 @@ class TestForecast:
             preds[1] / preds[0], 2.0, rtol=0.05
         )
 
+    def test_fractile_levels_monotone(self, history):
+        """Both band variants return monotone (..., Q) levels; the
+        anchored band reproduces plain empirical quantiles of the
+        trailing window exactly."""
+        qs = (0.05, 0.5, 0.95)
+        model = fc.fit(history)
+        fut = fc.forecast_horizon(model, history.shape[0], HOURS_PER_WEEK)
+        lv_model = fc.weekly_fractile_levels(fut, qs)
+        trail = history[-fc.TRAIL_WEEKS * HOURS_PER_WEEK:]
+        lv_anch = fc.anchored_fractile_levels(trail, qs)
+        for lv in (lv_model, lv_anch):
+            assert lv.shape == (3,)
+            assert float(lv[0]) <= float(lv[1]) <= float(lv[2])
+        np.testing.assert_allclose(
+            np.asarray(lv_anch),
+            np.quantile(np.asarray(trail), qs),
+            rtol=1e-6,
+        )
+        # Batched rows broadcast: (2, Q) from a (2, T) trail.
+        lv2 = fc.anchored_fractile_levels(jnp.stack([trail, trail * 2]), qs)
+        assert lv2.shape == (2, 3)
+        np.testing.assert_allclose(
+            np.asarray(lv2[1]), 2 * np.asarray(lv2[0]), rtol=1e-6
+        )
+
 
 class TestPlanner:
     def test_algorithm1_min_over_horizons(self, history):
